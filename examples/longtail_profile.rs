@@ -1,0 +1,50 @@
+//! Long-tail profiling (the Fig 2 motivation study): print the sorted
+//! per-expert token histogram for each model/dataset at several
+//! tokens-per-iteration settings.
+//!
+//!     cargo run --release --example longtail_profile
+
+use expert_streaming::config::{presets, Dataset};
+use expert_streaming::workload::{sorted_expert_counts, TraceGenerator};
+
+fn bar(count: u32, max: u32, width: usize) -> String {
+    let n = ((count as f64 / max.max(1) as f64) * width as f64).round() as usize;
+    "#".repeat(n)
+}
+
+fn main() {
+    for (model, dataset) in [
+        (presets::deepseek_moe(), Dataset::Wikitext2),
+        (presets::qwen3_a3b(), Dataset::WinoGrande),
+    ] {
+        for tokens in [16usize, 64, 256] {
+            let mut gen = TraceGenerator::new(&model, dataset, 7);
+            let it = gen.iteration(0, tokens);
+            let counts =
+                sorted_expert_counts(&it.layers[model.n_layers / 2], model.n_experts + model.n_shared);
+            let total: u32 = counts.iter().sum();
+            let max = counts[0];
+            println!(
+                "\n=== {} on {} — {} tokens/iter ({} routed activations) ===",
+                model.name,
+                dataset.name(),
+                tokens,
+                total
+            );
+            // Print every 8th rank to keep the histogram readable.
+            for (rank, &c) in counts.iter().enumerate() {
+                if rank < 8 || rank % 8 == 0 {
+                    println!("  rank {:>3}: {:>4} |{}", rank, c, bar(c, max, 48));
+                }
+            }
+            let zero = counts.iter().filter(|&&c| c == 0).count();
+            let top8: u32 = counts.iter().take(8).sum();
+            println!(
+                "  -> top-8 experts take {:.1}% of activations; {} of {} experts receive none",
+                top8 as f64 / total as f64 * 100.0,
+                zero,
+                model.n_experts
+            );
+        }
+    }
+}

@@ -1,0 +1,23 @@
+use expert_streaming::config::{presets, Dataset, StrategyKind};
+use expert_streaming::coordinator::{make_strategy, LayerCtx};
+use expert_streaming::moe::{default_num_slices, ExpertGeometry};
+use expert_streaming::workload::{shard_layer, TraceGenerator};
+use std::collections::HashSet;
+use std::time::Instant;
+fn main() {
+    let hw = presets::mcm_2x2();
+    let model = presets::qwen3_a3b();
+    let slices = default_num_slices(&model, &hw);
+    let geom = ExpertGeometry::new(&model, &hw, slices);
+    let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
+    let it = gen.iteration(0, 64);
+    let wl = shard_layer(&it.layers[0], model.n_experts, hw.n_chiplets(), &HashSet::new());
+    for spans in [true, false] {
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: spans };
+        let mut s = make_strategy(StrategyKind::FseDpPaired, slices);
+        s.run_layer(&ctx);
+        let t = Instant::now();
+        for _ in 0..300 { s.run_layer(&ctx); }
+        println!("record_spans={spans}: {:.0} layer-sims/s", 300.0 / t.elapsed().as_secs_f64());
+    }
+}

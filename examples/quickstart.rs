@@ -1,0 +1,68 @@
+//! Quickstart: simulate one MoE layer of Qwen3-30B-A3B under FSE-DP on the
+//! 2×2 MCM and compare against the EP baseline.
+//!
+//!     cargo run --release --example quickstart
+
+use expert_streaming::config::{presets, Dataset, StrategyKind};
+use expert_streaming::coordinator::{make_strategy, LayerCtx};
+use expert_streaming::moe::{default_num_slices, ExpertGeometry};
+use expert_streaming::util::{cycles_to_us, fmt_bytes};
+use expert_streaming::workload::{shard_layer, TraceGenerator};
+use std::collections::HashSet;
+
+fn main() {
+    // 1. Pick the paper's test-chip hardware and a Table-I model.
+    let hw = presets::mcm_2x2();
+    let model = presets::qwen3_a3b();
+    let slices = default_num_slices(&model, &hw);
+    println!(
+        "package: {}x{} chiplets, {} weight buffer/die, DDR {:.0} GB/s aggregate, D2D {:.0} GB/s",
+        hw.mesh_rows,
+        hw.mesh_cols,
+        fmt_bytes(hw.weight_buffer_bytes),
+        hw.ddr_aggregate_gbps(),
+        hw.d2d.gbps_per_link
+    );
+    println!(
+        "model: {} ({} experts, top-{}, {} micro-slices)\n",
+        model.name, model.n_experts, model.top_k, slices
+    );
+
+    // 2. Generate a low-batch iteration (64 tokens, C4-like long tail) and
+    //    shard it across chiplets.
+    let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
+    let iteration = gen.iteration(0, 64);
+    let workload = shard_layer(
+        &iteration.layers[model.n_layers / 2],
+        model.n_experts + model.n_shared,
+        hw.n_chiplets(),
+        &HashSet::new(),
+    );
+    println!(
+        "layer workload: {} activated experts, hottest {} tokens, coldest {}",
+        workload.experts.len(),
+        workload.experts.iter().map(|e| e.total).max().unwrap(),
+        workload.experts.iter().map(|e| e.total).min().unwrap()
+    );
+
+    // 3. Run the layer under both schemes.
+    let geom = ExpertGeometry::new(&model, &hw, slices);
+    for kind in [StrategyKind::Ep, StrategyKind::FseDpPaired] {
+        let mut strategy = make_strategy(kind, slices);
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &workload, record_spans: false };
+        let r = strategy.run_layer(&ctx);
+        println!(
+            "\n{}:\n  latency {:>9.1} us   utilization {:>5.1}%   on-chip peak {}",
+            kind.name(),
+            cycles_to_us(r.makespan, hw.freq_hz),
+            r.utilization() * 100.0,
+            fmt_bytes(r.total_onchip_peak()),
+        );
+        println!(
+            "  traffic: {} DDR, {} D2D",
+            fmt_bytes(r.ddr_bytes),
+            fmt_bytes(r.d2d_bytes)
+        );
+    }
+    println!("\nNext: `repro experiment fig9` regenerates the full latency grid.");
+}

@@ -1,0 +1,145 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (function, token-bucket) plus
+``manifest.json`` describing shapes/dtypes so the Rust loader
+(``rust/src/runtime/artifacts.rs``) can size its buffers without parsing
+HLO.
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+All functions are lowered with ``return_tuple=True``; the Rust side
+unwraps with ``to_tuple1``/``to_tuple2``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Toy model configuration for the end-to-end numeric path.
+#
+# The *timing* experiments use the paper's real model shapes (Table I) inside
+# the Rust simulator; the *numeric* path runs this deliberately small MoE so
+# artifact compilation and CPU execution stay fast. Shapes are chosen so the
+# micro-slice partitioning (d_ffn % num_slices == 0) and head split
+# (d_model % n_heads == 0) are exact.
+# ---------------------------------------------------------------------------
+TOY = {
+    "d_model": 128,
+    "d_ffn": 256,
+    "n_experts": 8,
+    "top_k": 2,
+    "n_heads": 4,
+    "num_slices": 4,
+    "dtype": "f32",
+}
+
+# Token buckets: the Rust engine pads each expert's token batch up to the
+# next bucket. Powers of two keep the artifact count small while bounding
+# padding waste at 2x.
+TOKEN_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(dims, dtype)
+
+
+def build_entries():
+    """Yield (name, jitted_fn, arg_specs, output_arity, meta) tuples."""
+    d, f = TOY["d_model"], TOY["d_ffn"]
+    e, k, h, s = TOY["n_experts"], TOY["top_k"], TOY["n_heads"], TOY["num_slices"]
+
+    for t in TOKEN_BUCKETS:
+        yield (
+            f"expert_ffn_t{t}",
+            lambda x, w1, w3, w2: (model.expert_ffn(x, w1, w3, w2, num_slices=s),),
+            [_spec(t, d), _spec(d, f), _spec(d, f), _spec(f, d)],
+            1,
+            {"tokens": t, "kind": "expert_ffn",
+             "inputs": [[t, d], [d, f], [d, f], [f, d]], "outputs": [[t, d]]},
+        )
+        yield (
+            f"gate_t{t}",
+            lambda x, wg: model.gate_topk(x, wg, top_k=k),
+            [_spec(t, d), _spec(d, e)],
+            2,
+            {"tokens": t, "kind": "gate",
+             "inputs": [[t, d], [d, e]], "outputs": [[t, k], [t, k]]},
+        )
+        yield (
+            f"attn_t{t}",
+            lambda x, wq, wk, wv, wo: (
+                model.attention_causal(x, wq, wk, wv, wo, n_heads=h),),
+            [_spec(t, d)] + [_spec(d, d)] * 4,
+            1,
+            {"tokens": t, "kind": "attn",
+             "inputs": [[t, d]] + [[d, d]] * 4, "outputs": [[t, d]]},
+        )
+        yield (
+            f"moe_layer_t{t}",
+            lambda x, wg, w1, w3, w2: (
+                model.moe_layer(x, wg, w1, w3, w2, top_k=k, num_slices=s),),
+            [_spec(t, d), _spec(d, e), _spec(e, d, f), _spec(e, d, f),
+             _spec(e, f, d)],
+            1,
+            {"tokens": t, "kind": "moe_layer",
+             "inputs": [[t, d], [d, e], [e, d, f], [e, d, f], [e, f, d]],
+             "outputs": [[t, d]]},
+        )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="output directory for artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"config": TOY, "token_buckets": list(TOKEN_BUCKETS),
+                "entries": {}}
+    total = 0
+    for name, fn, specs, arity, meta in build_entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        meta["output_arity"] = arity
+        meta["file"] = f"{name}.hlo.txt"
+        manifest["entries"][name] = meta
+        total += len(text)
+        print(f"  {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    # Build stamp lets `make` skip re-lowering when inputs are unchanged.
+    with open(os.path.join(args.out, ".stamp"), "w") as fh:
+        fh.write("ok\n")
+    print(f"wrote {len(manifest['entries'])} artifacts ({total} chars) to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: micro-slice streaming expert FFN.
+
+This is the paper's compute hot-spot expressed as a Pallas kernel. An MoE
+expert is a gated FFN
+
+    y = (silu(x @ W1) * (x @ W3)) @ W2
+
+with ``W1, W3: (d_model, d_ffn)`` and ``W2: (d_ffn, d_model)``. FSE-DP
+shards the expert along the FFN *hidden* dimension into ``num_slices``
+micro-slices; each micro-slice ``s`` contributes an exact partial output
+
+    h_s = silu(x @ W1[:, s]) * (x @ W3[:, s])
+    y  += h_s @ W2[s, :]
+
+because silu is elementwise over the hidden dimension. Summation over
+micro-slices is therefore order-independent — the *trajectory invariance*
+the paper's virtualization rules rely on (Section IV-C): a micro-slice may
+visit chiplets in any order and the accumulated result is identical.
+
+The Pallas grid iterates over micro-slices; the BlockSpec index maps stage
+one ``(d_model, slice)`` weight block per grid step, which is exactly the
+paper's "compute one micro-slice, accumulate, release its buffer" schedule
+(Figure 4). On a real TPU the micro-slice block is what must fit VMEM (the
+analogue of the chiplet's SRAM weight ring-buffer); on this CPU image the
+kernel runs under ``interpret=True`` (Mosaic custom-calls cannot execute on
+the CPU PJRT plugin), so we validate structure + numerics here and account
+for VMEM/MXU in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _microslice_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One grid step: compute one micro-slice's partial FFN and accumulate.
+
+    ``pl.program_id(0)`` is the micro-slice index. The first step zeroes the
+    accumulator (the output block is revisited every step).
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # Gated activation restricted to this micro-slice of the hidden dim.
+    gate = x @ w1_ref[...]
+    up = x @ w3_ref[...]
+    h = jax.nn.silu(gate) * up
+    o_ref[...] += h @ w2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("num_slices",))
+def microslice_ffn(x, w1, w3, w2, *, num_slices: int = 4):
+    """Micro-slice streaming expert FFN (Pallas, interpret mode).
+
+    Args:
+      x:  ``(tokens, d_model)`` activations.
+      w1: ``(d_model, d_ffn)`` gate projection.
+      w3: ``(d_model, d_ffn)`` up projection.
+      w2: ``(d_ffn, d_model)`` down projection.
+      num_slices: number of micro-slices the FFN hidden dim is sharded into;
+        must divide ``d_ffn``.
+
+    Returns:
+      ``(tokens, d_model)`` expert output, numerically equal (up to fp
+      accumulation order) to the unsliced gated FFN.
+    """
+    tokens, d_model = x.shape
+    d_ffn = w1.shape[1]
+    if d_ffn % num_slices != 0:
+        raise ValueError(f"d_ffn={d_ffn} not divisible by num_slices={num_slices}")
+    d_slice = d_ffn // num_slices
+
+    return pl.pallas_call(
+        _microslice_ffn_kernel,
+        grid=(num_slices,),
+        in_specs=[
+            # Token activations stay resident across all micro-slice steps.
+            pl.BlockSpec((tokens, d_model), lambda s: (0, 0)),
+            # One (d_model, d_slice) micro-slice of W1/W3 per step: this is
+            # the block that would be streamed D2D / staged in VMEM.
+            pl.BlockSpec((d_model, d_slice), lambda s: (0, s)),
+            pl.BlockSpec((d_model, d_slice), lambda s: (0, s)),
+            # Matching (d_slice, d_model) micro-slice of W2.
+            pl.BlockSpec((d_slice, d_model), lambda s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((tokens, d_model), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tokens, d_model), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def microslice_ffn_partial(x, w1_s, w3_s, w2_s):
+    """Single micro-slice partial product (no Pallas; used by tests to model
+    one chiplet-step of the trajectory and check order invariance)."""
+    h = jax.nn.silu(x @ w1_s) * (x @ w3_s)
+    return h @ w2_s
+
+
+def vmem_bytes_per_step(tokens: int, d_model: int, d_ffn: int, num_slices: int,
+                        bytes_per_el: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf).
+
+    x block + W1 slice + W3 slice + W2 slice + hidden activations + output
+    accumulator. This is the quantity the paper budgets against the chiplet
+    SRAM weight buffer.
+    """
+    d_slice = d_ffn // num_slices
+    x_b = tokens * d_model
+    w_b = 2 * d_model * d_slice + d_slice * d_model
+    h_b = tokens * d_slice
+    o_b = tokens * d_model
+    return (x_b + w_b + h_b + o_b) * bytes_per_el

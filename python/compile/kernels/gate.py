@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: MoE gate (router) logits.
+
+The router projects each token onto the expert dimension:
+
+    logits = x @ Wg            # (tokens, n_experts)
+
+Top-K selection + softmax normalization over the selected experts happens
+at L2 (``model.gate_topk``) because ``top_k`` has data-dependent gather
+patterns that are a poor fit for a hand-scheduled kernel; the projection is
+the bandwidth/compute part and is what we tile here.
+
+The grid tiles tokens so the per-step working set is one token block plus
+the (small) router matrix — the router weight stays resident, mirroring how
+the paper keeps gate weights pinned on-chip while expert weights stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_logits_kernel(x_ref, wg_ref, o_ref):
+    o_ref[...] = x_ref[...] @ wg_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_tokens",))
+def gate_logits(x, wg, *, block_tokens: int | None = None):
+    """Router logits ``x @ wg`` as a Pallas kernel (interpret mode).
+
+    Args:
+      x:  ``(tokens, d_model)`` activations.
+      wg: ``(d_model, n_experts)`` router weights.
+      block_tokens: token tile size; defaults to all tokens (single step).
+        Must divide ``tokens``.
+
+    Returns:
+      ``(tokens, n_experts)`` gate logits.
+    """
+    tokens, d_model = x.shape
+    n_experts = wg.shape[1]
+    bt = block_tokens or tokens
+    if tokens % bt != 0:
+        raise ValueError(f"tokens={tokens} not divisible by block_tokens={bt}")
+
+    return pl.pallas_call(
+        _gate_logits_kernel,
+        grid=(tokens // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d_model), lambda t: (t, 0)),
+            pl.BlockSpec((d_model, n_experts), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n_experts), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((tokens, n_experts), x.dtype),
+        interpret=True,
+    )(x, wg)
+
+
+def topk_normalize(logits, top_k: int):
+    """Top-K expert selection with softmax renormalization over the K
+    selected logits (the standard MoE combine weighting, e.g. Mixtral).
+
+    Returns ``(weights, indices)`` of shape ``(tokens, top_k)``; weights sum
+    to 1 per token.
+
+    Implemented as ``top_k`` iterations of argmax + masking instead of
+    ``jax.lax.top_k``: jax ≥ 0.6 lowers ``lax.top_k`` to a ``topk(...,
+    largest=true)`` HLO instruction that the image's xla_extension 0.5.1
+    text parser rejects; argmax lowers to plain reduces that round-trip.
+    Tie-breaking (first/lowest index wins) matches ``lax.top_k``.
+    """
+    tokens = logits.shape[0]
+    rows = jnp.arange(tokens)
+    masked = logits
+    vals, idxs = [], []
+    for _ in range(top_k):
+        i = jnp.argmax(masked, axis=-1)
+        vals.append(masked[rows, i])
+        idxs.append(i)
+        masked = masked.at[rows, i].set(-jnp.inf)
+    vals = jnp.stack(vals, axis=-1)
+    idx = jnp.stack(idxs, axis=-1)
+    weights = jax.nn.softmax(vals, axis=-1)
+    return weights, idx.astype(jnp.int32)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the L1 Pallas kernels and L2 model pieces.
+
+Every kernel/model function in this package has an entry here written in
+the most direct jnp form possible. pytest (and hypothesis sweeps) assert
+``assert_allclose`` between the Pallas/interpret path and these oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn(x, w1, w3, w2):
+    """Unsliced gated FFN: the ground truth for ``microslice_ffn``."""
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def expert_ffn_sliced(x, w1, w3, w2, num_slices: int, order=None):
+    """Slice-by-slice accumulation in an arbitrary visit ``order``.
+
+    Models the trajectory: each micro-slice contributes an independent
+    partial sum. Used by tests to demonstrate order invariance.
+    """
+    d_ffn = w1.shape[1]
+    d_slice = d_ffn // num_slices
+    order = list(order) if order is not None else list(range(num_slices))
+    y = jnp.zeros((x.shape[0], w2.shape[1]), dtype=x.dtype)
+    for s in order:
+        lo, hi = s * d_slice, (s + 1) * d_slice
+        h = silu(x @ w1[:, lo:hi]) * (x @ w3[:, lo:hi])
+        y = y + h @ w2[lo:hi, :]
+    return y
+
+
+def gate_logits(x, wg):
+    return x @ wg
+
+
+def gate_topk(x, wg, top_k: int):
+    logits = x @ wg
+    vals, idx = jax.lax.top_k(logits, top_k)
+    return jax.nn.softmax(vals, axis=-1), idx.astype(jnp.int32)
+
+
+def moe_layer(x, wg, w1, w3, w2, top_k: int):
+    """Dense reference MoE FFN layer.
+
+    ``w1, w3: (E, d_model, d_ffn)``, ``w2: (E, d_ffn, d_model)``. Computes
+    every expert on every token and masks by the top-k gate — O(E) work but
+    exact, which is what a scheduling-correctness oracle needs.
+    """
+    n_experts = w1.shape[0]
+    weights, idx = gate_topk(x, wg, top_k)  # (T,K), (T,K)
+    # (T, E) combine weights: scatter the top-k softmax back over experts.
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=x.dtype)  # (T,K,E)
+    combine = jnp.einsum("tk,tke->te", weights, onehot)  # (T,E)
+    # (E, T, d_model) per-expert outputs.
+    per_expert = jax.vmap(lambda a, b, c: expert_ffn(x, a, b, c))(w1, w3, w2)
+    return jnp.einsum("te,etd->td", combine, per_expert)
+
+
+def attention_causal(x, wq, wk, wv, wo, n_heads: int):
+    """Dense causal multi-head attention over a full token block (the
+    chunked-prefill compute the paper keeps dense and head-parallel)."""
+    t, d = x.shape
+    dh = d // n_heads
+    q = (x @ wq).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    k = (x @ wk).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    v = (x @ wv).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, jnp.asarray(-1e30, x.dtype))
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hts,hsd->htd", attn, v).transpose(1, 0, 2).reshape(t, d)
+    return out @ wo

@@ -1,0 +1,75 @@
+"""L2 JAX model: the compute graphs the Rust coordinator executes via PJRT.
+
+Build-time only. Each public function here is lowered by ``aot.py`` to one
+HLO-text artifact per token-bucket shape; the Rust runtime
+(``rust/src/runtime``) compiles them once with the PJRT CPU client and
+executes them on the request path. Python never runs at serve time.
+
+Functions call the L1 Pallas kernels (``kernels.expert_stream``,
+``kernels.gate``) so the kernels lower into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import expert_stream, gate as gate_k
+from compile.kernels import ref
+
+
+def expert_ffn(x, w1, w3, w2, *, num_slices: int = 4):
+    """One expert's gated FFN over a token batch, computed by the
+    micro-slice streaming kernel. This is the artifact the Rust engine
+    invokes once per (expert, token-batch) computation."""
+    return expert_stream.microslice_ffn(x, w1, w3, w2, num_slices=num_slices)
+
+
+def gate_topk(x, wg, *, top_k: int):
+    """Router: Pallas logits kernel + top-k softmax combine weights.
+
+    Returns ``(weights (T,K) f32, indices (T,K) i32)``.
+    """
+    logits = gate_k.gate_logits(x, wg)
+    return gate_k.topk_normalize(logits, top_k)
+
+
+def attention_causal(x, wq, wk, wv, wo, *, n_heads: int):
+    """Dense causal MHA over a chunked-prefill token block (paper keeps
+    attention dense; chiplet head-parallelism is an L3 timing concern)."""
+    return ref.attention_causal(x, wq, wk, wv, wo, n_heads)
+
+
+def moe_layer(x, wg, w1, w3, w2, *, top_k: int, num_slices: int = 4):
+    """Full MoE FFN layer (gate + all experts + combine) in one graph.
+
+    Used for whole-layer numeric verification; the serving path instead
+    schedules ``expert_ffn`` per expert under the L3 coordinator. Dense
+    (every expert computes every token, masked by the gate) so shapes are
+    static for AOT.
+    """
+    n_experts = w1.shape[0]
+    weights, idx = gate_topk(x, wg, top_k=top_k)
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=x.dtype)
+    combine = jnp.einsum("tk,tke->te", weights, onehot)
+    per_expert = jax.vmap(
+        lambda a, b, c: expert_stream.microslice_ffn(x, a, b, c, num_slices=num_slices)
+    )(w1, w3, w2)
+    return jnp.einsum("te,etd->td", combine, per_expert)
+
+
+def transformer_block(x, attn_w, moe_w, *, n_heads: int, top_k: int,
+                      num_slices: int = 4, eps: float = 1e-5):
+    """One pre-norm transformer block with an MoE FFN — the unit the
+    end-to-end example repeats per layer."""
+    wq, wk, wv, wo = attn_w
+    wg, w1, w3, w2 = moe_w
+
+    def rmsnorm(h):
+        return h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+
+    h = x + attention_causal(rmsnorm(x), wq, wk, wv, wo, n_heads=n_heads)
+    return h + moe_layer(rmsnorm(h), wg, w1, w3, w2, top_k=top_k,
+                         num_slices=num_slices)

@@ -1,0 +1,120 @@
+"""L1 correctness: micro-slice streaming FFN kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes / dtypes / slice counts; dedicated tests pin the
+trajectory-invariance property the paper's virtualization rules rely on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import expert_stream, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.5).astype(dtype)
+
+
+def make_inputs(seed, tokens, d_model, d_ffn, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], tokens, d_model, dtype=dtype)
+    w1 = _rand(ks[1], d_model, d_ffn, dtype=dtype)
+    w3 = _rand(ks[2], d_model, d_ffn, dtype=dtype)
+    w2 = _rand(ks[3], d_ffn, d_model, dtype=dtype)
+    return x, w1, w3, w2
+
+
+class TestMicrosliceFFN:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        tokens=st.sampled_from([1, 2, 3, 5, 8, 16]),
+        d_model=st.sampled_from([8, 16, 32]),
+        log_dffn=st.integers(3, 6),
+        num_slices=st.sampled_from([1, 2, 4, 8]),
+    )
+    def test_matches_reference_f32(self, seed, tokens, d_model, log_dffn, num_slices):
+        d_ffn = 2 ** log_dffn
+        if d_ffn % num_slices:
+            return
+        x, w1, w3, w2 = make_inputs(seed, tokens, d_model, d_ffn)
+        got = expert_stream.microslice_ffn(x, w1, w3, w2, num_slices=num_slices)
+        want = ref.expert_ffn(x, w1, w3, w2)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), num_slices=st.sampled_from([1, 2, 4]))
+    def test_matches_reference_bf16(self, seed, num_slices):
+        x, w1, w3, w2 = make_inputs(seed, 4, 16, 32, dtype=jnp.bfloat16)
+        got = expert_stream.microslice_ffn(x, w1, w3, w2, num_slices=num_slices)
+        want = ref.expert_ffn(x, w1, w3, w2)
+        assert got.dtype == jnp.bfloat16
+        assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=0.1, atol=0.1,
+        )
+
+    def test_single_slice_is_plain_ffn(self):
+        x, w1, w3, w2 = make_inputs(0, 8, 16, 32)
+        got = expert_stream.microslice_ffn(x, w1, w3, w2, num_slices=1)
+        want = ref.expert_ffn(x, w1, w3, w2)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    def test_rejects_indivisible_slices(self):
+        x, w1, w3, w2 = make_inputs(0, 4, 8, 24)
+        with pytest.raises(ValueError, match="not divisible"):
+            expert_stream.microslice_ffn(x, w1, w3, w2, num_slices=5)
+
+    def test_kernel_vs_toy_config_shapes(self):
+        # The exact shapes the AOT artifacts use.
+        x, w1, w3, w2 = make_inputs(7, 16, 128, 256)
+        got = expert_stream.microslice_ffn(x, w1, w3, w2, num_slices=4)
+        want = ref.expert_ffn(x, w1, w3, w2)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+class TestTrajectoryInvariance:
+    """Any micro-slice visit order yields the same expert output — the
+    correctness fact behind virtualization Rules 1–3 (paper §IV-C)."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), perm_seed=st.integers(0, 2**16))
+    def test_slice_order_invariant(self, seed, perm_seed):
+        num_slices = 8
+        x, w1, w3, w2 = make_inputs(seed, 4, 16, 64)
+        base = ref.expert_ffn_sliced(x, w1, w3, w2, num_slices)
+        order = np.random.RandomState(perm_seed).permutation(num_slices)
+        permuted = ref.expert_ffn_sliced(x, w1, w3, w2, num_slices, order=order)
+        assert_allclose(np.asarray(base), np.asarray(permuted), rtol=1e-5, atol=1e-6)
+
+    def test_partial_sums_compose(self):
+        """Sum of per-micro-slice partials == kernel output (what a chiplet
+        accumulates as slices stream past)."""
+        num_slices = 4
+        x, w1, w3, w2 = make_inputs(3, 8, 16, 64)
+        d_slice = w1.shape[1] // num_slices
+        acc = jnp.zeros((x.shape[0], w2.shape[1]), x.dtype)
+        for s in range(num_slices):
+            lo, hi = s * d_slice, (s + 1) * d_slice
+            acc = acc + expert_stream.microslice_ffn_partial(
+                x, w1[:, lo:hi], w3[:, lo:hi], w2[lo:hi, :])
+        got = expert_stream.microslice_ffn(x, w1, w3, w2, num_slices=num_slices)
+        assert_allclose(np.asarray(acc), np.asarray(got), rtol=1e-5, atol=1e-6)
+
+
+class TestVmemEstimate:
+    def test_monotone_in_slices(self):
+        # Finer slicing strictly shrinks the per-step working set.
+        sizes = [expert_stream.vmem_bytes_per_step(16, 128, 256, n)
+                 for n in (1, 2, 4, 8)]
+        assert sizes == sorted(sizes, reverse=True)
+
+    def test_exact_value(self):
+        # tokens=2, d=4, f=8, slices=2 -> d_slice=4
+        # x 2*4=8, w 2*4*4+4*4=48, h 2*4=8, o 2*4=8 -> 72 els * 4B
+        assert expert_stream.vmem_bytes_per_step(2, 4, 8, 2) == 72 * 4

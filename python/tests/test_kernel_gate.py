@@ -1,0 +1,88 @@
+"""L1 correctness: gate (router) kernel vs oracle + top-k properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import gate as gate_k, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(seed, tokens, d_model, n_experts):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (tokens, d_model), jnp.float32)
+    wg = jax.random.normal(k2, (d_model, n_experts), jnp.float32)
+    return x, wg
+
+
+class TestGateLogits:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        tokens=st.sampled_from([1, 2, 4, 8, 16, 32]),
+        d_model=st.sampled_from([8, 16, 64]),
+        n_experts=st.sampled_from([4, 8, 16, 64]),
+    )
+    def test_matches_reference(self, seed, tokens, d_model, n_experts):
+        x, wg = make_inputs(seed, tokens, d_model, n_experts)
+        got = gate_k.gate_logits(x, wg)
+        assert_allclose(np.asarray(got), np.asarray(ref.gate_logits(x, wg)),
+                        rtol=1e-5, atol=1e-5)
+
+    def test_token_blocking_is_transparent(self):
+        x, wg = make_inputs(1, 16, 32, 8)
+        full = gate_k.gate_logits(x, wg)
+        for bt in (1, 2, 4, 8, 16):
+            blocked = gate_k.gate_logits(x, wg, block_tokens=bt)
+            assert_allclose(np.asarray(blocked), np.asarray(full),
+                            rtol=1e-6, atol=1e-6)
+
+    def test_rejects_bad_block(self):
+        x, wg = make_inputs(0, 6, 8, 4)
+        with pytest.raises(ValueError, match="not divisible"):
+            gate_k.gate_logits(x, wg, block_tokens=4)
+
+
+class TestTopkNormalize:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        tokens=st.sampled_from([1, 4, 16]),
+        n_experts=st.sampled_from([4, 8, 64, 128]),
+        top_k=st.sampled_from([1, 2, 6, 8]),
+    )
+    def test_weights_are_distribution(self, seed, tokens, n_experts, top_k):
+        if top_k > n_experts:
+            return
+        logits = jax.random.normal(jax.random.PRNGKey(seed), (tokens, n_experts))
+        weights, idx = gate_k.topk_normalize(logits, top_k)
+        w = np.asarray(weights)
+        i = np.asarray(idx)
+        assert w.shape == (tokens, top_k) and i.shape == (tokens, top_k)
+        assert i.dtype == np.int32
+        assert_allclose(w.sum(axis=-1), np.ones(tokens), rtol=1e-5)
+        assert (w >= 0).all()
+        assert ((i >= 0) & (i < n_experts)).all()
+        # indices are distinct per token
+        for row in i:
+            assert len(set(row.tolist())) == top_k
+
+    def test_selects_true_topk(self):
+        logits = jnp.asarray([[0.1, 5.0, -1.0, 3.0]])
+        weights, idx = gate_k.topk_normalize(logits, 2)
+        assert set(np.asarray(idx)[0].tolist()) == {1, 3}
+        # softmax over (5.0, 3.0)
+        e = np.exp(np.array([5.0, 3.0]) - 5.0)
+        assert_allclose(np.sort(np.asarray(weights)[0])[::-1], e / e.sum(),
+                        rtol=1e-5)
+
+    def test_matches_reference_end_to_end(self):
+        x, wg = make_inputs(3, 8, 16, 8)
+        w_got, i_got = gate_k.topk_normalize(gate_k.gate_logits(x, wg), 2)
+        w_ref, i_ref = ref.gate_topk(x, wg, 2)
+        assert_allclose(np.asarray(w_got), np.asarray(w_ref), rtol=1e-5, atol=1e-6)
+        assert (np.asarray(i_got) == np.asarray(i_ref)).all()

@@ -1,0 +1,14 @@
+//! Bench harness regenerating the paper's fig11 on the simulated package.
+//! Runs the full (non-quick) experiment grid and reports wall time.
+//! `REPRO_QUICK=1 cargo bench --bench fig11_utilization` for a smoke run.
+
+use expert_streaming::experiments::{run_by_id, ExpOpts};
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("REPRO_QUICK").is_ok();
+    let opts = ExpOpts { quick, ..Default::default() };
+    let t = Instant::now();
+    run_by_id("fig11", &opts).expect("experiment failed");
+    println!("[bench fig11_utilization] regenerated fig11 in {:.2}s (quick={quick})", t.elapsed().as_secs_f64());
+}

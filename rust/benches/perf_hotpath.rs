@@ -1,0 +1,96 @@
+//! Hot-path micro/mesobenchmarks for the §Perf pass (EXPERIMENTS.md):
+//!
+//!  1. flow-engine layer simulation throughput (layer-sims/s and
+//!     simulated-cycles/wall-µs) on the Qwen3 64-token workload;
+//!  2. scheduler decision + trace-generation cost;
+//!  3. numeric serving latency through PJRT (when artifacts exist).
+//!
+//! `cargo bench --bench perf_hotpath`
+
+use expert_streaming::config::{presets, Dataset, StrategyKind};
+use expert_streaming::coordinator::{make_strategy, LayerCtx};
+use expert_streaming::engine::serve::NumericEngine;
+use expert_streaming::moe::{default_num_slices, ExpertGeometry};
+use expert_streaming::runtime::artifacts::Manifest;
+use expert_streaming::workload::{shard_layer, TraceGenerator};
+use std::collections::HashSet;
+use std::time::Instant;
+
+fn bench_flow_engine() {
+    let hw = presets::mcm_2x2();
+    let model = presets::qwen3_a3b();
+    let slices = default_num_slices(&model, &hw);
+    let geom = ExpertGeometry::new(&model, &hw, slices);
+    let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
+    let it = gen.iteration(0, 64);
+    let wl = shard_layer(
+        &it.layers[0],
+        model.n_experts,
+        hw.n_chiplets(),
+        &HashSet::new(),
+    );
+    let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+
+    for kind in [StrategyKind::FseDpPaired, StrategyKind::Ep] {
+        let mut strategy = make_strategy(kind, slices);
+        // warm up
+        strategy.run_layer(&ctx);
+        let reps = 200;
+        let t = Instant::now();
+        let mut sim_cycles = 0u64;
+        for _ in 0..reps {
+            sim_cycles += strategy.run_layer(&ctx).makespan;
+        }
+        let dt = t.elapsed().as_secs_f64();
+        println!(
+            "[perf] {:<16} {:>7.0} layer-sims/s   {:>8.1} sim-Mcycles/wall-s",
+            kind.name(),
+            reps as f64 / dt,
+            sim_cycles as f64 / dt / 1e6
+        );
+    }
+}
+
+fn bench_trace_generation() {
+    let model = presets::qwen3_a3b();
+    let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
+    let t = Instant::now();
+    let reps = 50;
+    for i in 0..reps {
+        let it = gen.iteration(i, 256);
+        std::hint::black_box(&it);
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "[perf] trace generation: {:.1} iterations/s (256 tokens x 48 layers each)",
+        reps as f64 / dt
+    );
+}
+
+fn bench_numeric_serving() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("[perf] numeric serving skipped (run `make artifacts`)");
+        return;
+    }
+    let mut engine = NumericEngine::new(&dir, 2, 42).expect("engine");
+    engine.warm_up().expect("warm-up");
+    for tokens in [4usize, 16, 64] {
+        // warm + measure best-of-3 (PJRT CPU timings jitter)
+        let mut best = f64::INFINITY;
+        for seed in 0..3u64 {
+            let r = engine.serve_batch(tokens, seed).expect("serve");
+            best = best.min(r.wallclock_ms);
+        }
+        println!(
+            "[perf] numeric serve batch {tokens:>3}: best {best:.1} ms over 2 layers"
+        );
+    }
+}
+
+fn main() {
+    println!("== perf_hotpath ==");
+    bench_flow_engine();
+    bench_trace_generation();
+    bench_numeric_serving();
+}

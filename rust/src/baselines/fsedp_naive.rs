@@ -1,0 +1,210 @@
+//! Naive FSE-DP (paper §III, ablation A1): slice-level circulation with
+//! phase barriers and token redistribution, *without* the micro-slice flow.
+//!
+//! Per expert, sequentially:
+//!   1. redistribute tokens so every trajectory chiplet holds an equal
+//!      share (the §III load-balancing step that virtualization later makes
+//!      unnecessary);
+//!   2. each trajectory chiplet DDR-loads its 1/R expert slice (overlapped
+//!      with the previous expert's compute — plain double buffering);
+//!   3. R barrier phases: compute the local slice on the local tokens,
+//!      then circular-shift slices one hop; compute and transfer do NOT
+//!      overlap within a phase — the limitation Fig 4 fixes.
+
+use crate::config::StrategyKind;
+use crate::coordinator::trajectory::Trajectory;
+use crate::coordinator::{LayerCtx, LayerResult, Strategy};
+use crate::sim::{ActivityKind, Mesh, SerialResource, SimTime, Span, Timeline};
+use crate::util::ceil_div;
+
+pub struct NaiveFseDpStrategy;
+
+impl NaiveFseDpStrategy {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        NaiveFseDpStrategy
+    }
+}
+
+impl Strategy for NaiveFseDpStrategy {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::FseDpNaive
+    }
+
+    fn run_layer(&mut self, ctx: &LayerCtx) -> LayerResult {
+        let hw = ctx.hw;
+        let geom = ctx.geom;
+        let n = hw.n_chiplets();
+        let mut mesh = Mesh::new(hw);
+        let mut ddr: Vec<SerialResource> = vec![SerialResource::new(); hw.ddr.channels];
+        let mut timeline = Timeline::new(n, ctx.record_spans || true);
+
+        // Hottest-first order (no pairing in A1).
+        let mut order: Vec<&crate::workload::ExpertLoad> = ctx.workload.experts.iter().collect();
+        order.sort_by(|a, b| b.total.cmp(&a.total).then(a.expert.cmp(&b.expert)));
+
+        let mut phase_clock: SimTime = 0; // compute phases are serialized
+        let mut ddr_bytes = 0u64;
+        let mut d2d_bytes = 0u64;
+        let mut max_slice_bytes = 0u64;
+        // Double-buffer depth 1: expert i's slice loads may start only once
+        // expert i-1 has begun computing (one spare slice buffer per die).
+        let mut prev_expert_start: SimTime = 0;
+
+        for load in order {
+            let traj = Trajectory::for_expert(load, &mesh);
+            let r = traj.len() as u64;
+            let slice_bytes = geom.expert_bytes / r;
+            max_slice_bytes = max_slice_bytes.max(slice_bytes);
+
+            // 1. Token redistribution to the per-chiplet average.
+            let avg = ceil_div(load.total as u64, r);
+            let moved_tokens: u64 = traj
+                .tokens
+                .iter()
+                .map(|&t| (t as u64).saturating_sub(avg))
+                .sum();
+            let moved_bytes = moved_tokens * geom.token_bytes;
+            let redist_done = if moved_bytes > 0 {
+                // Parallel pairwise moves over R links, one hop each.
+                let per_link = ceil_div(moved_bytes, r);
+                let cycles = (per_link as f64 / hw.d2d_bytes_per_cycle()).ceil() as u64
+                    + hw.d2d_hop_cycles();
+                d2d_bytes += moved_bytes;
+                phase_clock + cycles
+            } else {
+                phase_clock
+            };
+
+            // 2. Per-chiplet slice loads (channel-FIFO; double-buffered one
+            //    expert ahead — overlaps the previous expert's phases).
+            let mut all_loaded: SimTime = 0;
+            for &c in &traj.chiplets {
+                let channel = hw.ddr_channel_of(c);
+                let (ls, le) = ddr[channel].acquire(prev_expert_start, hw.ddr_cycles(slice_bytes));
+                ddr_bytes += slice_bytes;
+                timeline.record(Span {
+                    chiplet: c,
+                    kind: ActivityKind::DdrLoad,
+                    start: ls,
+                    end: le,
+                    expert: load.expert,
+                });
+                all_loaded = all_loaded.max(le);
+            }
+
+            // 3. R barrier phases of compute-then-shift.
+            let mut t = redist_done.max(all_loaded).max(phase_clock);
+            prev_expert_start = t;
+            let compute_dur = geom.slice_compute_cycles_with(
+                hw,
+                avg,
+                geom.expert_macs_per_token / r,
+            );
+            for phase in 0..r {
+                for &c in &traj.chiplets {
+                    timeline.record(Span {
+                        chiplet: c,
+                        kind: ActivityKind::Compute,
+                        start: t,
+                        end: t + compute_dur,
+                        expert: load.expert,
+                    });
+                }
+                t += compute_dur;
+                if phase + 1 < r {
+                    // Circular shift: every chiplet forwards its slice one
+                    // ring step (parallel links, barrier on the slowest).
+                    let mut shift_done = t;
+                    for i in 0..traj.len() {
+                        let next = traj.next_pos(i);
+                        let arr =
+                            mesh.transfer(traj.chiplets[i], traj.chiplets[next], slice_bytes, t);
+                        d2d_bytes += slice_bytes;
+                        shift_done = shift_done.max(arr);
+                    }
+                    t = shift_done;
+                }
+            }
+            phase_clock = t;
+        }
+
+        // Memory: current slice + incoming slice + the double-buffered next
+        // expert's slice on every chiplet (the §IV "nearly doubles" cost).
+        let weight_peak = 3 * max_slice_bytes * n as u64;
+        // Tokens: local shard + redistributed copies ≈ 2× input + outputs.
+        let token_peak = ctx.workload.total_tokens as u64 * geom.token_bytes * 3;
+
+        LayerResult {
+            makespan: phase_clock,
+            weight_peak_bytes: weight_peak,
+            token_peak_bytes: token_peak,
+            ddr_bytes,
+            d2d_bytes,
+            scheduler_cycles: 0,
+            bound_cycles: crate::coordinator::roofline_bound_cycles(hw, geom, ctx.workload),
+            timeline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::Dataset;
+    use crate::coordinator::make_strategy;
+    use crate::moe::ExpertGeometry;
+    use crate::workload::{shard_layer, TraceGenerator};
+    use std::collections::HashSet;
+
+    fn setup(tokens: usize) -> (
+        crate::config::HardwareConfig,
+        ExpertGeometry,
+        crate::workload::LayerWorkload,
+    ) {
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, 8);
+        let mut gen = TraceGenerator::new(&model, Dataset::C4, 23);
+        let it = gen.iteration(0, tokens);
+        let wl = shard_layer(&it.layers[0], model.n_experts, hw.n_chiplets(), &HashSet::new());
+        (hw, geom, wl)
+    }
+
+    #[test]
+    fn runs_and_loads_each_expert_once() {
+        let (hw, geom, wl) = setup(64);
+        let mut s = NaiveFseDpStrategy::new();
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+        let r = s.run_layer(&ctx);
+        assert!(r.makespan > 0);
+        // Each expert's slices sum to ~expert_bytes (rounded down per R).
+        let max = wl.experts.len() as u64 * geom.expert_bytes;
+        assert!(r.ddr_bytes <= max && r.ddr_bytes > max / 2, "{}", r.ddr_bytes);
+    }
+
+    #[test]
+    fn slower_than_microslice_flow() {
+        // Fig 15's A1 < A2 ordering: barriers + no overlap must cost time.
+        let (hw, geom, wl) = setup(64);
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+        let naive = NaiveFseDpStrategy::new().run_layer(&ctx);
+        let fse = make_strategy(crate::config::StrategyKind::FseDpPaired, 8).run_layer(&ctx);
+        assert!(
+            fse.makespan < naive.makespan,
+            "fse {} vs naive {}",
+            fse.makespan,
+            naive.makespan
+        );
+    }
+
+    #[test]
+    fn utilization_below_one() {
+        let (hw, geom, wl) = setup(64);
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+        let r = NaiveFseDpStrategy::new().run_layer(&ctx);
+        let u = r.utilization();
+        assert!((0.0..=1.0).contains(&u), "{u}");
+    }
+}

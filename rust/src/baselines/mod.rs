@@ -1,0 +1,9 @@
+//! Baseline parallelization strategies the paper compares against:
+//! EP (expert parallelism), Hydra (popularity-aware EP placement, [17]),
+//! and the naive slice-level FSE-DP of §III (ablation A1).
+
+pub mod ep;
+pub mod fsedp_naive;
+
+pub use ep::EpStrategy;
+pub use fsedp_naive::NaiveFseDpStrategy;

@@ -1,0 +1,158 @@
+//! Hardware configuration: the multi-chiplet package of Table I.
+//!
+//! All timing in the simulator is in compute-die clock cycles. Bandwidths
+//! are converted to bytes/cycle here, once, so the hot path does integer
+//! arithmetic only.
+
+/// DDR (off-package DRAM) subsystem: `DDR3-1600 4×25.6 GB/s` in Table I.
+#[derive(Clone, Debug)]
+pub struct DdrConfig {
+    /// Number of independent channels.
+    pub channels: usize,
+    /// Per-channel bandwidth in GB/s.
+    pub gbps_per_channel: f64,
+    /// Fixed access latency per request (cycles) — row activation etc.
+    pub latency_cycles: u64,
+}
+
+/// Die-to-die interconnect: UCIe links, `288 GB/s`, `4.02 ns` FDI-to-FDI.
+#[derive(Clone, Debug)]
+pub struct D2dConfig {
+    /// Per-link (per neighbor, per direction) bandwidth in GB/s.
+    pub gbps_per_link: f64,
+    /// Per-hop latency in nanoseconds.
+    pub hop_latency_ns: f64,
+}
+
+/// Cycle cost model for the hardware scheduler (paper §V-B): charged on the
+/// IO-die timeline per scheduling decision.
+#[derive(Clone, Debug)]
+pub struct SchedulerCost {
+    /// EIT lookup (single-cycle SRAM).
+    pub eit_lookup: u64,
+    /// Per-comparator-stage cost of the bitonic sorter.
+    pub sorter_stage: u64,
+    /// E-C matcher combinational passes.
+    pub matcher: u64,
+    /// ICV read-modify-write.
+    pub icv_update: u64,
+}
+
+impl Default for SchedulerCost {
+    fn default() -> Self {
+        SchedulerCost { eit_lookup: 1, sorter_stage: 1, matcher: 2, icv_update: 1 }
+    }
+}
+
+/// The full package: chiplet array + memory system + interconnect.
+#[derive(Clone, Debug)]
+pub struct HardwareConfig {
+    /// Mesh rows (the paper evaluates 2×2, 3×3, 4×4).
+    pub mesh_rows: usize,
+    /// Mesh columns.
+    pub mesh_cols: usize,
+    /// MAC units per compute die (Table I: 2048).
+    pub macs_per_die: u64,
+    /// Compute-die clock in Hz (Table I: 800 MHz).
+    pub freq_hz: f64,
+    /// Per-die SRAM weight buffer capacity in bytes.
+    pub weight_buffer_bytes: u64,
+    /// Per-die token/activation buffer capacity in bytes.
+    pub token_buffer_bytes: u64,
+    /// Fixed per-micro-slice issue/control overhead (cycles). This is what
+    /// makes overly fine micro-slices lose (Fig 17).
+    pub microslice_overhead_cycles: u64,
+    pub ddr: DdrConfig,
+    pub d2d: D2dConfig,
+    pub scheduler: SchedulerCost,
+    /// Bytes per weight element (bf16 ⇒ 2).
+    pub weight_bytes: u64,
+    /// Bytes per activation element (bf16 ⇒ 2).
+    pub act_bytes: u64,
+}
+
+impl HardwareConfig {
+    pub fn n_chiplets(&self) -> usize {
+        self.mesh_rows * self.mesh_cols
+    }
+
+    /// Per-channel DDR bytes per cycle.
+    pub fn ddr_bytes_per_cycle(&self) -> f64 {
+        self.ddr.gbps_per_channel * 1e9 / self.freq_hz
+    }
+
+    /// Per-link D2D bytes per cycle.
+    pub fn d2d_bytes_per_cycle(&self) -> f64 {
+        self.d2d.gbps_per_link * 1e9 / self.freq_hz
+    }
+
+    /// D2D hop latency in cycles (rounded up).
+    pub fn d2d_hop_cycles(&self) -> u64 {
+        (self.d2d.hop_latency_ns * 1e-9 * self.freq_hz).ceil() as u64
+    }
+
+    /// Cycles to move `bytes` over one DDR channel (excluding queueing).
+    pub fn ddr_cycles(&self, bytes: u64) -> u64 {
+        self.ddr.latency_cycles + (bytes as f64 / self.ddr_bytes_per_cycle()).ceil() as u64
+    }
+
+    /// Cycles to move `bytes` over one D2D hop (excluding queueing).
+    pub fn d2d_cycles(&self, bytes: u64) -> u64 {
+        self.d2d_hop_cycles() + (bytes as f64 / self.d2d_bytes_per_cycle()).ceil() as u64
+    }
+
+    /// Cycles to run a GEMM of `macs` multiply-accumulates on one die.
+    pub fn compute_cycles(&self, macs: u64) -> u64 {
+        crate::util::ceil_div(macs, self.macs_per_die)
+    }
+
+    /// DDR channel serving a chiplet (chiplets share channels round-robin
+    /// when the array is larger than the channel count).
+    pub fn ddr_channel_of(&self, chiplet: usize) -> usize {
+        chiplet % self.ddr.channels
+    }
+
+    /// Peak aggregate DDR bandwidth (GB/s).
+    pub fn ddr_aggregate_gbps(&self) -> f64 {
+        self.ddr.gbps_per_channel * self.ddr.channels as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::presets;
+
+    #[test]
+    fn table1_mcm_numbers() {
+        let hw = presets::mcm_2x2();
+        assert_eq!(hw.n_chiplets(), 4);
+        assert_eq!(hw.macs_per_die, 2048);
+        // 25.6 GB/s @ 800 MHz = 32 B/cycle
+        assert!((hw.ddr_bytes_per_cycle() - 32.0).abs() < 1e-9);
+        // 288 GB/s @ 800 MHz = 360 B/cycle
+        assert!((hw.d2d_bytes_per_cycle() - 360.0).abs() < 1e-9);
+        // 4.02 ns @ 800 MHz = 3.216 cycles -> 4
+        assert_eq!(hw.d2d_hop_cycles(), 4);
+    }
+
+    #[test]
+    fn timing_arithmetic() {
+        let hw = presets::mcm_2x2();
+        // 32 KiB over DDR: 32768/32 = 1024 cycles + latency
+        assert_eq!(hw.ddr_cycles(32768), hw.ddr.latency_cycles + 1024);
+        // 2048 MACs per cycle
+        assert_eq!(hw.compute_cycles(2048), 1);
+        assert_eq!(hw.compute_cycles(2049), 2);
+        assert_eq!(hw.compute_cycles(0), 0);
+    }
+
+    #[test]
+    fn channel_sharing_wraps() {
+        let mut hw = presets::mcm_2x2();
+        hw.mesh_rows = 3;
+        hw.mesh_cols = 3;
+        assert_eq!(hw.ddr_channel_of(0), 0);
+        assert_eq!(hw.ddr_channel_of(5), 1);
+        assert_eq!(hw.ddr_channel_of(8), 0);
+    }
+}

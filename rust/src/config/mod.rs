@@ -1,0 +1,93 @@
+//! Configuration system: hardware (Table I top half), MoE model shapes
+//! (Table I bottom half), and experiment settings, with a `key=value`
+//! override parser so the CLI and experiment drivers can sweep any knob.
+
+pub mod hardware;
+pub mod model;
+pub mod parse;
+pub mod presets;
+
+pub use hardware::{DdrConfig, D2dConfig, HardwareConfig, SchedulerCost};
+pub use model::{Dataset, MoeModelConfig};
+pub use parse::Overrides;
+
+/// Which parallelization strategy a run uses (paper §VI baselines +
+/// ablation configurations A1–A5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Expert parallelism: static expert placement + all-to-all tokens.
+    Ep,
+    /// Hydra [17]: EP with popularity-aware expert placement.
+    Hydra,
+    /// A1 — naive FSE-DP: slice-level circulation, no micro-slice flow.
+    FseDpNaive,
+    /// A2 — FSE-DP with micro-slice flow under Rules 1–4.
+    FseDp,
+    /// A3 — A2 + paired-load policy.
+    FseDpPaired,
+    /// A4 — A3 + Rule 5 (DDR steers loads to the emptiest chiplet).
+    FseDpRule5,
+    /// A5 — A3 + token buffering (end-to-end only; needs QoS slack).
+    FseDpBuffered,
+}
+
+impl StrategyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Ep => "EP",
+            StrategyKind::Hydra => "Hydra",
+            StrategyKind::FseDpNaive => "FSE-DP(A1-naive)",
+            StrategyKind::FseDp => "FSE-DP",
+            StrategyKind::FseDpPaired => "FSE-DP+paired",
+            StrategyKind::FseDpRule5 => "FSE-DP+paired+R5",
+            StrategyKind::FseDpBuffered => "FSE-DP+paired+buf",
+        }
+    }
+
+    pub fn all() -> &'static [StrategyKind] {
+        &[
+            StrategyKind::Ep,
+            StrategyKind::Hydra,
+            StrategyKind::FseDpNaive,
+            StrategyKind::FseDp,
+            StrategyKind::FseDpPaired,
+            StrategyKind::FseDpRule5,
+            StrategyKind::FseDpBuffered,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "ep" => Some(StrategyKind::Ep),
+            "hydra" => Some(StrategyKind::Hydra),
+            "naive" | "a1" | "fsedp-naive" => Some(StrategyKind::FseDpNaive),
+            "fsedp" | "a2" | "fse-dp" => Some(StrategyKind::FseDp),
+            "paired" | "a3" | "fsedp-paired" => Some(StrategyKind::FseDpPaired),
+            "rule5" | "a4" => Some(StrategyKind::FseDpRule5),
+            "buffered" | "a5" => Some(StrategyKind::FseDpBuffered),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        assert_eq!(StrategyKind::parse("ep"), Some(StrategyKind::Ep));
+        assert_eq!(StrategyKind::parse("Hydra"), Some(StrategyKind::Hydra));
+        assert_eq!(StrategyKind::parse("a3"), Some(StrategyKind::FseDpPaired));
+        assert_eq!(StrategyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_have_distinct_names() {
+        let names: Vec<_> = StrategyKind::all().iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

@@ -1,0 +1,162 @@
+//! MoE model descriptors (Table I bottom half) and dataset emulators.
+
+/// Language-modeling workload used to drive gating traces. Real datasets
+/// are substituted by calibrated long-tail samplers (DESIGN.md §5): the
+/// property every scheduling policy reacts to is the per-expert token-count
+/// distribution, which we match in shape to the paper's Figure 2 profiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Wikitext2,
+    C4,
+    WinoGrande,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Wikitext2 => "wikitext2",
+            Dataset::C4 => "c4",
+            Dataset::WinoGrande => "winogrande",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "wikitext2" | "wikitext-2" | "wt2" => Some(Dataset::Wikitext2),
+            "c4" => Some(Dataset::C4),
+            "winogrande" | "wg" => Some(Dataset::WinoGrande),
+            _ => None,
+        }
+    }
+
+    /// Zipf exponent of the expert-popularity distribution. Calibrated so
+    /// the sorted per-expert token counts reproduce the long-tail shape of
+    /// Fig 2 (b,c): a handful of hot experts, a long cold tail, more
+    /// pronounced at small token counts. WinoGrande (short cloze prompts)
+    /// skews hardest, C4 (web text) is broadest.
+    pub fn zipf_s(&self) -> f64 {
+        match self {
+            Dataset::Wikitext2 => 1.05,
+            Dataset::C4 => 0.90,
+            Dataset::WinoGrande => 1.25,
+        }
+    }
+
+    /// How strongly expert popularity re-ranks across layers (0 = identical
+    /// hot set each layer, 1 = independent). MoE routing correlates across
+    /// layers but is far from static.
+    pub fn layer_decorrelation(&self) -> f64 {
+        match self {
+            Dataset::Wikitext2 => 0.35,
+            Dataset::C4 => 0.50,
+            Dataset::WinoGrande => 0.30,
+        }
+    }
+}
+
+/// Shape of one MoE model (Table I).
+#[derive(Clone, Debug)]
+pub struct MoeModelConfig {
+    pub name: &'static str,
+    /// Hidden size (D_model).
+    pub d_model: usize,
+    /// Per-expert FFN intermediate size (D_expert in Fig 2; Table I D_ffn).
+    pub d_expert: usize,
+    /// Routed experts per layer (E).
+    pub n_experts: usize,
+    /// Routed experts activated per token (E^act).
+    pub top_k: usize,
+    /// Always-active shared experts (DeepSeek's "+2").
+    pub n_shared: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Transformer layers.
+    pub n_layers: usize,
+    /// Total parameters (for reporting only).
+    pub params_b: f64,
+}
+
+impl MoeModelConfig {
+    /// MACs per token for one routed expert's gated FFN
+    /// (W1 + W3 + W2 ⇒ 3 · d_model · d_expert).
+    pub fn expert_macs_per_token(&self) -> u64 {
+        3 * self.d_model as u64 * self.d_expert as u64
+    }
+
+    /// Weight bytes of one full expert.
+    pub fn expert_bytes(&self, weight_bytes: u64) -> u64 {
+        3 * self.d_model as u64 * self.d_expert as u64 * weight_bytes
+    }
+
+    /// Activation-vector bytes of one token.
+    pub fn token_bytes(&self, act_bytes: u64) -> u64 {
+        self.d_model as u64 * act_bytes
+    }
+
+    /// MACs per token for the dense attention block, assuming an average
+    /// context of `ctx` tokens: QKVO projections (4·d²) + score/value
+    /// (2·ctx·d).
+    pub fn attn_macs_per_token(&self, ctx: usize) -> u64 {
+        4 * (self.d_model as u64).pow(2) + 2 * ctx as u64 * self.d_model as u64
+    }
+
+    /// Experts activated per token including shared ones.
+    pub fn active_per_token(&self) -> usize {
+        self.top_k + self.n_shared
+    }
+
+    /// Fraction of per-token MACs spent in the MoE FFN vs attention — why
+    /// MoE-centric optimization matters less for Phi-3.5 (Fig 14 note).
+    pub fn moe_compute_fraction(&self, ctx: usize) -> f64 {
+        let moe = (self.active_per_token() as u64 * self.expert_macs_per_token()) as f64;
+        let attn = self.attn_macs_per_token(ctx) as f64;
+        moe / (moe + attn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::presets;
+
+    #[test]
+    fn table1_shapes() {
+        let m = presets::all_models();
+        assert_eq!(m.len(), 4);
+        let phi = presets::phi35_moe();
+        assert_eq!((phi.d_model, phi.d_expert, phi.n_experts, phi.top_k), (4096, 3200, 16, 2));
+        let yuan = presets::yuan2_m32();
+        assert_eq!((yuan.d_model, yuan.d_expert, yuan.n_experts, yuan.top_k), (2048, 4096, 32, 2));
+        let ds = presets::deepseek_moe();
+        assert_eq!((ds.d_model, ds.d_expert, ds.n_experts, ds.top_k, ds.n_shared), (2048, 1408, 64, 6, 2));
+        let qwen = presets::qwen3_a3b();
+        assert_eq!((qwen.d_model, qwen.d_expert, qwen.n_experts, qwen.top_k), (2048, 768, 128, 8));
+    }
+
+    #[test]
+    fn expert_sizes_match_paper_scale() {
+        // Qwen3 expert ≈ 9 MiB in bf16; Phi-3.5 expert ≈ 75 MiB.
+        let qwen = presets::qwen3_a3b();
+        let mb = qwen.expert_bytes(2) as f64 / (1024.0 * 1024.0);
+        assert!((8.0..10.0).contains(&mb), "qwen expert {mb} MiB");
+        let phi = presets::phi35_moe();
+        let mb = phi.expert_bytes(2) as f64 / (1024.0 * 1024.0);
+        assert!((70.0..80.0).contains(&mb), "phi expert {mb} MiB");
+    }
+
+    #[test]
+    fn phi_has_low_moe_fraction() {
+        // The paper notes Phi-3.5's FFN fraction is comparatively small
+        // (relative to its big attention): MoE-centric gains are limited.
+        let phi = presets::phi35_moe();
+        let qwen = presets::qwen3_a3b();
+        assert!(phi.moe_compute_fraction(512) < qwen.moe_compute_fraction(512) + 0.2);
+    }
+
+    #[test]
+    fn dataset_parse() {
+        use crate::config::Dataset;
+        assert_eq!(Dataset::parse("C4"), Some(Dataset::C4));
+        assert_eq!(Dataset::parse("wikitext-2"), Some(Dataset::Wikitext2));
+        assert_eq!(Dataset::parse("nope"), None);
+    }
+}

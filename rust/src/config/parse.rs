@@ -1,0 +1,149 @@
+//! `key=value` override parser: the CLI's and DSE's way of sweeping any
+//! hardware/model knob without a config-file dependency.
+//!
+//! Accepted forms: `weight_buffer_mb=16 ddr_gbps=25.6 mesh=3x3 slices=8`.
+
+use super::hardware::HardwareConfig;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Overrides {
+    map: BTreeMap<String, String>,
+}
+
+impl Overrides {
+    pub fn parse(args: &[String]) -> Result<Overrides, String> {
+        let mut map = BTreeMap::new();
+        for a in args {
+            let (k, v) = a
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got '{a}'"))?;
+            if k.is_empty() || v.is_empty() {
+                return Err(format!("empty key or value in '{a}'"));
+            }
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Overrides { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.map
+            .get(key)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("'{key}' must be a number, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.map
+            .get(key)
+            .map(|v| v.parse::<usize>().map_err(|_| format!("'{key}' must be an integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Apply hardware overrides in place. Unknown keys are an error so
+    /// typos do not silently run the default config.
+    pub fn apply_hardware(&self, hw: &mut HardwareConfig) -> Result<(), String> {
+        for key in self.map.keys() {
+            match key.as_str() {
+                "weight_buffer_mb" | "token_buffer_mb" | "ddr_gbps" | "ddr_channels"
+                | "d2d_gbps" | "hop_ns" | "mesh" | "macs" | "freq_mhz" | "overhead_cycles"
+                | "slices" | "tokens" | "seed" | "iters" | "slack" => {}
+                other => return Err(format!("unknown override key '{other}'")),
+            }
+        }
+        if let Some(v) = self.get_f64("weight_buffer_mb")? {
+            hw.weight_buffer_bytes = (v * 1024.0 * 1024.0) as u64;
+        }
+        if let Some(v) = self.get_f64("token_buffer_mb")? {
+            hw.token_buffer_bytes = (v * 1024.0 * 1024.0) as u64;
+        }
+        if let Some(v) = self.get_f64("ddr_gbps")? {
+            hw.ddr.gbps_per_channel = v;
+        }
+        if let Some(v) = self.get_usize("ddr_channels")? {
+            hw.ddr.channels = v.max(1);
+        }
+        if let Some(v) = self.get_f64("d2d_gbps")? {
+            hw.d2d.gbps_per_link = v;
+        }
+        if let Some(v) = self.get_f64("hop_ns")? {
+            hw.d2d.hop_latency_ns = v;
+        }
+        if let Some(v) = self.get_usize("macs")? {
+            hw.macs_per_die = v as u64;
+        }
+        if let Some(v) = self.get_f64("freq_mhz")? {
+            hw.freq_hz = v * 1e6;
+        }
+        if let Some(v) = self.get_usize("overhead_cycles")? {
+            hw.microslice_overhead_cycles = v as u64;
+        }
+        if let Some(m) = self.get("mesh") {
+            let (r, c) = m
+                .split_once('x')
+                .ok_or_else(|| format!("mesh must look like 2x2, got '{m}'"))?;
+            hw.mesh_rows = r.parse().map_err(|_| format!("bad mesh rows '{r}'"))?;
+            hw.mesh_cols = c.parse().map_err(|_| format!("bad mesh cols '{c}'"))?;
+            if hw.mesh_rows == 0 || hw.mesh_cols == 0 {
+                return Err("mesh dimensions must be positive".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn ov(parts: &[&str]) -> Overrides {
+        Overrides::parse(&parts.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_and_applies() {
+        let o = ov(&["weight_buffer_mb=8", "ddr_gbps=48", "mesh=3x3"]);
+        let mut hw = presets::mcm_2x2();
+        o.apply_hardware(&mut hw).unwrap();
+        assert_eq!(hw.weight_buffer_bytes, 8 * 1024 * 1024);
+        assert!((hw.ddr.gbps_per_channel - 48.0).abs() < 1e-9);
+        assert_eq!((hw.mesh_rows, hw.mesh_cols), (3, 3));
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let o = ov(&["weight_bufer_mb=8"]); // typo
+        let mut hw = presets::mcm_2x2();
+        assert!(o.apply_hardware(&mut hw).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_forms() {
+        assert!(Overrides::parse(&["noequals".to_string()]).is_err());
+        assert!(Overrides::parse(&["=v".to_string()]).is_err());
+        let o = ov(&["mesh=3by3"]);
+        let mut hw = presets::mcm_2x2();
+        assert!(o.apply_hardware(&mut hw).is_err());
+    }
+
+    #[test]
+    fn non_hardware_keys_pass_through() {
+        let o = ov(&["tokens=64", "seed=7"]);
+        let mut hw = presets::mcm_2x2();
+        o.apply_hardware(&mut hw).unwrap();
+        assert_eq!(o.get_usize("tokens").unwrap(), Some(64));
+    }
+}

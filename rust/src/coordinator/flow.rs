@@ -1,0 +1,920 @@
+//! The FSE-DP micro-slice flow engine: a discrete-event simulation of the
+//! virtualization rules (paper §IV-C) driven by the spatiotemporal
+//! trajectory scheduler (Algorithm 1).
+//!
+//! Rules implemented per chiplet:
+//!  * **Rule 1** — a micro-slice received in the previous step is computed
+//!    immediately and *eagerly forwarded at compute start* to the next
+//!    chiplet on the trajectory (Fig 4(b) eager usage; pending work is
+//!    drained LIFO so the most recently received slice runs first).
+//!  * **Rule 2** — with nothing just received, any locally stored
+//!    (DDR-preloaded) micro-slice is computed and forwarded.
+//!  * **Rule 3** — after the last trajectory station computes a slice, its
+//!    buffer bytes are released immediately.
+//!  * **Rule 4** — each chiplet streams its home-assigned micro-slices from
+//!    DDR whenever buffer space is available (also used for expert
+//!    pre-loading by Algorithm 1 line 12).
+//!  * **Rule 5** (optional) — DDR loads are steered to the trajectory
+//!    chiplet with the most free buffer space instead of a static
+//!    round-robin home assignment.
+//!
+//! Backpressure: a forward targeting a full buffer parks in the
+//! destination's `waiting_in` queue and the sender's bytes stay resident
+//! until the transfer completes — the elastic-reservoir behaviour of
+//! Fig 13. A single emergency overcommit per reservation is permitted to
+//! keep rings free of buffer deadlock (counted; see `BufferTracker`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::HardwareConfig;
+use crate::coordinator::hw_scheduler::{mask_of, ChipletMask, Eit, Icv, SchedulerMeter};
+use crate::coordinator::paired_load::ExpertGroup;
+use crate::coordinator::trajectory::Trajectory;
+use crate::moe::{ExpertGeometry, ExpertId};
+use crate::sim::{
+    ActivityKind, BufferTracker, ChipletId, Mesh, SerialResource, SimTime, Span, Timeline,
+};
+use crate::workload::LayerWorkload;
+
+/// Engine knobs (which ablation configuration runs).
+#[derive(Clone, Copy, Debug)]
+pub struct FlowConfig {
+    pub num_slices: usize,
+    /// Rule 5: steer DDR loads to the emptiest trajectory chiplet.
+    pub rule5: bool,
+    /// Record full activity spans (Fig 11/13) — costs memory.
+    pub record_spans: bool,
+}
+
+/// Result of simulating one MoE layer under the flow engine.
+#[derive(Clone, Debug)]
+pub struct LayerRun {
+    pub makespan: SimTime,
+    pub timeline: Timeline,
+    /// Peak weight-buffer bytes summed over chiplets.
+    pub package_peak_weight_bytes: u64,
+    pub max_chiplet_peak_bytes: u64,
+    pub overcommits: u64,
+    pub ddr_bytes: u64,
+    pub d2d_bytes: u64,
+    pub scheduler_cycles: u64,
+    pub scheduler_decisions: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FlowState {
+    Pending,
+    Preloading,
+    Active,
+}
+
+struct Flow {
+    expert: ExpertId,
+    traj: Trajectory,
+    state: FlowState,
+    /// Completed visit count per micro-slice.
+    visits: Vec<u32>,
+    /// Compute-*start* count per micro-slice. Forward decisions use this
+    /// ordinal: with eager forwarding, station s+1 can begin before
+    /// station s finishes, so the finish count lags and must not steer
+    /// forwarding (it would re-forward past the last station and
+    /// proliferate copies around the ring).
+    starts: Vec<u32>,
+    slices_done: usize,
+    /// Scheduling group the flow belongs to (kept for trace inspection).
+    #[allow(dead_code)]
+    group: usize,
+}
+
+/// State of one in-flight forward, keyed by (flow, slice, src chiplet).
+/// Tracks when the *sender's* buffer copy may be released: after both its
+/// local compute finishes and the transfer has left.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FwdState {
+    /// Transfer blocked on destination buffer space; sender still computing.
+    Parked,
+    /// Transfer blocked; sender compute already finished.
+    ParkedComputeDone,
+    /// Transfer underway, arriving at the given time.
+    Started(SimTime),
+}
+
+impl Flow {
+    fn n_slices(&self) -> usize {
+        self.visits.len()
+    }
+
+    fn done(&self) -> bool {
+        self.slices_done == self.n_slices()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SliceAt {
+    flow: usize,
+    slice: usize,
+    /// Trajectory position (index into flow.traj) where the slice sits.
+    pos: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Loaded { chip: ChipletId, flow: usize, slice: usize },
+    Arrived { chip: ChipletId, flow: usize, slice: usize, pos: usize },
+    /// `last` = this station was the slice's final (no-forward) visit.
+    ComputeDone { chip: ChipletId, flow: usize, slice: usize, last: bool },
+    Release { chip: ChipletId, bytes: u64 },
+    Decide,
+}
+
+#[derive(Default)]
+struct Chip {
+    compute_busy: bool,
+    /// In-buffer slices not yet computed here; drained LIFO (Rule 1).
+    pending: Vec<SliceAt>,
+    /// Home-assigned micro-slices of *launched* flows awaiting DDR load.
+    /// Split from the preload queue so the per-event hot path is O(1)
+    /// (§Perf iteration 3) — active loads always take priority.
+    ddr_q_active: VecDeque<(usize, usize)>,
+    /// Home-assigned micro-slices of preloading/pending flows.
+    ddr_q_pre: VecDeque<(usize, usize)>,
+    loading: bool,
+    /// Blocked incoming forwards: (flow, slice, dest_pos, sender chiplet).
+    waiting_in: VecDeque<(usize, usize, usize, ChipletId)>,
+    engaged: u32,
+}
+
+pub struct FlowEngine<'a> {
+    hw: &'a HardwareConfig,
+    geom: &'a ExpertGeometry,
+    cfg: FlowConfig,
+    mesh: Mesh,
+    ddr: Vec<SerialResource>,
+    buffers: BufferTracker,
+    chips: Vec<Chip>,
+    flows: Vec<Flow>,
+    groups: VecDeque<(usize, Vec<usize>)>, // (group idx, flow indices)
+    forwards: std::collections::HashMap<(usize, usize, ChipletId), FwdState>,
+    icv: Icv,
+    eit: Eit,
+    meter: SchedulerMeter,
+    queue: BinaryHeap<Reverse<(SimTime, u64)>>,
+    payload: Vec<Ev>,
+    seq: u64,
+    timeline: Timeline,
+    makespan: SimTime,
+    ddr_bytes: u64,
+    d2d_bytes: u64,
+}
+
+impl<'a> FlowEngine<'a> {
+    pub fn new(
+        hw: &'a HardwareConfig,
+        geom: &'a ExpertGeometry,
+        workload: &LayerWorkload,
+        groups: &[ExpertGroup],
+        cfg: FlowConfig,
+    ) -> Self {
+        let n = hw.n_chiplets();
+        let mesh = Mesh::new(hw);
+        let mut flows = Vec::new();
+        let mut group_queue = VecDeque::new();
+        let mut eit = Eit::new(
+            workload
+                .experts
+                .iter()
+                .map(|l| l.expert as usize + 1)
+                .max()
+                .unwrap_or(1),
+        );
+        for (gi, g) in groups.iter().enumerate() {
+            let mut flow_ids = Vec::new();
+            for &e in &g.experts {
+                let load = workload
+                    .expert_load(e)
+                    .expect("scheduled expert missing from workload");
+                let traj = Trajectory::for_expert(load, &mesh);
+                assert!(!traj.is_empty(), "expert {e} has an empty trajectory");
+                eit.set(e, mask_of(&traj.chiplets), traj.total_tokens());
+                flow_ids.push(flows.len());
+                flows.push(Flow {
+                    expert: e,
+                    state: FlowState::Pending,
+                    visits: vec![0; cfg.num_slices],
+                    starts: vec![0; cfg.num_slices],
+                    slices_done: 0,
+                    group: gi,
+                    traj,
+                });
+            }
+            group_queue.push_back((gi, flow_ids));
+        }
+        let mut chips = Vec::new();
+        chips.resize_with(n, Chip::default);
+        FlowEngine {
+            hw,
+            geom,
+            cfg,
+            mesh,
+            ddr: vec![SerialResource::new(); hw.ddr.channels],
+            buffers: BufferTracker::new(n, hw.weight_buffer_bytes),
+            chips,
+            flows,
+            groups: group_queue,
+            forwards: std::collections::HashMap::new(),
+            icv: Icv::all_idle(n),
+            eit,
+            meter: SchedulerMeter::default(),
+            queue: BinaryHeap::new(),
+            payload: Vec::new(),
+            seq: 0,
+            timeline: Timeline::new(n, cfg.record_spans),
+            makespan: 0,
+            ddr_bytes: 0,
+            d2d_bytes: 0,
+        }
+    }
+
+    fn push(&mut self, t: SimTime, ev: Ev) {
+        self.payload.push(ev);
+        self.queue.push(Reverse((t, self.seq)));
+        self.seq += 1;
+    }
+
+    /// Run the layer to completion.
+    pub fn run(mut self) -> LayerRun {
+        // Per-layer scheduler setup: EIT fill + hot/cold bitonic sort.
+        let setup = self.meter.charge_setup(&self.hw.scheduler, self.eit.len());
+        self.push(setup, Ev::Decide);
+        loop {
+            while let Some(Reverse((t, seq))) = self.queue.pop() {
+                self.makespan = self.makespan.max(t);
+                let ev = self.payload[seq as usize];
+                // Runaway backstop: a correct layer needs O(experts ×
+                // slices × stations) events; far below this bound.
+                if self.seq > 50_000_000 {
+                    panic!(
+                        "event explosion: seq={} t={} ev={:?} flows_done={}/{} groups_left={}",
+                        self.seq,
+                        t,
+                        ev,
+                        self.flows.iter().filter(|f| f.done()).count(),
+                        self.flows.len(),
+                        self.groups.len()
+                    );
+                }
+                self.handle(t, ev);
+            }
+            if self.flows.iter().all(|f| f.done()) {
+                break;
+            }
+            // Stall: a cycle of backpressured forwards around a full ring
+            // (possible with pathologically small buffers). Break it by
+            // force-starting one blocked transfer with an emergency
+            // overcommit — the deadlock-free virtual slot.
+            let chip = (0..self.chips.len())
+                .find(|&c| !self.chips[c].waiting_in.is_empty())
+                .expect("stalled flow with no blocked transfers");
+            let now = self.makespan;
+            let (flow, slice, dest_pos, src) = self.chips[chip].waiting_in.pop_front().unwrap();
+            self.serve_parked(src, chip, flow, slice, dest_pos, now);
+        }
+        debug_assert!(self.flows.iter().all(|f| f.done()), "layer did not drain");
+        debug_assert!(self.buffers.drained(), "buffer bytes leaked");
+        LayerRun {
+            makespan: self.makespan,
+            package_peak_weight_bytes: self.buffers.package_peak(),
+            max_chiplet_peak_bytes: self.buffers.max_chiplet_peak(),
+            overcommits: self.buffers.overcommits(),
+            ddr_bytes: self.ddr_bytes,
+            d2d_bytes: self.d2d_bytes,
+            scheduler_cycles: self.meter.cycles,
+            scheduler_decisions: self.meter.decisions,
+            timeline: self.timeline,
+        }
+    }
+
+    fn handle(&mut self, now: SimTime, ev: Ev) {
+        match ev {
+            Ev::Loaded { chip, flow, slice } => {
+                self.chips[chip].loading = false;
+                let pos = self.flows[flow].traj.position_of(chip).expect("home on trajectory");
+                self.chips[chip].pending.push(SliceAt { flow, slice, pos });
+                self.try_start_load(chip, now);
+                self.try_start_compute(chip, now);
+            }
+            Ev::Arrived { chip, flow, slice, pos } => {
+                self.chips[chip].pending.push(SliceAt { flow, slice, pos });
+                self.try_start_compute(chip, now);
+            }
+            Ev::ComputeDone { chip, flow, slice, last } => {
+                self.chips[chip].compute_busy = false;
+                self.finish_visit(chip, flow, slice, last, now);
+                self.try_start_compute(chip, now);
+            }
+            Ev::Release { chip, bytes } => {
+                self.free_bytes(chip, bytes, now);
+            }
+            Ev::Decide => self.decide(now),
+        }
+    }
+
+    // ----- Algorithm 1: spatiotemporal trajectory scheduling -------------
+
+    fn group_mask(&self, flow_ids: &[usize]) -> ChipletMask {
+        flow_ids
+            .iter()
+            .map(|&f| self.eit.lookup(self.flows[f].expert).0)
+            .fold(0, |a, b| a | b)
+    }
+
+    fn decide(&mut self, now: SimTime) {
+        loop {
+            if !self.icv.any_idle() || self.groups.is_empty() {
+                break;
+            }
+            let mut launched = None;
+            let mut examined = 0;
+            for (qi, (_, flow_ids)) in self.groups.iter().enumerate() {
+                examined += flow_ids.len();
+                let mask = self.group_mask(flow_ids);
+                if self.icv.intersects(mask) {
+                    launched = Some(qi);
+                    break;
+                }
+            }
+            let cost = self
+                .meter
+                .charge_decision(&self.hw.scheduler, examined, launched.is_some() as usize);
+            match launched {
+                Some(qi) => {
+                    let (_, flow_ids) = self.groups.remove(qi).unwrap();
+                    let mask = self.group_mask(&flow_ids);
+                    self.icv.allocate(mask);
+                    let t = now + cost;
+                    for f in flow_ids {
+                        self.launch_flow(f, t);
+                    }
+                }
+                None => break,
+            }
+        }
+        // Alg 1 line 12 / Rule 4: groups that could not launch are
+        // pre-loaded into spare buffer space. A bounded lookahead window
+        // keeps DDR busy across launches without ballooning occupancy to
+        // whatever the buffer holds (the elasticity Fig 12 reports).
+        const PRELOAD_WINDOW: usize = 6;
+        let pending: Vec<usize> = self
+            .groups
+            .iter()
+            .take(PRELOAD_WINDOW)
+            .flat_map(|(_, fs)| fs.iter().copied())
+            .filter(|&f| self.flows[f].state == FlowState::Pending)
+            .collect();
+        for f in pending {
+            self.preload_flow(f, now);
+        }
+    }
+
+    fn assign_homes(&mut self, flow: usize, now: SimTime) {
+        let n_slices = self.flows[flow].n_slices();
+        let traj_chips = self.flows[flow].traj.chiplets.clone();
+        let active = self.flows[flow].state == FlowState::Active;
+        let mut push = |chips: &mut Vec<Chip>, c: ChipletId, entry: (usize, usize)| {
+            if active {
+                chips[c].ddr_q_active.push_back(entry);
+            } else {
+                chips[c].ddr_q_pre.push_back(entry);
+            }
+        };
+        if self.cfg.rule5 {
+            // Rule 5: each slice goes to the currently emptiest trajectory
+            // chiplet (greedy, accounting queued-but-unloaded bytes).
+            let mut virtual_q: Vec<u64> = traj_chips
+                .iter()
+                .map(|&c| {
+                    self.buffers.occupied(c)
+                        + (self.chips[c].ddr_q_active.len() + self.chips[c].ddr_q_pre.len())
+                            as u64
+                            * self.geom.slice_bytes
+                })
+                .collect();
+            for s in 0..n_slices {
+                let (best, _) = virtual_q
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(i, &v)| (v, i))
+                    .unwrap();
+                push(&mut self.chips, traj_chips[best], (flow, s));
+                virtual_q[best] += self.geom.slice_bytes;
+            }
+        } else {
+            // Static round-robin sharding over the trajectory: one physical
+            // copy package-wide, spread across DDR channels.
+            for s in 0..n_slices {
+                let home = traj_chips[s % traj_chips.len()];
+                push(&mut self.chips, home, (flow, s));
+            }
+        }
+        for c in traj_chips {
+            self.try_start_load(c, now);
+        }
+    }
+
+    fn preload_flow(&mut self, flow: usize, now: SimTime) {
+        if self.flows[flow].state != FlowState::Pending {
+            return;
+        }
+        self.flows[flow].state = FlowState::Preloading;
+        self.assign_homes(flow, now);
+    }
+
+    fn launch_flow(&mut self, flow: usize, now: SimTime) {
+        let prior = self.flows[flow].state;
+        self.flows[flow].state = FlowState::Active;
+        let traj = self.flows[flow].traj.chiplets.clone();
+        for &c in &traj {
+            self.chips[c].engaged += 1;
+        }
+        if prior == FlowState::Pending {
+            self.assign_homes(flow, now);
+        } else {
+            // Promote the flow's remaining preload-queue entries to the
+            // active queue (one O(queue) pass per launch, keeping the
+            // per-event load path O(1)).
+            for &c in &traj {
+                let mut keep = VecDeque::with_capacity(self.chips[c].ddr_q_pre.len());
+                while let Some(entry) = self.chips[c].ddr_q_pre.pop_front() {
+                    if entry.0 == flow {
+                        self.chips[c].ddr_q_active.push_back(entry);
+                    } else {
+                        keep.push_back(entry);
+                    }
+                }
+                self.chips[c].ddr_q_pre = keep;
+            }
+        }
+        // Already-preloaded pending slices may start computing now, and the
+        // flow's remaining loads gain queue priority.
+        for c in traj {
+            self.try_start_compute(c, now);
+            self.try_start_load(c, now);
+        }
+    }
+
+    fn flow_completed(&mut self, flow: usize, now: SimTime) {
+        let traj = self.flows[flow].traj.chiplets.clone();
+        let mut release_mask: ChipletMask = 0;
+        for c in traj {
+            self.chips[c].engaged -= 1;
+            if self.chips[c].engaged == 0 {
+                release_mask |= 1 << c;
+            }
+        }
+        self.icv.release(release_mask);
+        self.push(now, Ev::Decide);
+    }
+
+    // ----- Rules 1–4 ------------------------------------------------------
+
+    /// Rule 4: start the next home DDR load if the channel-side slot and
+    /// buffer space allow. Active flows' slices jump the queue, and
+    /// pre-loads (Preloading flows) may only use half the buffer — both
+    /// keep speculative pre-loading from starving the live trajectories.
+    fn try_start_load(&mut self, chip: ChipletId, now: SimTime) {
+        if self.chips[chip].loading {
+            return;
+        }
+        let (flow, slice) = if let Some(&(flow, slice)) = self.chips[chip].ddr_q_active.front() {
+            // Emergency slot: a slice larger than the remaining space may
+            // still load into an empty buffer (tiny-buffer configs).
+            if !self.buffers.fits(chip, self.geom.slice_bytes)
+                && self.buffers.occupied(chip) != 0
+            {
+                return;
+            }
+            self.chips[chip].ddr_q_active.pop_front();
+            (flow, slice)
+        } else if let Some(&(flow, slice)) = self.chips[chip].ddr_q_pre.front() {
+            if self.flows[flow].state == FlowState::Pending {
+                return;
+            }
+            // Preload headroom: speculative loads may fill at most half the
+            // buffer and must always leave two slice slots for live flows
+            // (Rule 4's "whenever there is available space", bounded so
+            // pre-loading cannot starve active trajectories).
+            let cap = (self.buffers.capacity() / 2)
+                .min(self.buffers.capacity().saturating_sub(2 * self.geom.slice_bytes));
+            if self.buffers.occupied(chip) + self.geom.slice_bytes > cap {
+                return;
+            }
+            self.chips[chip].ddr_q_pre.pop_front();
+            (flow, slice)
+        } else {
+            return;
+        };
+        self.chips[chip].loading = true;
+        self.buffers.reserve(chip, self.geom.slice_bytes, now);
+        let channel = self.hw.ddr_channel_of(chip);
+        // Per-load control overhead (descriptor + routing-table entry).
+        let cycles = self.hw.ddr_cycles(self.geom.slice_bytes)
+            + self.hw.microslice_overhead_cycles;
+        let (start, end) = self.ddr[channel].acquire(now, cycles);
+        self.ddr_bytes += self.geom.slice_bytes;
+        self.timeline.record(Span {
+            chiplet: chip,
+            kind: ActivityKind::DdrLoad,
+            start,
+            end,
+            expert: self.flows[flow].expert,
+        });
+        self.push(end, Ev::Loaded { chip, flow, slice });
+    }
+
+    /// Rules 1 & 2: when the compute unit is free, run the most recently
+    /// received/loaded micro-slice of an *active* flow, eagerly forwarding
+    /// it at compute start.
+    fn try_start_compute(&mut self, chip: ChipletId, now: SimTime) {
+        if self.chips[chip].compute_busy {
+            return;
+        }
+        // LIFO scan for the newest pending slice whose flow is active.
+        let idx = self.chips[chip]
+            .pending
+            .iter()
+            .rposition(|s| self.flows[s.flow].state == FlowState::Active);
+        let Some(idx) = idx else { return };
+        let SliceAt { flow, slice, pos } = self.chips[chip].pending.remove(idx);
+
+        let tokens = self.flows[flow].traj.tokens[pos] as u64;
+        let dur = self.geom.slice_compute_cycles(self.hw, tokens);
+        self.chips[chip].compute_busy = true;
+        self.timeline.record(Span {
+            chiplet: chip,
+            kind: ActivityKind::Compute,
+            start: now,
+            end: now + dur,
+            expert: self.flows[flow].expert,
+        });
+
+        // Eager forward (Fig 4(b)): ship the slice onward at compute start
+        // unless this is its final trajectory station (Rule 3). The station
+        // ordinal comes from the compute-start counter — see `Flow::starts`.
+        self.flows[flow].starts[slice] += 1;
+        let is_last = self.flows[flow].starts[slice] as usize == self.flows[flow].traj.len();
+        if !is_last {
+            let next = self.flows[flow].traj.next_pos(pos);
+            self.forward(chip, flow, slice, next, now);
+        }
+        self.push(now + dur, Ev::ComputeDone { chip, flow, slice, last: is_last });
+    }
+
+    /// Forward a micro-slice to the next trajectory station, parking it in
+    /// the destination's backpressure queue when the buffer is full.
+    fn forward(&mut self, src: ChipletId, flow: usize, slice: usize, dest_pos: usize, now: SimTime) {
+        let dest = self.flows[flow].traj.chiplets[dest_pos];
+        if self.buffers.fits(dest, self.geom.slice_bytes) || self.buffers.occupied(dest) == 0 {
+            let arrival = self.start_transfer(src, dest, flow, slice, dest_pos, now);
+            self.forwards.insert((flow, slice, src), FwdState::Started(arrival));
+        } else {
+            self.forwards.insert((flow, slice, src), FwdState::Parked);
+            self.chips[dest].waiting_in.push_back((flow, slice, dest_pos, src));
+        }
+    }
+
+    /// Physically move a micro-slice over the mesh; returns arrival time.
+    fn start_transfer(
+        &mut self,
+        src: ChipletId,
+        dest: ChipletId,
+        flow: usize,
+        slice: usize,
+        dest_pos: usize,
+        now: SimTime,
+    ) -> SimTime {
+        self.buffers.reserve(dest, self.geom.slice_bytes, now);
+        let arrival = self.mesh.transfer(src, dest, self.geom.slice_bytes, now);
+        self.d2d_bytes += self.geom.slice_bytes;
+        self.timeline.record(Span {
+            chiplet: src,
+            kind: ActivityKind::D2dSend,
+            start: now,
+            end: arrival,
+            expert: self.flows[flow].expert,
+        });
+        self.timeline.record(Span {
+            chiplet: dest,
+            kind: ActivityKind::D2dRecv,
+            start: now,
+            end: arrival,
+            expert: self.flows[flow].expert,
+        });
+        self.push(arrival, Ev::Arrived { chip: dest, flow, slice, pos: dest_pos });
+        arrival
+    }
+
+    /// Start a previously parked transfer (destination space just freed, or
+    /// the deadlock-breaker fired) and settle the sender-release contract.
+    fn serve_parked(
+        &mut self,
+        src: ChipletId,
+        dest: ChipletId,
+        flow: usize,
+        slice: usize,
+        dest_pos: usize,
+        now: SimTime,
+    ) {
+        let prior = self
+            .forwards
+            .remove(&(flow, slice, src))
+            .expect("parked transfer without forward state");
+        let arrival = self.start_transfer(src, dest, flow, slice, dest_pos, now);
+        match prior {
+            FwdState::ParkedComputeDone => {
+                // Sender compute already over: its copy frees when the
+                // transfer lands.
+                self.push(arrival, Ev::Release { chip: src, bytes: self.geom.slice_bytes });
+            }
+            FwdState::Parked => {
+                self.forwards.insert((flow, slice, src), FwdState::Started(arrival));
+            }
+            FwdState::Started(_) => unreachable!("transfer started twice"),
+        }
+    }
+
+    /// Compute finished at a station: account the visit, release the local
+    /// bytes once the slice has fully left (Rule 3 at the last station; at
+    /// earlier stations the sender copy frees when the forward lands).
+    /// `was_last_station` marks the visit that did not forward; note that
+    /// with eager pipelining stations may *finish* out of order, so flow
+    /// completion is tracked by the visit count, not by station identity.
+    fn finish_visit(
+        &mut self,
+        chip: ChipletId,
+        flow: usize,
+        slice: usize,
+        was_last_station: bool,
+        now: SimTime,
+    ) {
+        self.flows[flow].visits[slice] += 1;
+        let all_visited = self.flows[flow].visits[slice] as usize == self.flows[flow].traj.len();
+        let bytes = self.geom.slice_bytes;
+        if all_visited {
+            self.flows[flow].slices_done += 1;
+        }
+        if was_last_station {
+            // Rule 3: final station — release immediately.
+            self.free_bytes(chip, bytes, now);
+        } else {
+            match self.forwards.remove(&(flow, slice, chip)) {
+                Some(FwdState::Started(arrival)) if arrival > now => {
+                    self.push(arrival, Ev::Release { chip, bytes });
+                }
+                Some(FwdState::Started(_)) => self.free_bytes(chip, bytes, now),
+                Some(FwdState::Parked) => {
+                    // Forward still blocked: keep the copy resident and let
+                    // `serve_parked` schedule the release on transfer start.
+                    self.forwards.insert((flow, slice, chip), FwdState::ParkedComputeDone);
+                }
+                other => unreachable!("visit finished with forward state {other:?}"),
+            }
+        }
+        if all_visited && self.flows[flow].done() {
+            self.flow_completed(flow, now);
+        }
+    }
+
+    /// Release bytes and serve any backpressured transfers / DDR loads that
+    /// were waiting for space.
+    fn free_bytes(&mut self, chip: ChipletId, bytes: u64, now: SimTime) {
+        self.buffers.release(chip, bytes, now);
+        while let Some(&(flow, slice, dest_pos, src)) = self.chips[chip].waiting_in.front() {
+            if !self.buffers.fits(chip, self.geom.slice_bytes)
+                && self.buffers.occupied(chip) != 0
+            {
+                break;
+            }
+            self.chips[chip].waiting_in.pop_front();
+            self.serve_parked(src, chip, flow, slice, dest_pos, now);
+        }
+        self.try_start_load(chip, now);
+    }
+}
+
+/// Convenience wrapper: run one layer under the given ablation config.
+pub fn run_layer(
+    hw: &HardwareConfig,
+    geom: &ExpertGeometry,
+    workload: &LayerWorkload,
+    groups: &[ExpertGroup],
+    cfg: FlowConfig,
+) -> LayerRun {
+    if workload.experts.is_empty() {
+        return LayerRun {
+            makespan: 0,
+            timeline: Timeline::new(hw.n_chiplets(), cfg.record_spans),
+            package_peak_weight_bytes: 0,
+            max_chiplet_peak_bytes: 0,
+            overcommits: 0,
+            ddr_bytes: 0,
+            d2d_bytes: 0,
+            scheduler_cycles: 0,
+            scheduler_decisions: 0,
+        };
+    }
+    FlowEngine::new(hw, geom, workload, groups, cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::coordinator::paired_load::{paired_order, sequential_order};
+    use crate::moe::ExpertGeometry;
+    use crate::workload::{ExpertLoad, LayerWorkload};
+
+    fn workload(counts: Vec<Vec<u32>>) -> LayerWorkload {
+        let n_chiplets = counts[0].len();
+        let experts = counts
+            .into_iter()
+            .enumerate()
+            .map(|(e, tokens_per_chiplet)| {
+                let total = tokens_per_chiplet.iter().sum();
+                ExpertLoad { expert: e as ExpertId, tokens_per_chiplet, total }
+            })
+            .filter(|l| l.total > 0)
+            .collect::<Vec<_>>();
+        let total_tokens = 0;
+        LayerWorkload { experts, n_chiplets, total_tokens }
+    }
+
+    fn cfg(slices: usize) -> FlowConfig {
+        FlowConfig { num_slices: slices, rule5: false, record_spans: true }
+    }
+
+    fn run(counts: Vec<Vec<u32>>, slices: usize) -> LayerRun {
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, slices);
+        let wl = workload(counts);
+        let groups = paired_order(&wl);
+        run_layer(&hw, &geom, &wl, &groups, cfg(slices))
+    }
+
+    #[test]
+    fn single_expert_single_chiplet() {
+        let r = run(vec![vec![4, 0, 0, 0]], 4);
+        assert!(r.makespan > 0);
+        // 4 slices loaded once each, never forwarded (trajectory length 1).
+        assert_eq!(r.d2d_bytes, 0);
+        let hw = presets::mcm_2x2();
+        let geom = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 4);
+        assert_eq!(r.ddr_bytes, 4 * geom.slice_bytes);
+    }
+
+    #[test]
+    fn ring_visits_every_station() {
+        let r = run(vec![vec![2, 2, 2, 2]], 4);
+        let hw = presets::mcm_2x2();
+        let geom = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 4);
+        // each of 4 slices forwarded 3 times
+        assert_eq!(r.d2d_bytes, 4 * 3 * geom.slice_bytes);
+        assert_eq!(r.ddr_bytes, 4 * geom.slice_bytes);
+        // every chiplet computed every slice once: 4 compute spans each
+        for c in 0..4 {
+            let spans = r
+                .timeline
+                .spans
+                .iter()
+                .filter(|s| s.chiplet == c && s.kind == ActivityKind::Compute)
+                .count();
+            assert_eq!(spans, 4, "chiplet {c}");
+        }
+    }
+
+    #[test]
+    fn uneven_tokens_still_complete() {
+        let r = run(vec![vec![9, 1, 0, 3]], 8);
+        let hw = presets::mcm_2x2();
+        let geom = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 8);
+        // trajectory has 3 stations: 8 slices * 2 forwards
+        assert_eq!(r.d2d_bytes, 8 * 2 * geom.slice_bytes);
+    }
+
+    #[test]
+    fn multiple_experts_fused() {
+        let r = run(
+            vec![
+                vec![8, 8, 8, 8], // hot
+                vec![1, 0, 0, 0], // cold
+                vec![0, 2, 0, 2],
+                vec![3, 3, 0, 0],
+            ],
+            4,
+        );
+        assert!(r.makespan > 0);
+        assert!(r.scheduler_decisions >= 2);
+        // hot expert compute happened on all chiplets
+        assert!(r.timeline.utilization(r.makespan) > 0.0);
+    }
+
+    #[test]
+    fn memory_bounded_by_capacity_plus_overcommit() {
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, 8);
+        let wl = workload(vec![vec![4, 4, 4, 4], vec![2, 2, 2, 2], vec![1, 1, 1, 1]]);
+        let groups = paired_order(&wl);
+        let r = run_layer(&hw, &geom, &wl, &groups, cfg(8));
+        assert!(
+            r.max_chiplet_peak_bytes <= hw.weight_buffer_bytes + geom.slice_bytes,
+            "peak {} exceeds cap {} + slice",
+            r.max_chiplet_peak_bytes,
+            hw.weight_buffer_bytes
+        );
+    }
+
+    #[test]
+    fn tiny_buffer_still_drains() {
+        // Pathologically small buffer: only one slice fits. The emergency
+        // overcommit keeps the ring live; everything must still finish.
+        let mut hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, 4);
+        hw.weight_buffer_bytes = geom.slice_bytes + 1;
+        let wl = workload(vec![vec![2, 2, 2, 2], vec![1, 1, 1, 1]]);
+        let groups = paired_order(&wl);
+        let r = run_layer(&hw, &geom, &wl, &groups, cfg(4));
+        assert!(r.makespan > 0);
+    }
+
+    #[test]
+    fn rule5_also_completes() {
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, 4);
+        let wl = workload(vec![vec![5, 3, 1, 0], vec![1, 1, 4, 4]]);
+        let groups = paired_order(&wl);
+        let c = FlowConfig { num_slices: 4, rule5: true, record_spans: false };
+        let r = run_layer(&hw, &geom, &wl, &groups, c);
+        assert_eq!(r.ddr_bytes, 2 * 4 * geom.slice_bytes);
+    }
+
+    #[test]
+    fn empty_workload_is_zero() {
+        let hw = presets::mcm_2x2();
+        let geom = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 4);
+        let wl = workload(vec![vec![0, 0, 0, 0]]);
+        let r = run_layer(&hw, &geom, &wl, &[], cfg(4));
+        assert_eq!(r.makespan, 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(vec![vec![3, 1, 4, 1], vec![5, 9, 2, 6]], 4);
+        let b = run(vec![vec![3, 1, 4, 1], vec![5, 9, 2, 6]], 4);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.d2d_bytes, b.d2d_bytes);
+        assert_eq!(a.package_peak_weight_bytes, b.package_peak_weight_bytes);
+    }
+
+    #[test]
+    fn paired_and_sequential_do_identical_work() {
+        // Group order must never change WHAT is computed/moved — only when.
+        // (Performance ordering between A2/A3 is measured at realistic
+        // scale in the Fig 15 ablation experiment.)
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, 8);
+        let counts = vec![
+            vec![16, 16, 16, 16],
+            vec![1, 0, 0, 0],
+            vec![0, 1, 0, 0],
+            vec![0, 0, 1, 0],
+            vec![0, 0, 0, 1],
+            vec![12, 12, 12, 12],
+        ];
+        let wl = workload(counts);
+        let paired = run_layer(&hw, &geom, &wl, &paired_order(&wl), cfg(8));
+        let seq = run_layer(&hw, &geom, &wl, &sequential_order(&wl), cfg(8));
+        assert_eq!(paired.ddr_bytes, seq.ddr_bytes);
+        assert_eq!(paired.d2d_bytes, seq.d2d_bytes);
+        let compute = |r: &LayerRun| -> u64 {
+            (0..4).map(|c| r.timeline.compute_busy(c)).sum()
+        };
+        assert_eq!(compute(&paired), compute(&seq));
+    }
+
+    #[test]
+    fn finer_slices_lower_peak_memory() {
+        let coarse = run(vec![vec![4, 4, 4, 4], vec![2, 2, 2, 2]], 2);
+        let fine = run(vec![vec![4, 4, 4, 4], vec![2, 2, 2, 2]], 8);
+        assert!(
+            fine.max_chiplet_peak_bytes < coarse.max_chiplet_peak_bytes,
+            "fine {} vs coarse {}",
+            fine.max_chiplet_peak_bytes,
+            coarse.max_chiplet_peak_bytes
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! The L3 coordination layer: the paper's contribution.
+//!
+//! * `trajectory` — expert trajectories over the mesh (§IV-C).
+//! * `flow` — the micro-slice streaming engine: virtualization Rules 1–5
+//!   with backpressure, flow fusion, and DDR/D2D overlap (§IV).
+//! * `paired_load` — hot/cold expert pairing (§IV-A).
+//! * `scheduler` glue — Algorithm 1 lives inside `flow::FlowEngine`
+//!   (`decide`), charged through the `hw_scheduler` cost model (§V-B).
+//! * `token_buffer` — Algorithm 2 QoS-slack deferral (§V-A).
+//!
+//! `Strategy` is the interface every parallelization scheme implements
+//! (FSE-DP variants here, EP/Hydra/naive in `baselines`).
+
+pub mod flow;
+pub mod hw_scheduler;
+pub mod paired_load;
+pub mod token_buffer;
+pub mod trajectory;
+
+pub use flow::{FlowConfig, LayerRun};
+pub use token_buffer::TokenBufferPolicy;
+pub use trajectory::Trajectory;
+
+use crate::config::{HardwareConfig, StrategyKind};
+use crate::moe::ExpertGeometry;
+use crate::sim::Timeline;
+use crate::workload::LayerWorkload;
+
+/// Everything a strategy needs to simulate one MoE layer.
+pub struct LayerCtx<'a> {
+    pub hw: &'a HardwareConfig,
+    pub geom: &'a ExpertGeometry,
+    pub workload: &'a LayerWorkload,
+    pub record_spans: bool,
+}
+
+/// Uniform per-layer outcome across strategies.
+#[derive(Clone, Debug)]
+pub struct LayerResult {
+    pub makespan: u64,
+    pub timeline: Timeline,
+    /// Peak on-chip weight bytes, summed over chiplets.
+    pub weight_peak_bytes: u64,
+    /// Peak on-chip token/activation bytes, summed over chiplets
+    /// (replication counted — EP/TP token copies show up here).
+    pub token_peak_bytes: u64,
+    pub ddr_bytes: u64,
+    pub d2d_bytes: u64,
+    pub scheduler_cycles: u64,
+    /// Roofline lower bound for this layer (see `roofline_bound_cycles`).
+    pub bound_cycles: u64,
+}
+
+impl LayerResult {
+    /// Hardware utilization as the paper reports it: achieved latency
+    /// normalized by the layer's roofline bound (the bottleneck-resource
+    /// efficiency — at low batch that bottleneck is DDR, so 100% means the
+    /// schedule fully hid everything behind the unavoidable weight stream).
+    pub fn utilization(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        (self.bound_cycles as f64 / self.makespan as f64).min(1.0)
+    }
+
+    /// Raw PE-array busy fraction (the Fig 11 fluctuation metric).
+    pub fn compute_utilization(&self) -> f64 {
+        self.timeline.utilization(self.makespan)
+    }
+
+    pub fn total_onchip_peak(&self) -> u64 {
+        self.weight_peak_bytes + self.token_peak_bytes
+    }
+}
+
+/// Roofline lower bound of one layer: every activated expert must stream
+/// from DDR once (aggregate-bandwidth bound) and every routed token-expert
+/// product must run on the PE arrays (compute bound). No schedule can beat
+/// `max` of the two; utilization is measured against it.
+pub fn roofline_bound_cycles(
+    hw: &HardwareConfig,
+    geom: &crate::moe::ExpertGeometry,
+    wl: &LayerWorkload,
+) -> u64 {
+    let total_bytes = wl.experts.len() as u64 * geom.expert_bytes;
+    let channels = hw.ddr.channels.min(hw.n_chiplets()) as f64;
+    let ddr = total_bytes as f64 / (hw.ddr_bytes_per_cycle() * channels);
+    let macs: u64 = wl
+        .experts
+        .iter()
+        .map(|e| e.total as u64 * geom.expert_macs_per_token)
+        .sum();
+    let compute = macs as f64 / (hw.macs_per_die as f64 * hw.n_chiplets() as f64);
+    ddr.max(compute).ceil() as u64
+}
+
+/// A parallelization strategy under evaluation. Strategies may carry
+/// cross-layer state (Hydra's popularity EMA), hence `&mut self`.
+pub trait Strategy {
+    fn kind(&self) -> StrategyKind;
+    fn run_layer(&mut self, ctx: &LayerCtx) -> LayerResult;
+
+    /// Reset cross-layer state between independent runs.
+    fn reset(&mut self) {}
+}
+
+/// FSE-DP under micro-slice flow: ablations A2 (sequential), A3 (paired),
+/// A4 (paired + Rule 5). A5 (token buffering) composes at the engine level
+/// on top of A3.
+pub struct FseDpStrategy {
+    kind: StrategyKind,
+    pub num_slices: usize,
+}
+
+impl FseDpStrategy {
+    pub fn new(kind: StrategyKind, num_slices: usize) -> Self {
+        assert!(matches!(
+            kind,
+            StrategyKind::FseDp
+                | StrategyKind::FseDpPaired
+                | StrategyKind::FseDpRule5
+                | StrategyKind::FseDpBuffered
+        ));
+        FseDpStrategy { kind, num_slices }
+    }
+}
+
+impl Strategy for FseDpStrategy {
+    fn kind(&self) -> StrategyKind {
+        self.kind
+    }
+
+    fn run_layer(&mut self, ctx: &LayerCtx) -> LayerResult {
+        let groups = match self.kind {
+            StrategyKind::FseDp => paired_load::sequential_order(ctx.workload),
+            _ => paired_load::paired_order(ctx.workload),
+        };
+        let cfg = FlowConfig {
+            num_slices: self.num_slices,
+            rule5: self.kind == StrategyKind::FseDpRule5,
+            record_spans: ctx.record_spans,
+        };
+        let run = flow::run_layer(ctx.hw, ctx.geom, ctx.workload, &groups, cfg);
+        // FSE-DP keeps exactly one copy of each token package-wide: the
+        // local shard plus the per-expert activation accumulators.
+        let token_peak = ctx.workload.total_tokens as u64 * ctx.geom.token_bytes * 2;
+        LayerResult {
+            makespan: run.makespan,
+            weight_peak_bytes: run.package_peak_weight_bytes,
+            token_peak_bytes: token_peak,
+            ddr_bytes: run.ddr_bytes,
+            d2d_bytes: run.d2d_bytes,
+            scheduler_cycles: run.scheduler_cycles,
+            bound_cycles: roofline_bound_cycles(ctx.hw, ctx.geom, ctx.workload),
+            timeline: run.timeline,
+        }
+    }
+}
+
+/// Construct any strategy by kind (single factory used by experiments,
+/// benches, and the CLI).
+pub fn make_strategy(kind: StrategyKind, num_slices: usize) -> Box<dyn Strategy> {
+    match kind {
+        StrategyKind::Ep => Box::new(crate::baselines::EpStrategy::new(false)),
+        StrategyKind::Hydra => Box::new(crate::baselines::EpStrategy::new(true)),
+        StrategyKind::FseDpNaive => Box::new(crate::baselines::NaiveFseDpStrategy::new()),
+        k => Box::new(FseDpStrategy::new(k, num_slices)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::Dataset;
+    use crate::workload::{shard_layer, TraceGenerator};
+    use std::collections::HashSet;
+
+    fn ctx_workload(tokens: usize) -> (HardwareConfig, ExpertGeometry, LayerWorkload) {
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, 8);
+        let mut gen = TraceGenerator::new(&model, Dataset::C4, 5);
+        let it = gen.iteration(0, tokens);
+        let wl = shard_layer(
+            &it.layers[0],
+            model.n_experts + model.n_shared,
+            hw.n_chiplets(),
+            &HashSet::new(),
+        );
+        (hw, geom, wl)
+    }
+
+    #[test]
+    fn all_strategies_run_a_real_layer() {
+        let (hw, geom, wl) = ctx_workload(64);
+        for &kind in crate::config::StrategyKind::all() {
+            let mut s = make_strategy(kind, 8);
+            let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+            let r = s.run_layer(&ctx);
+            assert!(r.makespan > 0, "{}", kind.name());
+            assert!(r.ddr_bytes > 0, "{}", kind.name());
+            let u = r.utilization();
+            assert!((0.0..=1.0).contains(&u), "{} utilization {u}", kind.name());
+        }
+    }
+
+    #[test]
+    fn fsedp_memory_below_ep_qwen() {
+        // Fig 12 compares *required* memory: FSE-DP's buffer occupancy is
+        // elastic (it prefetches into whatever SRAM exists), so the honest
+        // FSE-DP point is the compressed 8 MB/die configuration — which
+        // still achieves comparable performance — versus what EP requires.
+        let (hw, geom, wl) = ctx_workload(64);
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+        let ep = make_strategy(StrategyKind::Ep, 8).run_layer(&ctx);
+
+        let mut hw_small = hw.clone();
+        hw_small.weight_buffer_bytes = 8 * 1024 * 1024;
+        let ctx_small = LayerCtx { hw: &hw_small, geom: &geom, workload: &wl, record_spans: false };
+        let fse = make_strategy(StrategyKind::FseDpPaired, 8).run_layer(&ctx_small);
+        assert!(
+            (fse.total_onchip_peak() as f64) < ep.total_onchip_peak() as f64 * 0.65,
+            "fse {} vs ep {}",
+            fse.total_onchip_peak(),
+            ep.total_onchip_peak()
+        );
+        // Elasticity: the compressed buffer costs little performance.
+        let fse_big = make_strategy(StrategyKind::FseDpPaired, 8).run_layer(&ctx);
+        assert!(
+            (fse.makespan as f64) < fse_big.makespan as f64 * 1.3,
+            "8 MB/die config too slow: {} vs {}",
+            fse.makespan,
+            fse_big.makespan
+        );
+    }
+
+    #[test]
+    fn fsedp_memory_far_below_ep_phi() {
+        // Fig 12's headline case: with Phi-3.5's 75 MiB experts, EP's
+        // double-buffered full experts dwarf FSE-DP's streamed slices
+        // (paper: up to 78.8% saved ⇒ > 4x).
+        let hw = presets::mcm_2x2();
+        let model = presets::phi35_moe();
+        let slices = crate::moe::default_num_slices(&model, &hw);
+        let geom = ExpertGeometry::new(&model, &hw, slices);
+        let mut gen = TraceGenerator::new(&model, Dataset::C4, 5);
+        let it = gen.iteration(0, 64);
+        let wl = shard_layer(
+            &it.layers[0],
+            model.n_experts + model.n_shared,
+            hw.n_chiplets(),
+            &HashSet::new(),
+        );
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+        let fse = make_strategy(StrategyKind::FseDpPaired, slices).run_layer(&ctx);
+        let ep = make_strategy(StrategyKind::Ep, slices).run_layer(&ctx);
+        assert!(
+            fse.total_onchip_peak() * 4 < ep.total_onchip_peak(),
+            "fse {} vs ep {}",
+            fse.total_onchip_peak(),
+            ep.total_onchip_peak()
+        );
+    }
+
+    #[test]
+    fn fsedp_faster_than_ep_low_batch() {
+        // The headline Fig 9 shape at low batch.
+        let (hw, geom, wl) = ctx_workload(64);
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+        let fse = make_strategy(StrategyKind::FseDpPaired, 8).run_layer(&ctx);
+        let ep = make_strategy(StrategyKind::Ep, 8).run_layer(&ctx);
+        assert!(
+            fse.makespan < ep.makespan,
+            "fse {} vs ep {}",
+            fse.makespan,
+            ep.makespan
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! Paired-load policy (paper §IV-A, Fig 5): sort experts by token count
+//! and pair opposite ends of the list — a hot (compute-bound) expert fuses
+//! with a cold (communication-bound) one so their micro-slice flows
+//! complement each other.
+
+use crate::moe::ExpertId;
+use crate::workload::LayerWorkload;
+
+/// A scheduling unit: one or two experts launched together.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExpertGroup {
+    pub experts: Vec<ExpertId>,
+}
+
+impl ExpertGroup {
+    fn one(e: ExpertId) -> Self {
+        ExpertGroup { experts: vec![e] }
+    }
+
+    fn pair(hot: ExpertId, cold: ExpertId) -> Self {
+        ExpertGroup { experts: vec![hot, cold] }
+    }
+}
+
+/// Paired order: sort descending by token count; pair (hottest, coldest),
+/// (2nd hottest, 2nd coldest), … A leftover middle expert forms a
+/// singleton. Groups are emitted hottest-pair first.
+pub fn paired_order(workload: &LayerWorkload) -> Vec<ExpertGroup> {
+    let mut by_load: Vec<(u32, ExpertId)> =
+        workload.experts.iter().map(|l| (l.total, l.expert)).collect();
+    // Descending tokens; expert id tiebreak for determinism.
+    by_load.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+
+    let n = by_load.len();
+    let mut groups = Vec::with_capacity(n / 2 + 1);
+    let mut lo = 0usize;
+    let mut hi = n;
+    while lo + 1 < hi {
+        groups.push(ExpertGroup::pair(by_load[lo].1, by_load[hi - 1].1));
+        lo += 1;
+        hi -= 1;
+    }
+    if lo < hi {
+        groups.push(ExpertGroup::one(by_load[lo].1));
+    }
+    groups
+}
+
+/// Unpaired order (ablation A2): experts sorted descending by token count,
+/// one per group — fine-grained flows but no hot/cold complementarity.
+pub fn sequential_order(workload: &LayerWorkload) -> Vec<ExpertGroup> {
+    let mut by_load: Vec<(u32, ExpertId)> =
+        workload.experts.iter().map(|l| (l.total, l.expert)).collect();
+    by_load.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    by_load.into_iter().map(|(_, e)| ExpertGroup::one(e)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ExpertLoad, LayerWorkload};
+
+    fn wl(counts: &[u32]) -> LayerWorkload {
+        LayerWorkload {
+            experts: counts
+                .iter()
+                .enumerate()
+                .map(|(e, &c)| ExpertLoad {
+                    expert: e as ExpertId,
+                    tokens_per_chiplet: vec![c],
+                    total: c,
+                })
+                .collect(),
+            n_chiplets: 1,
+            total_tokens: counts.iter().sum(),
+        }
+    }
+
+    #[test]
+    fn pairs_opposite_ends() {
+        // tokens: e0=5, e1=40, e2=7, e3=1 -> sorted [e1,e2,e0,e3]
+        let groups = paired_order(&wl(&[5, 40, 7, 1]));
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].experts, vec![1, 3]); // hottest + coldest
+        assert_eq!(groups[1].experts, vec![2, 0]);
+    }
+
+    #[test]
+    fn odd_count_leaves_middle_singleton() {
+        let groups = paired_order(&wl(&[10, 20, 30, 40, 50]));
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[2].experts.len(), 1);
+        // middle by load: e2 (30)
+        assert_eq!(groups[2].experts[0], 2);
+    }
+
+    #[test]
+    fn single_expert_layer() {
+        let groups = paired_order(&wl(&[9]));
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].experts, vec![0]);
+    }
+
+    #[test]
+    fn every_expert_exactly_once() {
+        let groups = paired_order(&wl(&[3, 1, 4, 1, 5, 9, 2, 6]));
+        let mut seen: Vec<ExpertId> =
+            groups.iter().flat_map(|g| g.experts.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_is_descending() {
+        let groups = sequential_order(&wl(&[3, 9, 1]));
+        let order: Vec<ExpertId> = groups.iter().map(|g| g.experts[0]).collect();
+        assert_eq!(order, vec![1, 0, 2]);
+        assert!(groups.iter().all(|g| g.experts.len() == 1));
+    }
+
+    #[test]
+    fn deterministic_tiebreak() {
+        let a = paired_order(&wl(&[5, 5, 5, 5]));
+        let b = paired_order(&wl(&[5, 5, 5, 5]));
+        assert_eq!(a, b);
+        assert_eq!(a[0].experts, vec![0, 3]);
+    }
+}

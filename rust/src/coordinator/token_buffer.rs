@@ -1,0 +1,214 @@
+//! Token buffering (paper Algorithm 2): per-request QoS-slack deferral at
+//! MoE layer boundaries.
+//!
+//! After gating and before scheduling a layer's experts, a request whose
+//! tokens hit an extremely cold expert may be paused at that layer (its
+//! activations held) and resumed in a later iteration, provided its QoS
+//! timer has slack. The timer earns one deferral credit per
+//! `n_threshold` consecutive undeferred forward passes and spends one per
+//! deferral — bounding added latency to roughly `1/n_threshold` of total
+//! completion time (the paper's 10/20/30% slackness levels).
+
+use crate::workload::LayerGating;
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Debug)]
+struct RequestQos {
+    timer: u32,
+    consecutive_fw: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TokenBufferPolicy {
+    /// Minimum token count below which an expert counts as "extremely
+    /// cold" (θ_min).
+    pub theta_min: u32,
+    /// Forward passes needed to earn one deferral credit (N_threshold).
+    /// `slack = 1 / n_threshold` — 10% slack ⇒ 10.
+    pub n_threshold: u32,
+    state: HashMap<u32, RequestQos>,
+    pub deferrals: u64,
+}
+
+impl TokenBufferPolicy {
+    pub fn new(theta_min: u32, n_threshold: u32) -> Self {
+        assert!(n_threshold > 0);
+        TokenBufferPolicy { theta_min, n_threshold, state: HashMap::new(), deferrals: 0 }
+    }
+
+    /// Policy from a slackness fraction (0.10 / 0.20 / 0.30 in the paper).
+    pub fn from_slack(theta_min: u32, slack: f64) -> Self {
+        assert!(slack > 0.0 && slack < 1.0);
+        Self::new(theta_min, (1.0 / slack).round().max(1.0) as u32)
+    }
+
+    /// Called once per request per forward pass (before the first layer):
+    /// advances `C_fw` and banks a credit when the threshold is reached.
+    pub fn on_forward_pass(&mut self, request_id: u32) {
+        let q = self
+            .state
+            .entry(request_id)
+            .or_insert(RequestQos { timer: 0, consecutive_fw: 0 });
+        q.consecutive_fw += 1;
+        if q.consecutive_fw >= self.n_threshold {
+            q.timer += 1;
+            q.consecutive_fw = 0;
+        }
+    }
+
+    /// Algorithm 2 decision at one MoE layer boundary: which requests are
+    /// deferred at this layer this iteration. `gating` is the layer's
+    /// post-gate token→experts map; `already_deferred` are requests paused
+    /// at an earlier layer of the same iteration (their tokens never reach
+    /// this layer).
+    pub fn decide_layer(
+        &mut self,
+        gating: &LayerGating,
+        n_experts_total: usize,
+        already_deferred: &HashSet<u32>,
+    ) -> HashSet<u32> {
+        // n_e across all active requests at this layer.
+        let mut counts = vec![0u32; n_experts_total];
+        for tg in &gating.tokens {
+            if already_deferred.contains(&tg.request_id) {
+                continue;
+            }
+            for &e in &tg.experts {
+                counts[e as usize] += 1;
+            }
+        }
+        // A request defers iff ∃ activated expert with n_e < θ_min and its
+        // timer has credit.
+        let mut newly = HashSet::new();
+        for tg in &gating.tokens {
+            if already_deferred.contains(&tg.request_id) || newly.contains(&tg.request_id) {
+                continue;
+            }
+            let cold = tg.experts.iter().any(|&e| counts[e as usize] < self.theta_min);
+            if !cold {
+                continue;
+            }
+            if let Some(q) = self.state.get_mut(&tg.request_id) {
+                if q.timer > 0 {
+                    q.timer -= 1;
+                    q.consecutive_fw = 0;
+                    newly.insert(tg.request_id);
+                    self.deferrals += 1;
+                }
+            }
+        }
+        newly
+    }
+
+    pub fn timer_of(&self, request_id: u32) -> u32 {
+        self.state.get(&request_id).map(|q| q.timer).unwrap_or(0)
+    }
+
+    /// Drop state of finished requests.
+    pub fn retire(&mut self, request_id: u32) {
+        self.state.remove(&request_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ExpertId;
+    use crate::workload::TokenGate;
+
+    fn gating(tokens: &[(u32, Vec<ExpertId>)]) -> LayerGating {
+        LayerGating {
+            tokens: tokens
+                .iter()
+                .map(|(r, e)| TokenGate { request_id: *r, experts: e.clone() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn timer_earns_credit_after_threshold() {
+        let mut p = TokenBufferPolicy::new(2, 5);
+        for _ in 0..4 {
+            p.on_forward_pass(1);
+            assert_eq!(p.timer_of(1), 0);
+        }
+        p.on_forward_pass(1);
+        assert_eq!(p.timer_of(1), 1);
+    }
+
+    #[test]
+    fn defers_only_with_credit_and_cold_expert() {
+        let mut p = TokenBufferPolicy::new(2, 1);
+        let g = gating(&[(1, vec![0]), (2, vec![1]), (3, vec![1])]);
+        // No forward passes yet -> no credit -> no deferrals.
+        let d = p.decide_layer(&g, 4, &HashSet::new());
+        assert!(d.is_empty());
+        // Earn credit; expert 0 has n_e = 1 < θ_min=2 -> request 1 defers.
+        p.on_forward_pass(1);
+        p.on_forward_pass(2);
+        p.on_forward_pass(3);
+        let d = p.decide_layer(&g, 4, &HashSet::new());
+        assert_eq!(d, HashSet::from([1]));
+        assert_eq!(p.timer_of(1), 0, "credit spent");
+        assert_eq!(p.deferrals, 1);
+    }
+
+    #[test]
+    fn hot_expert_requests_never_defer() {
+        let mut p = TokenBufferPolicy::new(2, 1);
+        for r in 1..=3 {
+            p.on_forward_pass(r);
+        }
+        // all requests share hot expert 1 (n=3 >= 2)
+        let g = gating(&[(1, vec![1]), (2, vec![1]), (3, vec![1])]);
+        assert!(p.decide_layer(&g, 4, &HashSet::new()).is_empty());
+    }
+
+    #[test]
+    fn already_deferred_excluded_from_counts_and_decisions() {
+        let mut p = TokenBufferPolicy::new(2, 1);
+        for r in 1..=2 {
+            p.on_forward_pass(r);
+        }
+        // request 1 already deferred upstream; its token on expert 0 does
+        // not count, leaving request 2's expert-0 token cold (n=1 < 2).
+        let g = gating(&[(1, vec![0]), (2, vec![0])]);
+        let upstream = HashSet::from([1]);
+        let d = p.decide_layer(&g, 4, &upstream);
+        assert_eq!(d, HashSet::from([2]));
+    }
+
+    #[test]
+    fn slack_to_threshold() {
+        assert_eq!(TokenBufferPolicy::from_slack(2, 0.10).n_threshold, 10);
+        assert_eq!(TokenBufferPolicy::from_slack(2, 0.20).n_threshold, 5);
+        assert_eq!(TokenBufferPolicy::from_slack(2, 0.30).n_threshold, 3);
+    }
+
+    #[test]
+    fn deferral_budget_bounded_by_slack() {
+        // Over many passes, deferrals/pass ≤ slack (credits are earned at
+        // rate 1/n_threshold and each deferral spends one).
+        let mut p = TokenBufferPolicy::new(100, 5); // θ huge: always cold
+        let g = gating(&[(7, vec![0])]);
+        let mut deferred_count = 0;
+        let passes = 100;
+        for _ in 0..passes {
+            p.on_forward_pass(7);
+            if !p.decide_layer(&g, 1, &HashSet::new()).is_empty() {
+                deferred_count += 1;
+            }
+        }
+        assert!(deferred_count <= passes / 5 + 1, "{deferred_count}");
+        assert!(deferred_count >= passes / 5 - 1, "{deferred_count}");
+    }
+
+    #[test]
+    fn retire_clears_state() {
+        let mut p = TokenBufferPolicy::new(2, 1);
+        p.on_forward_pass(9);
+        assert_eq!(p.timer_of(9), 1);
+        p.retire(9);
+        assert_eq!(p.timer_of(9), 0);
+    }
+}

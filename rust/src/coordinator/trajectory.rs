@@ -1,0 +1,136 @@
+//! Expert trajectories: the ordered ring of chiplets an expert's
+//! micro-slices stream along (paper §IV-C).
+//!
+//! A trajectory visits exactly the chiplets that hold tokens activating the
+//! expert. Order is the mesh snake order, so consecutive logical hops are
+//! physical neighbors (1 hop) wherever possible; trajectories are decided
+//! per expert per scheduling iteration and fixed for all of its
+//! micro-slices (the paper explicitly avoids per-micro-slice dynamic paths).
+
+use crate::moe::ExpertId;
+use crate::sim::{ChipletId, Mesh};
+use crate::workload::ExpertLoad;
+
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub expert: ExpertId,
+    /// Visited chiplets in ring order.
+    pub chiplets: Vec<ChipletId>,
+    /// Token count at each trajectory position (parallel to `chiplets`).
+    pub tokens: Vec<u32>,
+}
+
+impl Trajectory {
+    /// Build the trajectory for one expert from its per-chiplet load,
+    /// ordering by mesh snake rank.
+    pub fn for_expert(load: &ExpertLoad, mesh: &Mesh) -> Trajectory {
+        let rank = mesh.snake_rank();
+        let mut stations: Vec<(usize, ChipletId, u32)> = load
+            .tokens_per_chiplet
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t > 0)
+            .map(|(c, &t)| (rank[c], c, t))
+            .collect();
+        stations.sort_unstable();
+        Trajectory {
+            expert: load.expert,
+            chiplets: stations.iter().map(|&(_, c, _)| c).collect(),
+            tokens: stations.iter().map(|&(_, _, t)| t).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.chiplets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chiplets.is_empty()
+    }
+
+    /// Position of a chiplet on the trajectory.
+    pub fn position_of(&self, c: ChipletId) -> Option<usize> {
+        self.chiplets.iter().position(|&x| x == c)
+    }
+
+    /// Ring successor of trajectory position `pos`.
+    pub fn next_pos(&self, pos: usize) -> usize {
+        (pos + 1) % self.chiplets.len()
+    }
+
+    /// Total token count across stations.
+    pub fn total_tokens(&self) -> u32 {
+        self.tokens.iter().sum()
+    }
+
+    /// Mean physical hops per ring step (1.0 when the snake order keeps
+    /// every step adjacent; >1 when the token set is sparse on the mesh).
+    pub fn mean_hops(&self, mesh: &Mesh) -> f64 {
+        if self.chiplets.len() < 2 {
+            return 0.0;
+        }
+        let mut total = 0usize;
+        for i in 0..self.chiplets.len() {
+            let j = self.next_pos(i);
+            total += mesh.hops(self.chiplets[i], self.chiplets[j]);
+        }
+        total as f64 / self.chiplets.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workload::ExpertLoad;
+
+    fn mesh(n: usize) -> Mesh {
+        Mesh::new(&presets::mcm_nxn(n))
+    }
+
+    fn load(tokens: Vec<u32>) -> ExpertLoad {
+        let total = tokens.iter().sum();
+        ExpertLoad { expert: 0, tokens_per_chiplet: tokens, total }
+    }
+
+    #[test]
+    fn only_token_holding_chiplets() {
+        let t = Trajectory::for_expert(&load(vec![3, 0, 5, 0]), &mesh(2));
+        assert_eq!(t.chiplets, vec![0, 2]);
+        assert_eq!(t.tokens, vec![3, 5]);
+        assert_eq!(t.total_tokens(), 8);
+    }
+
+    #[test]
+    fn snake_order_on_2x2() {
+        // 2x2 snake: 0,1,3,2
+        let t = Trajectory::for_expert(&load(vec![1, 1, 1, 1]), &mesh(2));
+        assert_eq!(t.chiplets, vec![0, 1, 3, 2]);
+        assert!((t.mean_hops(&mesh(2)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_successor_wraps() {
+        let t = Trajectory::for_expert(&load(vec![1, 1, 1, 1]), &mesh(2));
+        assert_eq!(t.next_pos(0), 1);
+        assert_eq!(t.next_pos(3), 0);
+        assert_eq!(t.position_of(3), Some(2));
+        assert_eq!(t.position_of(9), None);
+    }
+
+    #[test]
+    fn single_station_trajectory() {
+        let t = Trajectory::for_expert(&load(vec![0, 7, 0, 0]), &mesh(2));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.next_pos(0), 0);
+    }
+
+    #[test]
+    fn snake_keeps_full_ring_adjacent_on_4x4() {
+        let m = mesh(4);
+        let t = Trajectory::for_expert(&load(vec![1; 16]), &m);
+        // all steps except the wrap are 1 hop; wrap on 4x4 snake is 3 hops
+        // (12 -> 0 is 3 rows up); mean stays below 1.2
+        assert!(t.mean_hops(&m) < 1.3, "mean hops {}", t.mean_hops(&m));
+    }
+}

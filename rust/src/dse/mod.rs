@@ -1,0 +1,225 @@
+//! Design-space exploration (paper §VI-D): sweeps over buffer size, DDR
+//! bandwidth, and D2D bandwidth, with the area/power feasibility
+//! constraints of Eq (1)–(2).
+
+use crate::config::{Dataset, HardwareConfig, MoeModelConfig, StrategyKind};
+use crate::engine::timing::{E2eConfig, E2eSimulator};
+
+/// Per-component area/power coefficients used by the feasibility model.
+/// Values are anchored on the paper's figures: UCIe ×32 module ≈ 288 GB/s
+/// at a few mm², compute die 2.69×4.72 mm² = 12.7 mm², SRAM ≈ 0.45 mm²/MB
+/// in 5 nm, package power envelope 60 W, die area cap 30 mm².
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// mm² per UCIe module (one module ⇒ 288 GB/s of D2D).
+    pub ucie_area_mm2: f64,
+    pub ucie_gbps: f64,
+    /// mm² of the compute logic (PE array + NLU + DMU + router).
+    pub compute_area_mm2: f64,
+    /// mm² per MB of on-chip SRAM buffer.
+    pub sram_area_mm2_per_mb: f64,
+    /// Die area budget A_th (Eq 1).
+    pub area_th_mm2: f64,
+    /// W per compute die at full tilt.
+    pub compute_w: f64,
+    /// W per 100 GB/s of D2D traffic capability.
+    pub d2d_w_per_100gbps: f64,
+    /// W per 25.6 GB/s DDR channel.
+    pub ddr_w_per_channel: f64,
+    /// Package power budget P_th (Eq 2).
+    pub power_th_w: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            ucie_area_mm2: 4.0,
+            ucie_gbps: 288.0,
+            compute_area_mm2: 12.7,
+            sram_area_mm2_per_mb: 0.45,
+            area_th_mm2: 30.0,
+            compute_w: 2.2,
+            d2d_w_per_100gbps: 0.6,
+            ddr_w_per_channel: 1.2,
+            power_th_w: 60.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// Eq (1): per-chiplet area = ⌈BW_D2D/BW_UCIe⌉·A_UCIe + A_compute + A_buffer.
+    pub fn chiplet_area_mm2(&self, hw: &HardwareConfig) -> f64 {
+        let modules = (hw.d2d.gbps_per_link / self.ucie_gbps).ceil();
+        let buffer_mb =
+            (hw.weight_buffer_bytes + hw.token_buffer_bytes) as f64 / (1024.0 * 1024.0);
+        modules * self.ucie_area_mm2
+            + self.compute_area_mm2
+            + buffer_mb * self.sram_area_mm2_per_mb
+    }
+
+    /// Eq (2): package power = P_compute + P_D2D + P_DDR.
+    pub fn package_power_w(&self, hw: &HardwareConfig) -> f64 {
+        let n = hw.n_chiplets() as f64;
+        let links = 2.0 * (hw.mesh_rows * (hw.mesh_cols - 1) + hw.mesh_cols * (hw.mesh_rows - 1))
+            as f64;
+        n * self.compute_w
+            + links * hw.d2d.gbps_per_link / 100.0 * self.d2d_w_per_100gbps
+            + hw.ddr.channels as f64 * self.ddr_w_per_channel
+    }
+
+    pub fn feasible(&self, hw: &HardwareConfig) -> bool {
+        self.chiplet_area_mm2(hw) <= self.area_th_mm2 && self.package_power_w(hw) <= self.power_th_w
+    }
+}
+
+/// One DSE sample point.
+#[derive(Clone, Debug)]
+pub struct DsePoint {
+    pub weight_buffer_mb: f64,
+    pub ddr_gbps_per_die: f64,
+    pub d2d_gbps: f64,
+    pub utilization: f64,
+    pub cycles: u64,
+    pub feasible: bool,
+}
+
+/// Evaluate one hardware point: mean MoE utilization of the FSE-DP engine
+/// over a few iterations (Fig 16's metric).
+pub fn evaluate_point(
+    model: &MoeModelConfig,
+    hw: &HardwareConfig,
+    dataset: Dataset,
+    tokens: usize,
+    iterations: usize,
+) -> (f64, u64) {
+    let cfg = E2eConfig { strategy: StrategyKind::FseDpPaired, ..Default::default() };
+    let mut sim = E2eSimulator::new(model, hw, dataset, cfg);
+    let r = sim.run(iterations, tokens);
+    (r.mean_utilization, r.total_cycles)
+}
+
+/// Fig 16(a): fixed D2D, sweep (weight buffer MB × per-die DDR GB/s).
+pub fn sweep_buffer_vs_ddr(
+    model: &MoeModelConfig,
+    base: &HardwareConfig,
+    buffers_mb: &[f64],
+    ddr_gbps: &[f64],
+    tokens: usize,
+    iterations: usize,
+) -> Vec<DsePoint> {
+    let cost = CostModel::default();
+    let mut out = Vec::new();
+    for &buf in buffers_mb {
+        for &ddr in ddr_gbps {
+            let mut hw = base.clone();
+            hw.weight_buffer_bytes = (buf * 1024.0 * 1024.0) as u64;
+            hw.ddr.gbps_per_channel = ddr; // one channel per die in 2×2
+            let (util, cycles) = evaluate_point(model, &hw, Dataset::C4, tokens, iterations);
+            out.push(DsePoint {
+                weight_buffer_mb: buf,
+                ddr_gbps_per_die: ddr,
+                d2d_gbps: hw.d2d.gbps_per_link,
+                utilization: util,
+                cycles,
+                feasible: cost.feasible(&hw),
+            });
+        }
+    }
+    out
+}
+
+/// Fig 16(b): fixed buffer, sweep (per-die DDR GB/s × D2D GB/s).
+pub fn sweep_ddr_vs_d2d(
+    model: &MoeModelConfig,
+    base: &HardwareConfig,
+    buffer_mb: f64,
+    ddr_gbps: &[f64],
+    d2d_gbps: &[f64],
+    tokens: usize,
+    iterations: usize,
+) -> Vec<DsePoint> {
+    let cost = CostModel::default();
+    let mut out = Vec::new();
+    for &ddr in ddr_gbps {
+        for &d2d in d2d_gbps {
+            let mut hw = base.clone();
+            hw.weight_buffer_bytes = (buffer_mb * 1024.0 * 1024.0) as u64;
+            hw.ddr.gbps_per_channel = ddr;
+            hw.d2d.gbps_per_link = d2d;
+            let (util, cycles) = evaluate_point(model, &hw, Dataset::C4, tokens, iterations);
+            out.push(DsePoint {
+                weight_buffer_mb: buffer_mb,
+                ddr_gbps_per_die: ddr,
+                d2d_gbps: d2d,
+                utilization: util,
+                cycles,
+                feasible: cost.feasible(&hw),
+            });
+        }
+    }
+    out
+}
+
+/// Fig 17: latency over (micro-slice count × weight-buffer size).
+pub fn sweep_granularity(
+    model: &MoeModelConfig,
+    base: &HardwareConfig,
+    slice_counts: &[usize],
+    buffers_mb: &[f64],
+    tokens: usize,
+    iterations: usize,
+) -> Vec<(usize, f64, u64)> {
+    let mut out = Vec::new();
+    for &slices in slice_counts {
+        for &buf in buffers_mb {
+            let mut hw = base.clone();
+            hw.weight_buffer_bytes = (buf * 1024.0 * 1024.0) as u64;
+            let cfg = E2eConfig {
+                strategy: StrategyKind::FseDpPaired,
+                num_slices: slices,
+                ..Default::default()
+            };
+            let mut sim = E2eSimulator::new(model, &hw, Dataset::C4, cfg);
+            let r = sim.run(iterations, tokens);
+            out.push((slices, buf, r.moe_cycles));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn test_chip_point_is_feasible() {
+        // The paper's star (16 MB + 24 MB? — our config: 16+8 MB, 288 GB/s,
+        // 25.6 GB/s/die) must satisfy Eq (1)-(2).
+        let cost = CostModel::default();
+        let hw = presets::mcm_2x2();
+        assert!(cost.feasible(&hw), "area {:.1} power {:.1}",
+            cost.chiplet_area_mm2(&hw), cost.package_power_w(&hw));
+    }
+
+    #[test]
+    fn extreme_points_infeasible() {
+        let cost = CostModel::default();
+        let mut hw = presets::mcm_2x2();
+        hw.weight_buffer_bytes = 64 * 1024 * 1024; // 64 MB SRAM: too big
+        assert!(!cost.feasible(&hw));
+        let mut hw2 = presets::mcm_2x2();
+        hw2.d2d.gbps_per_link = 2000.0; // 7 UCIe modules: too much area
+        assert!(!cost.feasible(&hw2));
+    }
+
+    #[test]
+    fn area_monotone_in_buffer() {
+        let cost = CostModel::default();
+        let mut a = presets::mcm_2x2();
+        let mut b = presets::mcm_2x2();
+        a.weight_buffer_bytes = 8 << 20;
+        b.weight_buffer_bytes = 32 << 20;
+        assert!(cost.chiplet_area_mm2(&a) < cost.chiplet_area_mm2(&b));
+    }
+}

@@ -1,0 +1,14 @@
+//! End-to-end engines.
+//!
+//! * `timing` — the evaluation engine: attention + 100-iteration MoE
+//!   forward passes over the *paper's* model shapes on the simulated
+//!   package, with token buffering (Fig 14/15).
+//! * `serve` — the numeric engine: serves real token batches through the
+//!   PJRT artifacts (toy model), scheduling experts exactly like the
+//!   timing path and cross-checking outputs against the native reference.
+
+pub mod serve;
+pub mod timing;
+
+pub use serve::{NumericEngine, ServeReport};
+pub use timing::{E2eConfig, E2eReport, E2eSimulator};

@@ -1,0 +1,247 @@
+//! Numeric serving engine: the end-to-end driver's core. Serves token
+//! batches through the AOT PJRT artifacts — gate, per-expert micro-slice
+//! FFN, attention — composing transformer blocks exactly like the L2 JAX
+//! graph, with the per-expert decomposition the coordinator schedules
+//! (gate → gather per expert → bucketed expert FFN → weighted combine).
+//! Every batch is cross-checked against the native f32 reference.
+
+use crate::runtime::artifacts::{ArtifactKind, Manifest};
+use crate::runtime::engine::{PjrtEngine, Tensor};
+use crate::runtime::reference;
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Seeded synthetic weights for the toy model the artifacts were built for.
+pub struct TinyMoeWeights {
+    pub wg: Tensor,
+    pub w1: Vec<Tensor>,
+    pub w3: Vec<Tensor>,
+    pub w2: Vec<Tensor>,
+    /// Per layer: [wq, wk, wv, wo].
+    pub attn: Vec<[Tensor; 4]>,
+    pub n_layers: usize,
+}
+
+impl TinyMoeWeights {
+    pub fn generate(m: &Manifest, n_layers: usize, seed: u64) -> TinyMoeWeights {
+        let c = &m.config;
+        let mut rng = Rng::new(seed);
+        let mut t = |shape: Vec<usize>, scale: f32| {
+            let n = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.normal_f32(scale)).collect())
+        };
+        let wg = t(vec![c.d_model, c.n_experts], 0.4);
+        let mut w1 = Vec::new();
+        let mut w3 = Vec::new();
+        let mut w2 = Vec::new();
+        for _ in 0..c.n_experts {
+            w1.push(t(vec![c.d_model, c.d_ffn], 0.08));
+            w3.push(t(vec![c.d_model, c.d_ffn], 0.08));
+            w2.push(t(vec![c.d_ffn, c.d_model], 0.08));
+        }
+        let attn = (0..n_layers)
+            .map(|_| {
+                [
+                    t(vec![c.d_model, c.d_model], 0.08),
+                    t(vec![c.d_model, c.d_model], 0.08),
+                    t(vec![c.d_model, c.d_model], 0.08),
+                    t(vec![c.d_model, c.d_model], 0.08),
+                ]
+            })
+            .collect();
+        TinyMoeWeights { wg, w1, w3, w2, attn, n_layers }
+    }
+}
+
+fn rmsnorm(x: &Tensor) -> Tensor {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let mut out = x.data.clone();
+    for i in 0..t {
+        let row = &x.data[i * d..(i + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for j in 0..d {
+            out[i * d + j] = row[j] * inv;
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    Tensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    )
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub tokens: usize,
+    pub layers: usize,
+    pub wallclock_ms: f64,
+    pub tokens_per_s: f64,
+    /// max |pjrt − native reference| over the final hidden states.
+    pub max_abs_err: f32,
+    pub expert_invocations: usize,
+    pub gate_invocations: usize,
+}
+
+pub struct NumericEngine {
+    engine: PjrtEngine,
+    pub weights: TinyMoeWeights,
+}
+
+impl NumericEngine {
+    pub fn new(artifacts_dir: &Path, n_layers: usize, seed: u64) -> Result<NumericEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = TinyMoeWeights::generate(&manifest, n_layers, seed);
+        let engine = PjrtEngine::new(manifest)?;
+        Ok(NumericEngine { engine, weights })
+    }
+
+    pub fn warm_up(&mut self) -> Result<usize> {
+        self.engine.warm_up()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.engine.manifest()
+    }
+
+    /// One MoE FFN sublayer via the serving decomposition: PJRT gate, then
+    /// one bucketed PJRT expert-FFN call per activated expert.
+    pub fn moe_sublayer(
+        &mut self,
+        x: &Tensor,
+        counters: &mut (usize, usize),
+    ) -> Result<Tensor> {
+        let cfg = self.engine.manifest().config.clone();
+        let t = x.shape[0];
+        let outs = self
+            .engine
+            .execute_bucketed(ArtifactKind::Gate, t, x, &[self.weights.wg.clone()])?;
+        counters.1 += 1;
+        let (gw, gi) = (&outs[0], &outs[1]);
+        // Group tokens per expert.
+        let mut token_of_expert: Vec<Vec<(usize, f32)>> = vec![Vec::new(); cfg.n_experts];
+        for i in 0..t {
+            for k in 0..cfg.top_k {
+                let e = gi.data[i * cfg.top_k + k] as usize;
+                let w = gw.data[i * cfg.top_k + k];
+                token_of_expert[e].push((i, w));
+            }
+        }
+        let d = cfg.d_model;
+        let mut y = Tensor::zeros(x.shape.clone());
+        for (e, toks) in token_of_expert.iter().enumerate() {
+            if toks.is_empty() {
+                continue;
+            }
+            // Gather activated rows.
+            let mut gathered = Vec::with_capacity(toks.len() * d);
+            for &(i, _) in toks {
+                gathered.extend_from_slice(&x.data[i * d..(i + 1) * d]);
+            }
+            let xin = Tensor::new(vec![toks.len(), d], gathered);
+            let out = self.engine.execute_bucketed(
+                ArtifactKind::ExpertFfn,
+                toks.len(),
+                &xin,
+                &[
+                    self.weights.w1[e].clone(),
+                    self.weights.w3[e].clone(),
+                    self.weights.w2[e].clone(),
+                ],
+            )?;
+            counters.0 += 1;
+            // Weighted scatter-accumulate.
+            for (row, &(i, w)) in toks.iter().enumerate() {
+                for j in 0..d {
+                    y.data[i * d + j] += w * out[0].data[row * d + j];
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// One pre-norm transformer block (attention + MoE) via PJRT.
+    pub fn block(
+        &mut self,
+        x: &Tensor,
+        layer: usize,
+        counters: &mut (usize, usize),
+    ) -> Result<Tensor> {
+        let t = x.shape[0];
+        let aw = &self.weights.attn[layer];
+        let attn_out = self.engine.execute_bucketed(
+            ArtifactKind::Attn,
+            t,
+            &rmsnorm(x),
+            &[aw[0].clone(), aw[1].clone(), aw[2].clone(), aw[3].clone()],
+        )?;
+        let h = add(x, &attn_out[0]);
+        let moe = self.moe_sublayer(&rmsnorm(&h), counters)?;
+        Ok(add(&h, &moe))
+    }
+
+    /// Native-reference forward of the same blocks (the oracle).
+    pub fn reference_forward(&self, x: &Tensor) -> Tensor {
+        let cfg = &self.engine.manifest().config;
+        let mut h = x.clone();
+        for l in 0..self.weights.n_layers {
+            let aw = &self.weights.attn[l];
+            let a = reference::attention_causal(
+                &rmsnorm(&h),
+                &aw[0],
+                &aw[1],
+                &aw[2],
+                &aw[3],
+                cfg.n_heads,
+            );
+            let h1 = add(&h, &a);
+            let m = reference::moe_layer(
+                &rmsnorm(&h1),
+                &self.weights.wg,
+                &self.weights.w1,
+                &self.weights.w3,
+                &self.weights.w2,
+                cfg.top_k,
+            );
+            h = add(&h1, &m);
+        }
+        h
+    }
+
+    /// Serve one batch end-to-end: random embeddings → all layers → verify.
+    pub fn serve_batch(&mut self, tokens: usize, seed: u64) -> Result<ServeReport> {
+        let d = self.engine.manifest().config.d_model;
+        if self.engine.manifest().bucket_for(tokens).is_none() {
+            return Err(anyhow!("batch of {tokens} exceeds largest artifact bucket"));
+        }
+        let mut rng = Rng::new(seed);
+        let x = Tensor::new(
+            vec![tokens, d],
+            (0..tokens * d).map(|_| rng.normal_f32(0.5)).collect(),
+        );
+        let mut counters = (0usize, 0usize);
+        let start = Instant::now();
+        let mut h = x.clone();
+        for l in 0..self.weights.n_layers {
+            h = self.block(&h, l, &mut counters)?;
+        }
+        let wallclock = start.elapsed();
+        let want = self.reference_forward(&x);
+        let err = reference::max_abs_diff(&h, &want);
+        let secs = wallclock.as_secs_f64();
+        Ok(ServeReport {
+            tokens,
+            layers: self.weights.n_layers,
+            wallclock_ms: secs * 1e3,
+            tokens_per_s: tokens as f64 / secs,
+            max_abs_err: err,
+            expert_invocations: counters.0,
+            gate_invocations: counters.1,
+        })
+    }
+}

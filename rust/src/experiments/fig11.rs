@@ -1,0 +1,81 @@
+//! Fig 11: utilization fluctuation during inference of one layer — the
+//! windowed compute-utilization curve per scheme (Qwen3, C4, 256 tokens).
+//! FSE-DP's curve should fluctuate far less than EP/Hydra's.
+
+use super::{run_one, sample_workloads, ExpOpts};
+use crate::config::{presets, Dataset, StrategyKind};
+use crate::util::Table;
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let model = presets::qwen3_a3b();
+    let hw = presets::mcm_2x2();
+    let tokens = if opts.quick { 64 } else { 256 };
+    let windows = 20;
+    let wl = &sample_workloads(&model, Dataset::C4, tokens, 1, hw.n_chiplets(), opts.seed)[0];
+
+    let mut t = Table::new(
+        &format!("Fig 11: utilization over one layer ({} windows), Qwen3/C4/{} tokens", windows, tokens),
+        &["strategy", "mean util", "stddev", "CV (fluctuation)", "min", "max"],
+    );
+    let mut curves = Table::new(
+        "Fig 11 (series): windowed utilization",
+        &["strategy", "window", "utilization"],
+    );
+    for kind in [
+        StrategyKind::Ep,
+        StrategyKind::Hydra,
+        StrategyKind::FseDp,
+        StrategyKind::FseDpPaired,
+    ] {
+        let r = run_one(kind, &model, &hw, wl, true);
+        let curve = r.timeline.utilization_curve(r.makespan, windows);
+        let mut s = crate::util::Summary::new();
+        s.extend(&curve);
+        let cv = if s.mean() > 0.0 { s.stddev() / s.mean() } else { 0.0 };
+        t.row(vec![
+            kind.name().into(),
+            format!("{:.3}", s.mean()),
+            format!("{:.3}", s.stddev()),
+            format!("{:.3}", cv),
+            format!("{:.3}", s.min()),
+            format!("{:.3}", s.max()),
+        ]);
+        for (w, u) in curve.iter().enumerate() {
+            curves.row(vec![kind.name().into(), w.to_string(), format!("{u:.4}")]);
+        }
+    }
+    super::save(&t, opts, "fig11_summary");
+    super::save(&curves, opts, "fig11_curves");
+    vec![t, curves]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsedp_fluctuates_less_than_ep() {
+        // Fluctuation is the coefficient of variation of the windowed
+        // compute-utilization curve (normalizing away EP's uniformly lower
+        // absolute utilization).
+        let opts = ExpOpts { quick: true, out_dir: "/tmp/expstr-test-results".into(), ..Default::default() };
+        let t = &run(&opts)[0];
+        let csv = t.to_csv();
+        let cv_of = |name: &str| -> f64 {
+            csv.lines()
+                .find(|l| l.starts_with(name))
+                .unwrap()
+                .split(',')
+                .nth(3)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(
+            cv_of("FSE-DP+paired") <= cv_of("EP") * 1.2,
+            "paired CV {} vs ep CV {}",
+            cv_of("FSE-DP+paired"),
+            cv_of("EP")
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! Fig 14: end-to-end throughput (attention + 100 forward iterations) per
+//! model/dataset, comparing EP, Hydra, FSE-DP+paired, and paired with
+//! 10/20/30% token-buffering slack.
+//!
+//! Expected shape: moderate slack improves throughput; excessive slack can
+//! regress at tiny batches; Phi-3.5 (small MoE fraction) benefits least.
+
+use super::{ExpOpts, us};
+use crate::config::{presets, Dataset, StrategyKind};
+use crate::engine::timing::{E2eConfig, E2eSimulator};
+use crate::util::Table;
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let models = if opts.quick {
+        vec![presets::qwen3_a3b()]
+    } else {
+        presets::all_models()
+    };
+    let datasets: &[Dataset] = if opts.quick {
+        &[Dataset::C4]
+    } else {
+        &[Dataset::Wikitext2, Dataset::C4]
+    };
+    let iterations = if opts.quick { 5 } else { 100 };
+    let tokens = 64;
+    let hw = presets::mcm_2x2();
+
+    let configs: Vec<(String, E2eConfig)> = vec![
+        ("EP".into(), E2eConfig { strategy: StrategyKind::Ep, ..Default::default() }),
+        ("Hydra".into(), E2eConfig { strategy: StrategyKind::Hydra, ..Default::default() }),
+        ("FSE-DP+paired".into(), E2eConfig { strategy: StrategyKind::FseDpPaired, ..Default::default() }),
+        ("+10%".into(), E2eConfig { strategy: StrategyKind::FseDpBuffered, slack: Some(0.10), ..Default::default() }),
+        ("+20%".into(), E2eConfig { strategy: StrategyKind::FseDpBuffered, slack: Some(0.20), ..Default::default() }),
+        ("+30%".into(), E2eConfig { strategy: StrategyKind::FseDpBuffered, slack: Some(0.30), ..Default::default() }),
+    ];
+
+    let mut t = Table::new(
+        &format!("Fig 14: end-to-end throughput, {iterations} iterations, {tokens} tokens/iter"),
+        &["model", "dataset", "scheme", "tokens/s", "mean iter (us)", "deferrals", "speedup vs EP"],
+    );
+    for model in &models {
+        for &dataset in datasets {
+            let mut ep_tps = 0.0;
+            for (name, cfg) in &configs {
+                let mut c = cfg.clone();
+                c.seed = opts.seed;
+                let mut sim = E2eSimulator::new(model, &hw, dataset, c);
+                let r = sim.run(iterations, tokens);
+                let tps = r.tokens_per_s(model, &hw);
+                if name == "EP" {
+                    ep_tps = tps;
+                }
+                t.row(vec![
+                    model.name.into(),
+                    dataset.name().into(),
+                    name.clone(),
+                    format!("{tps:.0}"),
+                    format!("{:.0}", us(r.iter_latency.mean() as u64, &hw)),
+                    r.deferrals.to_string(),
+                    format!("{:.2}x", tps / ep_tps),
+                ]);
+            }
+        }
+    }
+    super::save(&t, opts, "fig14_e2e_throughput");
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_e2e_produces_all_schemes() {
+        let opts = ExpOpts { quick: true, out_dir: "/tmp/expstr-test-results".into(), ..Default::default() };
+        let t = &run(&opts)[0];
+        assert_eq!(t.n_rows(), 6);
+    }
+}

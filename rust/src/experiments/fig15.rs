@@ -1,0 +1,86 @@
+//! Fig 15: ablation of the FSE-DP design knobs — end-to-end utilization of
+//! A1 (naive), A2 (Rules 1–4), A3 (+paired), A4 (+Rule 5), A5 (+20%
+//! token buffering). Expected shape: A2 ≫ A1; paired-load and buffering
+//! help; Rule 5 marginal.
+
+use super::ExpOpts;
+use crate::config::{presets, Dataset, StrategyKind};
+use crate::engine::timing::{E2eConfig, E2eSimulator};
+use crate::util::Table;
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let models = if opts.quick {
+        vec![presets::qwen3_a3b()]
+    } else {
+        vec![presets::qwen3_a3b(), presets::deepseek_moe()]
+    };
+    let iterations = if opts.quick { 3 } else { 20 };
+    let tokens = 64;
+    let hw = presets::mcm_2x2();
+
+    let configs: Vec<(&str, E2eConfig)> = vec![
+        ("A1 naive", E2eConfig { strategy: StrategyKind::FseDpNaive, ..Default::default() }),
+        ("A2 rules 1-4", E2eConfig { strategy: StrategyKind::FseDp, ..Default::default() }),
+        ("A3 +paired", E2eConfig { strategy: StrategyKind::FseDpPaired, ..Default::default() }),
+        ("A4 +rule5", E2eConfig { strategy: StrategyKind::FseDpRule5, ..Default::default() }),
+        ("A5 +20% buffering", E2eConfig {
+            strategy: StrategyKind::FseDpBuffered,
+            slack: Some(0.20),
+            ..Default::default()
+        }),
+    ];
+
+    let mut t = Table::new(
+        &format!("Fig 15: ablation (mean MoE utilization, {iterations} iters, {tokens} tokens)"),
+        &["model", "config", "utilization", "moe cycles", "vs A1"],
+    );
+    for model in &models {
+        let mut a1_cycles = 0u64;
+        for (name, cfg) in &configs {
+            let mut c = cfg.clone();
+            c.seed = opts.seed;
+            let mut sim = E2eSimulator::new(model, &hw, Dataset::C4, c);
+            let r = sim.run(iterations, tokens);
+            if *name == "A1 naive" {
+                a1_cycles = r.moe_cycles;
+            }
+            t.row(vec![
+                model.name.into(),
+                (*name).into(),
+                format!("{:.3}", r.mean_utilization),
+                r.moe_cycles.to_string(),
+                format!("{:.2}x", a1_cycles as f64 / r.moe_cycles as f64),
+            ]);
+        }
+    }
+    super::save(&t, opts, "fig15_ablation");
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microslice_flow_beats_naive() {
+        let opts = ExpOpts { quick: true, out_dir: "/tmp/expstr-test-results".into(), ..Default::default() };
+        let t = &run(&opts)[0];
+        let csv = t.to_csv();
+        let cycles_of = |tag: &str| -> f64 {
+            csv.lines()
+                .find(|l| l.contains(tag))
+                .unwrap()
+                .split(',')
+                .nth(3)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(
+            cycles_of("A2 rules 1-4") < cycles_of("A1 naive"),
+            "A2 {} vs A1 {}",
+            cycles_of("A2 rules 1-4"),
+            cycles_of("A1 naive")
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! Fig 16: design-space exploration with area/power feasibility (Eq 1–2).
+//! (a) fixed D2D 288 GB/s: weight-buffer size × per-die DDR bandwidth;
+//! (b) fixed 14 MB buffer: per-die DDR bandwidth × D2D bandwidth.
+//! Expected lessons: ≥60% utilization needs ≥48 GB/s DDR and ≥16 MB
+//! buffer; at 14 MB only very high D2D (≈512 GB/s) compensates, and the
+//! feasible region is tiny.
+
+use super::ExpOpts;
+use crate::config::presets;
+use crate::dse;
+use crate::util::Table;
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let model = presets::qwen3_a3b();
+    let base = presets::mcm_2x2();
+    let tokens = 64;
+    let iterations = if opts.quick { 1 } else { 3 };
+
+    let buffers: &[f64] = if opts.quick { &[8.0, 16.0] } else { &[4.0, 8.0, 14.0, 16.0, 24.0, 32.0] };
+    let ddrs: &[f64] = if opts.quick { &[25.6, 48.0] } else { &[12.8, 25.6, 48.0, 64.0, 96.0] };
+
+    let mut ta = Table::new(
+        "Fig 16(a): utilization over buffer x DDR (D2D fixed 288 GB/s)",
+        &["buffer MB", "DDR GB/s/die", "utilization", "feasible (Eq1-2)"],
+    );
+    for p in dse::sweep_buffer_vs_ddr(&model, &base, buffers, ddrs, tokens, iterations) {
+        ta.row(vec![
+            format!("{:.0}", p.weight_buffer_mb),
+            format!("{:.1}", p.ddr_gbps_per_die),
+            format!("{:.3}", p.utilization),
+            if p.feasible { "yes".into() } else { "no".into() },
+        ]);
+    }
+
+    let d2ds: &[f64] = if opts.quick { &[144.0, 288.0] } else { &[72.0, 144.0, 288.0, 512.0, 768.0] };
+    let ddrs_b: &[f64] = if opts.quick { &[25.6] } else { &[12.8, 25.6, 48.0, 64.0] };
+    let mut tb = Table::new(
+        "Fig 16(b): utilization over DDR x D2D (buffer fixed 14 MB)",
+        &["DDR GB/s/die", "D2D GB/s", "utilization", "feasible (Eq1-2)"],
+    );
+    for p in dse::sweep_ddr_vs_d2d(&model, &base, 14.0, ddrs_b, d2ds, tokens, iterations) {
+        tb.row(vec![
+            format!("{:.1}", p.ddr_gbps_per_die),
+            format!("{:.0}", p.d2d_gbps),
+            format!("{:.3}", p.utilization),
+            if p.feasible { "yes".into() } else { "no".into() },
+        ]);
+    }
+    super::save(&ta, opts, "fig16a_buffer_vs_ddr");
+    super::save(&tb, opts, "fig16b_ddr_vs_d2d");
+    vec![ta, tb]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_ddr_bandwidth_never_slows_the_layer() {
+        // Utilization is roofline-normalized (the bound itself shrinks with
+        // more DDR), so the monotone quantity is absolute cycles.
+        let opts = ExpOpts { quick: true, out_dir: "/tmp/expstr-test-results".into(), ..Default::default() };
+        run(&opts);
+        let model = presets::qwen3_a3b();
+        let base = presets::mcm_2x2();
+        let pts = dse::sweep_buffer_vs_ddr(&model, &base, &[16.0], &[25.6, 48.0], 64, 1);
+        assert!(
+            pts[1].cycles <= pts[0].cycles,
+            "more DDR slowed the run: {} -> {}",
+            pts[0].cycles,
+            pts[1].cycles
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig 18: scalability — utilization of EP / Hydra / FSE-DP on 2×2, 3×3,
+//! and 4×4 chiplet arrays (Qwen3, C4). Expected shape: EP degrades most
+//! with array size; Hydra helps; FSE-DP (point-to-point only) degrades
+//! least, thanks to trajectory-aware scheduling and no all-to-all.
+
+use super::{run_one, sample_workloads, ExpOpts};
+use crate::config::{presets, Dataset, StrategyKind};
+use crate::util::{Summary, Table};
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let model = presets::qwen3_a3b();
+    let tokens = if opts.quick { 64 } else { 256 };
+    let layer_samples = if opts.quick { 2 } else { 4 };
+    let sizes: &[usize] = if opts.quick { &[2, 3] } else { &[2, 3, 4] };
+
+    let mut t = Table::new(
+        &format!("Fig 18: utilization vs array size (Qwen3, C4, {tokens} tokens)"),
+        &["array", "EP", "Hydra", "FSE-DP+paired", "FSE-DP retention vs 2x2"],
+    );
+    let mut fse_2x2 = 0.0;
+    for &n in sizes {
+        let hw = presets::mcm_nxn(n);
+        let wls = sample_workloads(&model, Dataset::C4, tokens, layer_samples, hw.n_chiplets(), opts.seed);
+        let mut utils = Vec::new();
+        for kind in [StrategyKind::Ep, StrategyKind::Hydra, StrategyKind::FseDpPaired] {
+            let mut s = Summary::new();
+            for wl in &wls {
+                let r = run_one(kind, &model, &hw, wl, false);
+                s.push(r.utilization());
+            }
+            utils.push(s.mean());
+        }
+        if n == 2 {
+            fse_2x2 = utils[2];
+        }
+        t.row(vec![
+            format!("{n}x{n}"),
+            format!("{:.3}", utils[0]),
+            format!("{:.3}", utils[1]),
+            format!("{:.3}", utils[2]),
+            format!("{:.0}%", utils[2] / fse_2x2 * 100.0),
+        ]);
+    }
+    super::save(&t, opts, "fig18_scalability");
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsedp_scales_on_3x3() {
+        let opts = ExpOpts { quick: true, out_dir: "/tmp/expstr-test-results".into(), ..Default::default() };
+        let t = &run(&opts)[0];
+        assert_eq!(t.n_rows(), 2);
+        let csv = t.to_csv();
+        let row3 = csv.lines().last().unwrap();
+        let fse: f64 = row3.split(',').nth(3).unwrap().parse().unwrap();
+        let ep: f64 = row3.split(',').nth(1).unwrap().parse().unwrap();
+        assert!(fse >= ep * 0.8, "FSE-DP collapsed on 3x3: {fse} vs EP {ep}");
+    }
+}

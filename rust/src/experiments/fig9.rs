@@ -1,0 +1,90 @@
+//! Fig 9: single-MoE-layer latency, averaged across sampled layers, for
+//! every (model × dataset × tokens-per-iteration) cell and all four
+//! schemes: EP, Hydra, FSE-DP (A2), FSE-DP + paired load (A3).
+//!
+//! Expected shape (paper §VI-B): FSE-DP lowest in most cells; paired-load
+//! gains largest at low token counts; Hydra ≈ EP in low-batch + high-D2D.
+
+use super::{run_one, sample_workloads, us, ExpOpts};
+use crate::config::{presets, Dataset, StrategyKind};
+use crate::util::{Summary, Table};
+
+const STRATEGIES: [StrategyKind; 4] = [
+    StrategyKind::Ep,
+    StrategyKind::Hydra,
+    StrategyKind::FseDp,
+    StrategyKind::FseDpPaired,
+];
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let models = if opts.quick {
+        vec![presets::qwen3_a3b()]
+    } else {
+        presets::all_models()
+    };
+    let datasets: &[Dataset] = if opts.quick {
+        &[Dataset::C4]
+    } else {
+        &[Dataset::Wikitext2, Dataset::C4]
+    };
+    let token_counts: &[usize] = if opts.quick { &[64] } else { &[16, 64, 256, 1024] };
+    let layer_samples = if opts.quick { 2 } else { 4 };
+    let hw = presets::mcm_2x2();
+
+    let mut t = Table::new(
+        "Fig 9: single MoE layer latency (us, mean over sampled layers)",
+        &["model", "dataset", "tokens", "EP", "Hydra", "FSE-DP", "FSE-DP+paired", "best vs EP"],
+    );
+    for model in &models {
+        for &dataset in datasets {
+            for &tokens in token_counts {
+                let wls = sample_workloads(model, dataset, tokens, layer_samples, hw.n_chiplets(), opts.seed);
+                let mut lat = [0.0f64; 4];
+                for (i, &kind) in STRATEGIES.iter().enumerate() {
+                    let mut s = Summary::new();
+                    for wl in &wls {
+                        let r = run_one(kind, model, &hw, wl, false);
+                        s.push(us(r.makespan, &hw));
+                    }
+                    lat[i] = s.mean();
+                }
+                let best = lat[2].min(lat[3]);
+                t.row(vec![
+                    model.name.into(),
+                    dataset.name().into(),
+                    tokens.to_string(),
+                    format!("{:.1}", lat[0]),
+                    format!("{:.1}", lat[1]),
+                    format!("{:.1}", lat[2]),
+                    format!("{:.1}", lat[3]),
+                    format!("{:.2}x", lat[0] / best),
+                ]);
+            }
+        }
+    }
+    super::save(&t, opts, "fig9_layer_latency");
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_runs_and_fsedp_wins() {
+        let opts = ExpOpts { quick: true, out_dir: "/tmp/expstr-test-results".into(), ..Default::default() };
+        let t = &run(&opts)[0];
+        assert_eq!(t.n_rows(), 1);
+        // The speedup column must show EP/best >= 1.0
+        let csv = t.to_csv();
+        let last = csv.lines().last().unwrap();
+        let speedup: f64 = last
+            .split(',')
+            .last()
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(speedup >= 1.0, "FSE-DP lost to EP: {speedup}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! (§VI). Each driver regenerates the corresponding rows/series on the
+//! simulated package and saves a CSV under `results/`.
+//!
+//! | id     | paper artifact                                   |
+//! |--------|--------------------------------------------------|
+//! | table1 | hardware + model configurations                  |
+//! | fig2   | long-tail expert-activation profiles             |
+//! | fig9   | single-MoE-layer latency across models/tokens    |
+//! | fig11  | utilization fluctuation during one layer         |
+//! | fig12  | on-chip memory usage per model                   |
+//! | fig13  | activity timeline across chiplets                |
+//! | fig14  | end-to-end throughput incl. token buffering      |
+//! | fig15  | ablation A1–A5                                   |
+//! | fig16  | DSE: buffer × DDR-BW and DDR × D2D feasibility   |
+//! | fig17  | granularity heatmap (micro-slices × buffer)      |
+//! | fig18  | scalability 2×2 → 4×4                            |
+
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+pub mod fig2;
+pub mod fig9;
+pub mod table1;
+
+use crate::config::{Dataset, HardwareConfig, MoeModelConfig, StrategyKind};
+use crate::coordinator::{make_strategy, LayerCtx, LayerResult};
+use crate::moe::{default_num_slices, ExpertGeometry};
+use crate::util::Table;
+use crate::workload::{shard_layer, LayerWorkload, TraceGenerator};
+use std::collections::HashSet;
+
+/// Options shared by all experiment drivers.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Reduced grid for smoke runs / CI.
+    pub quick: bool,
+    pub seed: u64,
+    /// Directory for CSV outputs.
+    pub out_dir: String,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { quick: false, seed: 7, out_dir: "results".into() }
+    }
+}
+
+pub const ALL_IDS: [&str; 11] = [
+    "table1", "fig2", "fig9", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
+    "fig18",
+];
+
+/// Run one experiment by id; returns the rendered tables.
+pub fn run_by_id(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
+    let tables = match id {
+        "table1" => table1::run(opts),
+        "fig2" => fig2::run(opts),
+        "fig9" => fig9::run(opts),
+        "fig11" => fig11::run(opts),
+        "fig12" => fig12::run(opts),
+        "fig13" => fig13::run(opts),
+        "fig14" => fig14::run(opts),
+        "fig15" => fig15::run(opts),
+        "fig16" => fig16::run(opts),
+        "fig17" => fig17::run(opts),
+        "fig18" => fig18::run(opts),
+        other => return Err(format!("unknown experiment '{other}' (see `repro list`)")),
+    };
+    for t in &tables {
+        t.print();
+        println!();
+    }
+    Ok(tables)
+}
+
+pub(crate) fn save(table: &Table, opts: &ExpOpts, name: &str) {
+    let path = format!("{}/{}.csv", opts.out_dir, name);
+    if let Err(e) = table.save_csv(&path) {
+        eprintln!("warning: could not save {path}: {e}");
+    }
+}
+
+/// Sample `n` per-layer workloads for a (model, dataset, tokens) point —
+/// the per-layer averaging unit of Fig 9/11/12/13.
+pub(crate) fn sample_workloads(
+    model: &MoeModelConfig,
+    dataset: Dataset,
+    tokens: usize,
+    n: usize,
+    n_chiplets: usize,
+    seed: u64,
+) -> Vec<LayerWorkload> {
+    let mut gen = TraceGenerator::new(model, dataset, seed);
+    let it = gen.iteration(0, tokens);
+    let total = model.n_experts + model.n_shared;
+    it.layers
+        .iter()
+        .take(n)
+        .map(|g| shard_layer(g, total, n_chiplets, &HashSet::new()))
+        .collect()
+}
+
+/// Run one strategy over one layer workload with the model's default
+/// micro-slice count.
+pub(crate) fn run_one(
+    kind: StrategyKind,
+    model: &MoeModelConfig,
+    hw: &HardwareConfig,
+    wl: &LayerWorkload,
+    record_spans: bool,
+) -> LayerResult {
+    let slices = default_num_slices(model, hw);
+    let geom = ExpertGeometry::new(model, hw, slices);
+    let mut s = make_strategy(kind, slices);
+    let ctx = LayerCtx { hw, geom: &geom, workload: wl, record_spans };
+    s.run_layer(&ctx)
+}
+
+pub(crate) fn us(cycles: u64, hw: &HardwareConfig) -> f64 {
+    crate::util::cycles_to_us(cycles, hw.freq_hz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_ids() {
+        let opts = ExpOpts { quick: true, out_dir: "/tmp/expstr-test-results".into(), ..Default::default() };
+        // table1 is cheap enough to exercise the registry path end to end.
+        let tables = run_by_id("table1", &opts).unwrap();
+        assert!(!tables.is_empty());
+        assert!(run_by_id("fig99", &opts).is_err());
+        assert_eq!(ALL_IDS.len(), 11);
+    }
+}

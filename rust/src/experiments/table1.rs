@@ -1,0 +1,79 @@
+//! Table I: hardware and model configurations used for evaluation.
+
+use super::ExpOpts;
+use crate::config::presets;
+use crate::dse::CostModel;
+use crate::moe::default_num_slices;
+use crate::util::{fmt_bytes, Table};
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let hw = presets::mcm_2x2();
+    let cost = CostModel::default();
+
+    let mut thw = Table::new(
+        "Table I (hardware): 2x2 MCM test chip",
+        &["component", "specification"],
+    );
+    thw.row(vec!["mesh".into(), format!("{}x{}", hw.mesh_rows, hw.mesh_cols)]);
+    thw.row(vec![
+        "DDR".into(),
+        format!(
+            "{} ch x {:.1} GB/s ({:.1} GB/s aggregate)",
+            hw.ddr.channels,
+            hw.ddr.gbps_per_channel,
+            hw.ddr_aggregate_gbps()
+        ),
+    ]);
+    thw.row(vec![
+        "D2D".into(),
+        format!("UCIe {:.0} GB/s/link, {} ns/hop", hw.d2d.gbps_per_link, hw.d2d.hop_latency_ns),
+    ]);
+    thw.row(vec![
+        "compute die".into(),
+        format!("{} MACs @ {:.0} MHz", hw.macs_per_die, hw.freq_hz / 1e6),
+    ]);
+    thw.row(vec![
+        "on-chip buffers".into(),
+        format!(
+            "{} weights + {} tokens per die",
+            fmt_bytes(hw.weight_buffer_bytes),
+            fmt_bytes(hw.token_buffer_bytes)
+        ),
+    ]);
+    thw.row(vec![
+        "feasibility (Eq 1-2)".into(),
+        format!(
+            "area {:.1} mm2 (<= {:.0}), power {:.1} W (<= {:.0})",
+            cost.chiplet_area_mm2(&hw),
+            cost.area_th_mm2,
+            cost.package_power_w(&hw),
+            cost.power_th_w
+        ),
+    ]);
+
+    let mut tm = Table::new(
+        "Table I (models)",
+        &["model", "d_model", "d_expert", "E", "E_act", "heads", "layers", "params", "expert size", "default slices"],
+    );
+    for m in presets::all_models() {
+        tm.row(vec![
+            m.name.into(),
+            m.d_model.to_string(),
+            m.d_expert.to_string(),
+            m.n_experts.to_string(),
+            if m.n_shared > 0 {
+                format!("{}+{}", m.top_k, m.n_shared)
+            } else {
+                m.top_k.to_string()
+            },
+            m.n_heads.to_string(),
+            m.n_layers.to_string(),
+            format!("{:.1}B", m.params_b),
+            fmt_bytes(m.expert_bytes(hw.weight_bytes)),
+            default_num_slices(&m, &hw).to_string(),
+        ]);
+    }
+    super::save(&thw, opts, "table1_hardware");
+    super::save(&tm, opts, "table1_models");
+    vec![thw, tm]
+}

@@ -1,0 +1,29 @@
+//! # expert-streaming
+//!
+//! Reproduction of *Expert Streaming: Accelerating Low-Batch MoE Inference
+//! via Multi-chiplet Architecture and Dynamic Expert Trajectory Scheduling*
+//! (CS.AR 2026): **FSE-DP** — Fully Sharded Expert Data-parallelism — on a
+//! simulated multi-chiplet package, with baselines (EP, Hydra, naive
+//! FSE-DP), the paper's scheduling algorithms (spatiotemporal trajectory
+//! scheduling, token buffering), the hardware-scheduler cost model, and a
+//! PJRT-backed numeric path (JAX/Pallas AOT artifacts executed from Rust).
+//!
+//! Layering (see DESIGN.md):
+//! * L1/L2 (build time, python): Pallas micro-slice FFN kernel + JAX MoE
+//!   graphs, lowered once to `artifacts/*.hlo.txt`.
+//! * L3 (this crate): the coordinator — trajectory scheduling, micro-slice
+//!   flow rules, token buffering — over a cycle-level simulator of the
+//!   Table-I package, plus the PJRT runtime that executes the artifacts on
+//!   the request path without Python.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod engine;
+pub mod experiments;
+pub mod moe;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

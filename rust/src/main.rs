@@ -1,0 +1,176 @@
+//! `repro` — CLI for the Expert Streaming / FSE-DP reproduction.
+//!
+//! Commands:
+//!   repro list                         list experiments
+//!   repro experiment <id> [--quick]    regenerate a paper table/figure
+//!   repro all [--quick]                run every experiment
+//!   repro run [key=value ...]          one simulated layer with overrides
+//!   repro serve [tokens=N] [layers=N]  numeric serving path (PJRT)
+//!
+//! Hand-rolled argument handling (the offline crate set has no clap).
+
+use expert_streaming::config::{presets, Dataset, Overrides, StrategyKind};
+use expert_streaming::coordinator::{make_strategy, LayerCtx};
+use expert_streaming::engine::serve::NumericEngine;
+use expert_streaming::experiments::{self, ExpOpts};
+use expert_streaming::moe::{default_num_slices, ExpertGeometry};
+use expert_streaming::runtime::artifacts::Manifest;
+use expert_streaming::util::fmt_bytes;
+use expert_streaming::workload::{shard_layer, TraceGenerator};
+use std::collections::HashSet;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]"
+    );
+    ExitCode::FAILURE
+}
+
+fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
+    let mut opts = ExpOpts::default();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => opts.quick = true,
+            "--seed" => {
+                i += 1;
+                opts.seed = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(7);
+            }
+            "--out" => {
+                i += 1;
+                opts.out_dir = args.get(i).cloned().unwrap_or_else(|| "results".into());
+            }
+            other => rest.push(other.to_string()),
+        }
+        i += 1;
+    }
+    (opts, rest)
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let ov = Overrides::parse(args)?;
+    let model = presets::model_by_name(ov.get("model").unwrap_or("qwen"))
+        .ok_or_else(|| "unknown model (phi/yuan/deepseek/qwen)".to_string())?;
+    let dataset = Dataset::parse(ov.get("dataset").unwrap_or("c4"))
+        .ok_or_else(|| "unknown dataset".to_string())?;
+    let strategy = StrategyKind::parse(ov.get("strategy").unwrap_or("paired"))
+        .ok_or_else(|| "unknown strategy (ep/hydra/naive/fsedp/paired/rule5)".to_string())?;
+    let mut hw = presets::mcm_2x2();
+    ov.apply_hardware(&mut hw)?;
+    let tokens = ov.get_usize("tokens")?.unwrap_or(64);
+    let seed = ov.get_usize("seed")?.unwrap_or(7) as u64;
+    let slices = ov
+        .get_usize("slices")?
+        .unwrap_or_else(|| default_num_slices(&model, &hw));
+
+    let mut gen = TraceGenerator::new(&model, dataset, seed);
+    let it = gen.iteration(0, tokens);
+    let wl = shard_layer(
+        &it.layers[model.n_layers / 2],
+        model.n_experts + model.n_shared,
+        hw.n_chiplets(),
+        &HashSet::new(),
+    );
+    let geom = ExpertGeometry::new(&model, &hw, slices);
+    let mut s = make_strategy(strategy, slices);
+    let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+    let r = s.run_layer(&ctx);
+    println!(
+        "{} / {} / {} tokens / {} ({} slices)",
+        model.name,
+        dataset.name(),
+        tokens,
+        strategy.name(),
+        slices
+    );
+    println!(
+        "  layer latency : {} cycles ({:.1} us)",
+        r.makespan,
+        expert_streaming::util::cycles_to_us(r.makespan, hw.freq_hz)
+    );
+    println!("  utilization   : {:.1}%", r.utilization() * 100.0);
+    println!(
+        "  on-chip peak  : {} weights + {} tokens",
+        fmt_bytes(r.weight_peak_bytes),
+        fmt_bytes(r.token_peak_bytes)
+    );
+    println!(
+        "  traffic       : {} DDR, {} D2D, scheduler {} cycles",
+        fmt_bytes(r.ddr_bytes),
+        fmt_bytes(r.d2d_bytes),
+        r.scheduler_cycles
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let ov = Overrides::parse(args)?;
+    let tokens = ov.get_usize("tokens")?.unwrap_or(16);
+    let layers = ov.get_usize("layers")?.unwrap_or(2);
+    let seed = ov.get_usize("seed")?.unwrap_or(42) as u64;
+    let dir = Manifest::default_dir();
+    let mut engine =
+        NumericEngine::new(&dir, layers, seed).map_err(|e| format!("engine: {e:#}"))?;
+    println!("compiling artifacts from {} ...", dir.display());
+    let n = engine.warm_up().map_err(|e| format!("warm-up: {e:#}"))?;
+    println!("compiled {n} executables; serving {tokens} tokens through {layers} layers");
+    let r = engine
+        .serve_batch(tokens, seed)
+        .map_err(|e| format!("serve: {e:#}"))?;
+    println!(
+        "  wallclock {:.1} ms  ({:.0} tokens/s), {} expert + {} gate invocations",
+        r.wallclock_ms, r.tokens_per_s, r.expert_invocations, r.gate_invocations
+    );
+    println!("  max |pjrt - reference| = {:.2e}", r.max_abs_err);
+    if r.max_abs_err > 1e-3 {
+        return Err(format!("numeric mismatch: {:.3e}", r.max_abs_err));
+    }
+    println!("  numerics verified against native reference");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        return usage();
+    };
+    let result = match cmd.as_str() {
+        "list" => {
+            println!("experiments (repro experiment <id>):");
+            for id in experiments::ALL_IDS {
+                println!("  {id}");
+            }
+            Ok(())
+        }
+        "experiment" => {
+            let (opts, rest) = parse_opts(&args[1..]);
+            match rest.first() {
+                Some(id) => experiments::run_by_id(id, &opts).map(|_| ()),
+                None => Err("experiment id required".into()),
+            }
+        }
+        "all" => {
+            let (opts, _) = parse_opts(&args[1..]);
+            let mut err = None;
+            for id in experiments::ALL_IDS {
+                println!("### {id}");
+                if let Err(e) = experiments::run_by_id(id, &opts) {
+                    err = Some(e);
+                }
+            }
+            err.map_or(Ok(()), Err)
+        }
+        "run" => cmd_run(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
+        _ => return usage(),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! MoE structural model: experts, micro-slice partitioning, and the
+//! per-layer cost arithmetic shared by all strategies.
+
+use crate::config::{HardwareConfig, MoeModelConfig};
+
+/// Identifies one expert within a layer. Shared experts (DeepSeek) are
+/// appended after the routed ones: ids `n_experts..n_experts+n_shared`.
+pub type ExpertId = u16;
+
+/// One micro-slice of an expert: `1/num_slices` of the FFN hidden dim of
+/// all three weight matrices (W1, W3, W2) — the unit of D2D streaming,
+/// DDR loading, buffering, and compute in FSE-DP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MicroSlice {
+    pub expert: ExpertId,
+    pub index: u16,
+}
+
+/// Static per-layer expert geometry: how big slices are, what they cost.
+#[derive(Clone, Debug)]
+pub struct ExpertGeometry {
+    /// Weight bytes of one full expert.
+    pub expert_bytes: u64,
+    /// Number of micro-slices per expert.
+    pub num_slices: usize,
+    /// Weight bytes of one micro-slice.
+    pub slice_bytes: u64,
+    /// MACs per token for one micro-slice.
+    pub slice_macs_per_token: u64,
+    /// MACs per token for the full expert.
+    pub expert_macs_per_token: u64,
+    /// Activation bytes of one token.
+    pub token_bytes: u64,
+}
+
+impl ExpertGeometry {
+    pub fn new(model: &MoeModelConfig, hw: &HardwareConfig, num_slices: usize) -> Self {
+        assert!(num_slices >= 1, "need at least one micro-slice");
+        let expert_bytes = model.expert_bytes(hw.weight_bytes);
+        let expert_macs = model.expert_macs_per_token();
+        ExpertGeometry {
+            expert_bytes,
+            num_slices,
+            // Last slice absorbs rounding; for costing we use the even share.
+            slice_bytes: expert_bytes / num_slices as u64,
+            slice_macs_per_token: expert_macs / num_slices as u64,
+            expert_macs_per_token: expert_macs,
+            token_bytes: model.token_bytes(hw.act_bytes),
+        }
+    }
+
+    /// All micro-slices of expert `e`.
+    pub fn slices_of(&self, e: ExpertId) -> impl Iterator<Item = MicroSlice> + '_ {
+        (0..self.num_slices as u16).map(move |index| MicroSlice { expert: e, index })
+    }
+
+    /// Compute cycles for `tokens` tokens against one micro-slice,
+    /// including the fixed issue/control overhead (Fig 17's knob).
+    pub fn slice_compute_cycles(&self, hw: &HardwareConfig, tokens: u64) -> u64 {
+        if tokens == 0 {
+            return 0;
+        }
+        hw.microslice_overhead_cycles + hw.compute_cycles(tokens * self.slice_macs_per_token)
+    }
+
+    /// Compute cycles with a custom per-token MAC count (used by the A1
+    /// baseline whose slices are `1/R` of an expert rather than
+    /// `1/num_slices`).
+    pub fn slice_compute_cycles_with(
+        &self,
+        hw: &HardwareConfig,
+        tokens: u64,
+        macs_per_token: u64,
+    ) -> u64 {
+        if tokens == 0 {
+            return 0;
+        }
+        hw.microslice_overhead_cycles + hw.compute_cycles(tokens * macs_per_token)
+    }
+
+    /// Compute cycles for a full (unsliced) expert on `tokens` tokens.
+    pub fn expert_compute_cycles(&self, hw: &HardwareConfig, tokens: u64) -> u64 {
+        if tokens == 0 {
+            return 0;
+        }
+        hw.compute_cycles(tokens * self.expert_macs_per_token)
+    }
+}
+
+/// Pick a default micro-slice count for a model on given hardware.
+///
+/// Two constraints (paper §IV + Fig 17): a micro-slice must be small
+/// relative to the per-die weight buffer so several can pipeline (target
+/// ≤ 1/8 of the buffer), but not so small that the fixed per-slice control
+/// overhead stops being hidden by its D2D transfer time. Models with small
+/// experts (Qwen3) land well under 10 slices; big-expert models (Phi-3.5)
+/// need more slices purely to fit the buffer.
+pub fn default_num_slices(model: &MoeModelConfig, hw: &HardwareConfig) -> usize {
+    let expert_bytes = model.expert_bytes(hw.weight_bytes) as f64;
+    // Buffer constraint: slice ≤ capacity/8.
+    let min_by_buffer = (expert_bytes / (hw.weight_buffer_bytes as f64 / 8.0)).ceil() as usize;
+    // Overhead constraint: slice D2D time ≥ 4× control overhead.
+    let d2d_cycles_full = expert_bytes / hw.d2d_bytes_per_cycle();
+    let max_by_overhead =
+        (d2d_cycles_full / (4.0 * hw.microslice_overhead_cycles as f64)).floor() as usize;
+    min_by_buffer.max(2).min(max_by_overhead.max(2)).clamp(2, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn geometry_arithmetic() {
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let g = ExpertGeometry::new(&model, &hw, 8);
+        // 3 * 2048 * 768 * 2B / 8
+        assert_eq!(g.expert_bytes, 3 * 2048 * 768 * 2);
+        assert_eq!(g.slice_bytes, g.expert_bytes / 8);
+        assert_eq!(g.slice_macs_per_token * 8, g.expert_macs_per_token);
+        assert_eq!(g.slices_of(3).count(), 8);
+    }
+
+    #[test]
+    fn zero_tokens_cost_nothing() {
+        let hw = presets::mcm_2x2();
+        let g = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 8);
+        assert_eq!(g.slice_compute_cycles(&hw, 0), 0);
+        assert_eq!(g.expert_compute_cycles(&hw, 0), 0);
+    }
+
+    #[test]
+    fn slice_compute_scales_with_tokens() {
+        let hw = presets::mcm_2x2();
+        let g = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 8);
+        let c1 = g.slice_compute_cycles(&hw, 1);
+        let c16 = g.slice_compute_cycles(&hw, 16);
+        assert!(c16 > c1);
+        // overhead is charged once per slice-visit, not per token
+        assert!(c16 < 16 * c1);
+    }
+
+    #[test]
+    fn default_slices_in_range() {
+        let hw = presets::mcm_2x2();
+        for model in presets::all_models() {
+            let n = default_num_slices(&model, &hw);
+            assert!((2..=64).contains(&n), "{}: {n}", model.name);
+        }
+        // Small-expert models stay under the paper's ~10-slice sweet spot;
+        // Phi-3.5's 75 MiB experts need more slices to fit the buffer.
+        assert!(default_num_slices(&presets::qwen3_a3b(), &hw) <= 10);
+        assert!(default_num_slices(&presets::phi35_moe(), &hw) >= 8);
+    }
+
+    #[test]
+    fn d2d_transfer_comparable_to_compute_qwen() {
+        // Sanity: the design point where micro-slice D2D time ≈ compute
+        // time for a modest token share (paper §IV discussion).
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let g = ExpertGeometry::new(&model, &hw, 8);
+        let d2d = hw.d2d_cycles(g.slice_bytes);
+        let compute = g.slice_compute_cycles(&hw, 16);
+        let ratio = d2d as f64 / compute as f64;
+        assert!((0.2..5.0).contains(&ratio), "ratio {ratio}");
+    }
+}

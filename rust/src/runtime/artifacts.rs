@@ -1,0 +1,190 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted, so the runtime
+//! can size inputs and pick token buckets without parsing HLO.
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    ExpertFfn,
+    Gate,
+    Attn,
+    MoeLayer,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "expert_ffn" => Some(ArtifactKind::ExpertFfn),
+            "gate" => Some(ArtifactKind::Gate),
+            "attn" => Some(ArtifactKind::Attn),
+            "moe_layer" => Some(ArtifactKind::MoeLayer),
+            _ => None,
+        }
+    }
+
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            ArtifactKind::ExpertFfn => "expert_ffn",
+            ArtifactKind::Gate => "gate",
+            ArtifactKind::Attn => "attn",
+            ArtifactKind::MoeLayer => "moe_layer",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub tokens: usize,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub output_arity: usize,
+    pub path: PathBuf,
+}
+
+/// Toy-model shape config the artifacts were lowered for.
+#[derive(Clone, Debug)]
+pub struct ToyConfig {
+    pub d_model: usize,
+    pub d_ffn: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_heads: usize,
+    pub num_slices: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ToyConfig,
+    pub token_buckets: Vec<usize>,
+    pub entries: Vec<ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let cfg = json.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let config = ToyConfig {
+            d_model: get("d_model")?,
+            d_ffn: get("d_ffn")?,
+            n_experts: get("n_experts")?,
+            top_k: get("top_k")?,
+            n_heads: get("n_heads")?,
+            num_slices: get("num_slices")?,
+        };
+        let token_buckets = json
+            .get("token_buckets")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow!("manifest missing token_buckets"))?;
+
+        let mut entries = Vec::new();
+        let obj = json
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        for (name, meta) in obj {
+            let kind_s = meta
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing kind"))?;
+            let kind = ArtifactKind::parse(kind_s)
+                .ok_or_else(|| anyhow!("{name}: unknown kind {kind_s}"))?;
+            let shapes = |k: &str| -> Result<Vec<Vec<usize>>> {
+                meta.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {k}"))?
+                    .iter()
+                    .map(|v| v.as_usize_vec().ok_or_else(|| anyhow!("{name}: bad {k}")))
+                    .collect()
+            };
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file missing: {}", path.display());
+            }
+            entries.push(ManifestEntry {
+                name: name.clone(),
+                kind,
+                tokens: meta
+                    .get("tokens")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: missing tokens"))?,
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+                output_arity: meta
+                    .get("output_arity")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: missing output_arity"))?,
+                path,
+            });
+        }
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Manifest { config, token_buckets, entries, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifacts directory (env `ARTIFACTS_DIR` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn entry(&self, kind: ArtifactKind, tokens: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.tokens == tokens)
+    }
+
+    /// Smallest bucket that fits `tokens` (callers pad up to it).
+    pub fn bucket_for(&self, tokens: usize) -> Option<usize> {
+        self.token_buckets.iter().copied().find(|&b| b >= tokens)
+    }
+
+    pub fn largest_bucket(&self) -> usize {
+        self.token_buckets.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(ArtifactKind::parse("gate"), Some(ArtifactKind::Gate));
+        assert_eq!(ArtifactKind::parse("bogus"), None);
+        assert_eq!(ArtifactKind::ExpertFfn.prefix(), "expert_ffn");
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // Skips silently when artifacts haven't been built (unit tests must
+        // not require `make artifacts`); integration tests enforce it.
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).expect("manifest parses");
+        assert_eq!(m.config.d_model, 128);
+        assert!(m.entry(ArtifactKind::Gate, 1).is_some());
+        assert_eq!(m.bucket_for(3), Some(4));
+        assert_eq!(m.bucket_for(64), Some(64));
+        assert_eq!(m.bucket_for(4096), None);
+        assert_eq!(m.entries.len(), 4 * m.token_buckets.len());
+    }
+}

@@ -1,0 +1,246 @@
+//! PJRT execution engine: compile each HLO-text artifact once on the CPU
+//! PJRT client, then execute from the Rust hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) because the
+//! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! All artifacts were lowered with `return_tuple=True`, so outputs are
+//! unpacked from a tuple literal.
+
+use super::artifacts::{ArtifactKind, Manifest, ManifestEntry};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// A host tensor: row-major f32 (the numeric path runs the toy model in
+/// f32; gate indices are converted from s32 on exit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Pad the leading (token) dimension up to `rows` with zeros.
+    pub fn pad_rows(&self, rows: usize) -> Tensor {
+        assert!(!self.shape.is_empty());
+        let cur = self.shape[0];
+        assert!(rows >= cur, "pad_rows shrinking {cur} -> {rows}");
+        let stride: usize = self.shape[1..].iter().product();
+        let mut data = self.data.clone();
+        data.resize(rows * stride, 0.0);
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        Tensor { shape, data }
+    }
+
+    /// Keep only the first `rows` of the leading dimension.
+    pub fn truncate_rows(&self, rows: usize) -> Tensor {
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        Tensor { shape, data: self.data[..rows * stride].to_vec() }
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    arity: usize,
+}
+
+/// PJRT engine: one compiled executable per artifact, compiled lazily on
+/// first use and cached for the life of the engine.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Loaded>,
+}
+
+impl PjrtEngine {
+    pub fn new(manifest: Manifest) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtEngine { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache
+            .insert(name.to_string(), Loaded { exe, arity: entry.output_arity });
+        Ok(())
+    }
+
+    /// Eagerly compile every artifact (startup warm-up; keeps the request
+    /// path free of compile latency).
+    pub fn warm_up(&mut self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.entries.iter().map(|e| e.name.clone()).collect();
+        for n in &names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(names.len())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            xla::ElementType::S32 => lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("{e:?}"))?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect(),
+            other => bail!("unsupported output element type {other:?}"),
+        };
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// Execute an artifact by name. Inputs must match the manifest shapes.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .unwrap();
+        if inputs.len() != entry.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", entry.inputs.len(), inputs.len());
+        }
+        for (i, (t, want)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if &t.shape != want {
+                bail!("{name}: input {i} shape {:?} != manifest {:?}", t.shape, want);
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Self::to_literal).collect::<Result<_>>()?;
+        let loaded = self.cache.get(name).unwrap();
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // return_tuple=True: unpack the tuple.
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != loaded.arity {
+            bail!("{name}: expected {} outputs, got {}", loaded.arity, parts.len());
+        }
+        parts.iter().map(Self::from_literal).collect()
+    }
+
+    /// Execute a kind at the smallest token bucket ≥ `tokens`, padding the
+    /// leading dim of `token_inputs` and truncating outputs back. Weight
+    /// inputs (`fixed_inputs`) are passed through unpadded.
+    pub fn execute_bucketed(
+        &mut self,
+        kind: ArtifactKind,
+        tokens: usize,
+        token_input: &Tensor,
+        fixed_inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let bucket = self
+            .manifest
+            .bucket_for(tokens)
+            .ok_or_else(|| anyhow!("{tokens} tokens exceeds largest bucket"))?;
+        let entry: &ManifestEntry = self
+            .manifest
+            .entry(kind, bucket)
+            .ok_or_else(|| anyhow!("no artifact for {kind:?} at bucket {bucket}"))?;
+        let name = entry.name.clone();
+        let mut inputs = Vec::with_capacity(1 + fixed_inputs.len());
+        inputs.push(token_input.pad_rows(bucket));
+        inputs.extend_from_slice(fixed_inputs);
+        let outs = self.execute(&name, &inputs)?;
+        Ok(outs
+            .into_iter()
+            .map(|t| {
+                if !t.shape.is_empty() && t.shape[0] == bucket {
+                    t.truncate_rows(tokens)
+                } else {
+                    t
+                }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_pad_truncate_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = t.pad_rows(4);
+        assert_eq!(p.shape, vec![4, 3]);
+        assert_eq!(&p.data[6..], &[0.0; 6]);
+        let back = p.truncate_rows(2);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_shape_checked() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let z = Tensor::zeros(vec![3, 4]);
+        assert_eq!(z.n_elements(), 12);
+        assert!(z.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py`) and executes them on the request path — Python
+//! never runs at serve time.
+//!
+//! * `artifacts` — manifest parsing and artifact discovery.
+//! * `engine` — PJRT CPU client, one compiled executable per shape bucket,
+//!   tensor conversion helpers.
+//! * `reference` — native f32 reference ops to cross-check PJRT numerics.
+
+pub mod artifacts;
+pub mod engine;
+pub mod reference;
+
+pub use artifacts::{ArtifactKind, Manifest, ManifestEntry};
+pub use engine::{PjrtEngine, Tensor};

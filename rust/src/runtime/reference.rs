@@ -1,0 +1,223 @@
+//! Native f32 reference implementations of the model math — the oracle the
+//! PJRT path is cross-checked against (mirrors python `kernels/ref.py`).
+
+use super::engine::Tensor;
+
+/// `(m,k) @ (k,n) -> (m,n)`, row-major.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Gated FFN: `(silu(x@w1) * (x@w3)) @ w2`.
+pub fn expert_ffn(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
+    let g = matmul(x, w1);
+    let u = matmul(x, w3);
+    let h = Tensor::new(
+        g.shape.clone(),
+        g.data
+            .iter()
+            .zip(&u.data)
+            .map(|(&a, &b)| silu(a) * b)
+            .collect(),
+    );
+    matmul(&h, w2)
+}
+
+/// Router: logits, softmax-normalized top-k weights + indices.
+pub fn gate_topk(x: &Tensor, wg: &Tensor, top_k: usize) -> (Tensor, Tensor) {
+    let logits = matmul(x, wg);
+    let (t, e) = (logits.shape[0], logits.shape[1]);
+    let mut weights = vec![0.0f32; t * top_k];
+    let mut indices = vec![0.0f32; t * top_k];
+    for i in 0..t {
+        let row = &logits.data[i * e..(i + 1) * e];
+        let mut order: Vec<usize> = (0..e).collect();
+        // Descending by logit; index ascending tiebreak (matches lax.top_k).
+        order.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+        let top = &order[..top_k];
+        let maxv = row[top[0]];
+        let exps: Vec<f32> = top.iter().map(|&j| (row[j] - maxv).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        for (k, &j) in top.iter().enumerate() {
+            weights[i * top_k + k] = exps[k] / sum;
+            indices[i * top_k + k] = j as f32;
+        }
+    }
+    (
+        Tensor::new(vec![t, top_k], weights),
+        Tensor::new(vec![t, top_k], indices),
+    )
+}
+
+/// Dense causal multi-head attention (matches `ref.attention_causal`).
+pub fn attention_causal(
+    x: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    n_heads: usize,
+) -> Tensor {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let dh = d / n_heads;
+    let q = matmul(x, wq);
+    let k = matmul(x, wk);
+    let v = matmul(x, wv);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; t * d];
+    for h in 0..n_heads {
+        for i in 0..t {
+            // causal scores over j <= i
+            let qi = &q.data[i * d + h * dh..i * d + (h + 1) * dh];
+            let mut scores = Vec::with_capacity(i + 1);
+            for j in 0..=i {
+                let kj = &k.data[j * d + h * dh..j * d + (h + 1) * dh];
+                let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                scores.push(dot * scale);
+            }
+            let maxv = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|s| (s - maxv).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for (j, &e) in exps.iter().enumerate() {
+                let w = e / sum;
+                let vj = &v.data[j * d + h * dh..j * d + (h + 1) * dh];
+                for (c, &vv) in vj.iter().enumerate() {
+                    out[i * d + h * dh + c] += w * vv;
+                }
+            }
+        }
+    }
+    matmul(&Tensor::new(vec![t, d], out), wo)
+}
+
+/// Dense-reference full MoE layer: every expert on every token, masked by
+/// the gate — the scheduling-independent oracle.
+pub fn moe_layer(
+    x: &Tensor,
+    wg: &Tensor,
+    w1: &[Tensor],
+    w3: &[Tensor],
+    w2: &[Tensor],
+    top_k: usize,
+) -> Tensor {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let (weights, indices) = gate_topk(x, wg, top_k);
+    let mut out = vec![0.0f32; t * d];
+    for (e, ((a, b), c)) in w1.iter().zip(w3).zip(w2).enumerate() {
+        let y = expert_ffn(x, a, b, c);
+        for i in 0..t {
+            let mut w = 0.0;
+            for k in 0..top_k {
+                if indices.data[i * top_k + k] as usize == e {
+                    w += weights.data[i * top_k + k];
+                }
+            }
+            if w != 0.0 {
+                for j in 0..d {
+                    out[i * d + j] += w * y.data[i * d + j];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![t, d], out)
+}
+
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal_f32(scale)).collect())
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0) - 0.0).abs() < 1e-9);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gate_topk_selects_and_normalizes() {
+        // x @ I picks logits directly
+        let x = Tensor::new(vec![1, 4], vec![0.1, 5.0, -1.0, 3.0]);
+        let eye = {
+            let mut d = vec![0.0; 16];
+            for i in 0..4 {
+                d[i * 4 + i] = 1.0;
+            }
+            Tensor::new(vec![4, 4], d)
+        };
+        let (w, i) = gate_topk(&x, &eye, 2);
+        assert_eq!(i.data, vec![1.0, 3.0]);
+        let s: f32 = w.data.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(w.data[0] > w.data[1]);
+    }
+
+    #[test]
+    fn attention_single_token_is_value_proj() {
+        let mut rng = Rng::new(3);
+        let d = 8;
+        let x = rand_t(&mut rng, vec![1, d], 0.5);
+        let ws: Vec<Tensor> = (0..4).map(|_| rand_t(&mut rng, vec![d, d], 0.3)).collect();
+        let y = attention_causal(&x, &ws[0], &ws[1], &ws[2], &ws[3], 2);
+        let want = matmul(&matmul(&x, &ws[2]), &ws[3]);
+        assert!(max_abs_diff(&y, &want) < 1e-5);
+    }
+
+    #[test]
+    fn moe_layer_single_expert_equals_ffn() {
+        let mut rng = Rng::new(5);
+        let (d, f) = (6, 10);
+        let x = rand_t(&mut rng, vec![3, d], 0.5);
+        let wg = rand_t(&mut rng, vec![d, 1], 0.5);
+        let w1 = vec![rand_t(&mut rng, vec![d, f], 0.3)];
+        let w3 = vec![rand_t(&mut rng, vec![d, f], 0.3)];
+        let w2 = vec![rand_t(&mut rng, vec![f, d], 0.3)];
+        let y = moe_layer(&x, &wg, &w1, &w3, &w2, 1);
+        let want = expert_ffn(&x, &w1[0], &w3[0], &w2[0]);
+        assert!(max_abs_diff(&y, &want) < 1e-5);
+    }
+}

@@ -1,0 +1,132 @@
+//! On-chip buffer occupancy tracking: per-chiplet current/peak bytes, used
+//! for the Fig 12 memory comparison and the Fig 16/17 buffer-size DSE.
+
+use super::{ChipletId, SimTime};
+
+/// Tracks weight-buffer occupancy per chiplet over time.
+#[derive(Clone, Debug)]
+pub struct BufferTracker {
+    capacity: u64,
+    current: Vec<u64>,
+    peak: Vec<u64>,
+    /// Number of reservations that had to use the emergency overcommit
+    /// slot (deadlock-avoidance escape hatch; should stay rare).
+    overcommits: u64,
+}
+
+impl BufferTracker {
+    pub fn new(n_chiplets: usize, capacity: u64) -> Self {
+        BufferTracker {
+            capacity,
+            current: vec![0; n_chiplets],
+            peak: vec![0; n_chiplets],
+            overcommits: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn occupied(&self, c: ChipletId) -> u64 {
+        self.current[c]
+    }
+
+    pub fn free_bytes(&self, c: ChipletId) -> u64 {
+        self.capacity.saturating_sub(self.current[c])
+    }
+
+    /// Whether `bytes` can be reserved without overcommitting.
+    pub fn fits(&self, c: ChipletId, bytes: u64) -> bool {
+        self.current[c] + bytes <= self.capacity
+    }
+
+    /// Reserve unconditionally (callers gate with `fits`; an over-capacity
+    /// reservation is counted as an emergency overcommit — the virtual
+    /// escape slot that guarantees ring progress).
+    pub fn reserve(&mut self, c: ChipletId, bytes: u64, _now: SimTime) {
+        self.current[c] += bytes;
+        if self.current[c] > self.capacity {
+            self.overcommits += 1;
+        }
+        if self.current[c] > self.peak[c] {
+            self.peak[c] = self.current[c];
+        }
+    }
+
+    pub fn release(&mut self, c: ChipletId, bytes: u64, _now: SimTime) {
+        debug_assert!(self.current[c] >= bytes, "releasing more than reserved");
+        self.current[c] -= bytes;
+    }
+
+    pub fn peak(&self, c: ChipletId) -> u64 {
+        self.peak[c]
+    }
+
+    /// Package-wide peak: sum of per-chiplet peaks (conservative upper
+    /// bound on simultaneous footprint; matches how the paper reports
+    /// total on-chip memory).
+    pub fn package_peak(&self) -> u64 {
+        self.peak.iter().sum()
+    }
+
+    pub fn max_chiplet_peak(&self) -> u64 {
+        self.peak.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn overcommits(&self) -> u64 {
+        self.overcommits
+    }
+
+    /// All reservations returned? (leak check for tests)
+    pub fn drained(&self) -> bool {
+        self.current.iter().all(|&c| c == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracking() {
+        let mut b = BufferTracker::new(2, 100);
+        b.reserve(0, 40, 0);
+        b.reserve(0, 50, 1);
+        assert_eq!(b.occupied(0), 90);
+        assert_eq!(b.peak(0), 90);
+        b.release(0, 40, 2);
+        b.reserve(0, 10, 3);
+        assert_eq!(b.peak(0), 90);
+        assert_eq!(b.package_peak(), 90);
+        assert_eq!(b.overcommits(), 0);
+    }
+
+    #[test]
+    fn fits_and_overcommit() {
+        let mut b = BufferTracker::new(1, 100);
+        assert!(b.fits(0, 100));
+        b.reserve(0, 80, 0);
+        assert!(!b.fits(0, 30));
+        b.reserve(0, 30, 1); // emergency
+        assert_eq!(b.overcommits(), 1);
+        assert_eq!(b.peak(0), 110);
+    }
+
+    #[test]
+    fn drained_check() {
+        let mut b = BufferTracker::new(1, 10);
+        b.reserve(0, 5, 0);
+        assert!(!b.drained());
+        b.release(0, 5, 1);
+        assert!(b.drained());
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing more than reserved")]
+    #[cfg(debug_assertions)]
+    fn release_underflow_panics() {
+        let mut b = BufferTracker::new(1, 10);
+        b.release(0, 1, 0);
+    }
+}

@@ -1,0 +1,238 @@
+//! 2D-mesh interconnect: XY routing over per-directed-edge D2D links.
+//!
+//! Chiplets are numbered row-major. The paper's expert trajectories are
+//! *logical* rings; on arrays larger than 2×2 they are laid over the mesh
+//! (§VI-A: "the ring is a logical route and is not tied to a physical ring
+//! topology"), so a logical next-hop may traverse several physical links.
+//! `snake_order` gives the boustrophedon enumeration that keeps logical
+//! neighbors physically adjacent.
+
+use super::resource::SerialResource;
+use super::{ChipletId, SimTime};
+use crate::config::HardwareConfig;
+
+/// One direction of a physical D2D link between mesh neighbors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub from: ChipletId,
+    pub to: ChipletId,
+}
+
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    rows: usize,
+    cols: usize,
+    /// Directed-edge resources, indexed by `edge_index`.
+    links: Vec<SerialResource>,
+    /// Per-hop latency (cycles).
+    hop_cycles: u64,
+    /// Link bandwidth (bytes/cycle).
+    bytes_per_cycle: f64,
+}
+
+impl Mesh {
+    pub fn new(hw: &HardwareConfig) -> Self {
+        let rows = hw.mesh_rows;
+        let cols = hw.mesh_cols;
+        // 4 potential directed edges per node (N/E/S/W); index = node*4+dir.
+        let links = vec![SerialResource::new(); rows * cols * 4];
+        Mesh {
+            rows,
+            cols,
+            links,
+            hop_cycles: hw.d2d_hop_cycles(),
+            bytes_per_cycle: hw.d2d_bytes_per_cycle(),
+        }
+    }
+
+    pub fn n_chiplets(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    fn coords(&self, c: ChipletId) -> (usize, usize) {
+        (c / self.cols, c % self.cols)
+    }
+
+    fn id(&self, r: usize, col: usize) -> ChipletId {
+        r * self.cols + col
+    }
+
+    /// Direction index for an adjacent step.
+    fn dir(dr: isize, dc: isize) -> usize {
+        match (dr, dc) {
+            (-1, 0) => 0, // N
+            (0, 1) => 1,  // E
+            (1, 0) => 2,  // S
+            (0, -1) => 3, // W
+            _ => unreachable!("non-adjacent step"),
+        }
+    }
+
+    /// XY route between two chiplets as a list of directed hops.
+    pub fn route(&self, from: ChipletId, to: ChipletId) -> Vec<Edge> {
+        assert!(from < self.n_chiplets() && to < self.n_chiplets());
+        let (mut r, mut c) = self.coords(from);
+        let (tr, tc) = self.coords(to);
+        let mut hops = Vec::new();
+        while c != tc {
+            let dc: isize = if tc > c { 1 } else { -1 };
+            let nc = (c as isize + dc) as usize;
+            hops.push(Edge { from: self.id(r, c), to: self.id(r, nc) });
+            c = nc;
+        }
+        while r != tr {
+            let dr: isize = if tr > r { 1 } else { -1 };
+            let nr = (r as isize + dr) as usize;
+            hops.push(Edge { from: self.id(r, c), to: self.id(nr, c) });
+            r = nr;
+        }
+        hops
+    }
+
+    pub fn hops(&self, from: ChipletId, to: ChipletId) -> usize {
+        let (r1, c1) = self.coords(from);
+        let (r2, c2) = self.coords(to);
+        r1.abs_diff(r2) + c1.abs_diff(c2)
+    }
+
+    fn edge_index(&self, e: Edge) -> usize {
+        let (r1, c1) = self.coords(e.from);
+        let (r2, c2) = self.coords(e.to);
+        let dir = Self::dir(r2 as isize - r1 as isize, c2 as isize - c1 as isize);
+        e.from * 4 + dir
+    }
+
+    /// Transfer `bytes` from `from` to `to` starting no earlier than
+    /// `ready_at`; occupies every link on the XY path (store-and-forward
+    /// per hop). Returns arrival time.
+    pub fn transfer(
+        &mut self,
+        from: ChipletId,
+        to: ChipletId,
+        bytes: u64,
+        ready_at: SimTime,
+    ) -> SimTime {
+        if from == to || bytes == 0 {
+            return ready_at;
+        }
+        let serialize = (bytes as f64 / self.bytes_per_cycle).ceil() as u64;
+        let mut t = ready_at;
+        for hop in self.route(from, to) {
+            let idx = self.edge_index(hop);
+            let (_, end) = self.links[idx].acquire(t, serialize);
+            t = end + self.hop_cycles;
+        }
+        t
+    }
+
+    /// Earliest start on the first link of the path (for eager senders).
+    pub fn first_link_free_at(&self, from: ChipletId, to: ChipletId) -> SimTime {
+        if from == to {
+            return 0;
+        }
+        let hops = self.route(from, to);
+        self.links[self.edge_index(hops[0])].free_at()
+    }
+
+    /// Boustrophedon (snake) order over all chiplets: consecutive entries
+    /// are physical neighbors, so a logical ring laid in this order pays
+    /// one hop per step (plus the wrap-around).
+    pub fn snake_order(&self) -> Vec<ChipletId> {
+        let mut order = Vec::with_capacity(self.n_chiplets());
+        for r in 0..self.rows {
+            if r % 2 == 0 {
+                for c in 0..self.cols {
+                    order.push(self.id(r, c));
+                }
+            } else {
+                for c in (0..self.cols).rev() {
+                    order.push(self.id(r, c));
+                }
+            }
+        }
+        order
+    }
+
+    /// Rank of each chiplet in snake order (inverse permutation).
+    pub fn snake_rank(&self) -> Vec<usize> {
+        let order = self.snake_order();
+        let mut rank = vec![0; order.len()];
+        for (i, &c) in order.iter().enumerate() {
+            rank[c] = i;
+        }
+        rank
+    }
+
+    /// Total bytes·cycles of D2D traffic so far (for reporting).
+    pub fn total_link_busy_cycles(&self) -> u64 {
+        self.links.iter().map(|l| l.busy_cycles()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn mesh(n: usize) -> Mesh {
+        Mesh::new(&presets::mcm_nxn(n))
+    }
+
+    #[test]
+    fn route_is_xy_and_adjacent() {
+        let m = mesh(3);
+        // 0 (0,0) -> 8 (2,2): X first then Y => 0->1->2->5->8
+        let hops = m.route(0, 8);
+        assert_eq!(hops.len(), 4);
+        assert_eq!(hops[0], Edge { from: 0, to: 1 });
+        assert_eq!(hops[1], Edge { from: 1, to: 2 });
+        assert_eq!(hops[2], Edge { from: 2, to: 5 });
+        assert_eq!(hops[3], Edge { from: 5, to: 8 });
+        assert_eq!(m.hops(0, 8), 4);
+        assert!(m.route(4, 4).is_empty());
+    }
+
+    #[test]
+    fn transfer_accumulates_latency() {
+        let mut m = mesh(2);
+        let hw = presets::mcm_2x2();
+        let bytes = 360_000; // = 1000 cycles at 360 B/cycle
+        let arrive = m.transfer(0, 1, bytes, 0);
+        assert_eq!(arrive, 1000 + hw.d2d_hop_cycles());
+        // Same link again: serialized behind the first transfer.
+        let arrive2 = m.transfer(0, 1, bytes, 0);
+        assert_eq!(arrive2, 2000 + hw.d2d_hop_cycles());
+        // Reverse direction is an independent link.
+        let arrive3 = m.transfer(1, 0, bytes, 0);
+        assert_eq!(arrive3, 1000 + hw.d2d_hop_cycles());
+    }
+
+    #[test]
+    fn zero_and_self_transfers_free() {
+        let mut m = mesh(2);
+        assert_eq!(m.transfer(0, 0, 1 << 20, 42), 42);
+        assert_eq!(m.transfer(0, 1, 0, 42), 42);
+    }
+
+    #[test]
+    fn snake_order_neighbors() {
+        for n in 2..=4 {
+            let m = mesh(n);
+            let order = m.snake_order();
+            assert_eq!(order.len(), n * n);
+            for w in order.windows(2) {
+                assert_eq!(m.hops(w[0], w[1]), 1, "snake step {w:?} not adjacent");
+            }
+        }
+    }
+
+    #[test]
+    fn snake_rank_is_inverse() {
+        let m = mesh(3);
+        let order = m.snake_order();
+        let rank = m.snake_rank();
+        for (i, &c) in order.iter().enumerate() {
+            assert_eq!(rank[c], i);
+        }
+    }
+}

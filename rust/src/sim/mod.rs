@@ -1,0 +1,25 @@
+//! Cycle-level discrete-event simulation substrate for the multi-chiplet
+//! package: serializing resources (DDR channels, D2D links), the mesh
+//! topology, activity tracing, and buffer-occupancy tracking.
+//!
+//! This module is *passive*: it provides timing/occupancy primitives; the
+//! event loops that drive them live in `coordinator` (FSE-DP rules engine)
+//! and `baselines` (EP / Hydra / naive FSE-DP).
+//!
+//! All times are in compute-die clock cycles (`SimTime = u64`).
+
+pub mod memory;
+pub mod mesh;
+pub mod resource;
+pub mod trace;
+
+pub use memory::BufferTracker;
+pub use mesh::Mesh;
+pub use resource::SerialResource;
+pub use trace::{ActivityKind, Span, Timeline};
+
+/// Simulation time in compute-die cycles.
+pub type SimTime = u64;
+
+/// Chiplet index within the mesh (row-major).
+pub type ChipletId = usize;

@@ -1,0 +1,198 @@
+//! Activity tracing: spans of compute / DDR / D2D activity per chiplet,
+//! plus the derived utilization curves (Fig 11) and the textual activity
+//! timeline (Fig 13).
+
+use super::{ChipletId, SimTime};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActivityKind {
+    Compute,
+    DdrLoad,
+    D2dSend,
+    D2dRecv,
+}
+
+impl ActivityKind {
+    pub fn glyph(&self) -> char {
+        match self {
+            ActivityKind::Compute => '#',
+            ActivityKind::DdrLoad => 'D',
+            ActivityKind::D2dSend => '>',
+            ActivityKind::D2dRecv => '<',
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub chiplet: ChipletId,
+    pub kind: ActivityKind,
+    pub start: SimTime,
+    pub end: SimTime,
+    /// Expert id the activity belongs to (u16::MAX when not applicable).
+    pub expert: u16,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+    enabled: bool,
+    /// Compute-busy cycles per chiplet, tracked even when span recording is
+    /// disabled (utilization is always needed; spans only for Fig 13).
+    busy: Vec<u64>,
+}
+
+impl Timeline {
+    pub fn new(n_chiplets: usize, record_spans: bool) -> Self {
+        Timeline { spans: Vec::new(), enabled: record_spans, busy: vec![0; n_chiplets] }
+    }
+
+    pub fn record(&mut self, span: Span) {
+        debug_assert!(span.end >= span.start);
+        if span.kind == ActivityKind::Compute {
+            self.busy[span.chiplet] += span.end - span.start;
+        }
+        if self.enabled {
+            self.spans.push(span);
+        }
+    }
+
+    pub fn compute_busy(&self, chiplet: ChipletId) -> u64 {
+        self.busy[chiplet]
+    }
+
+    pub fn n_chiplets(&self) -> usize {
+        self.busy.len()
+    }
+
+    /// Mean compute utilization over `[0, makespan]`.
+    pub fn utilization(&self, makespan: SimTime) -> f64 {
+        if makespan == 0 {
+            return 0.0;
+        }
+        let total: u64 = self.busy.iter().sum();
+        total as f64 / (makespan as f64 * self.busy.len() as f64)
+    }
+
+    /// Utilization in fixed windows (the Fig 11 fluctuation curve).
+    /// Requires span recording.
+    pub fn utilization_curve(&self, makespan: SimTime, windows: usize) -> Vec<f64> {
+        assert!(self.enabled, "utilization_curve needs span recording");
+        if makespan == 0 || windows == 0 {
+            return vec![];
+        }
+        let w = (makespan as f64 / windows as f64).max(1.0);
+        let mut busy = vec![0.0; windows];
+        for s in &self.spans {
+            if s.kind != ActivityKind::Compute {
+                continue;
+            }
+            let (a, b) = (s.start as f64, s.end as f64);
+            let first = (a / w) as usize;
+            let last = ((b / w) as usize).min(windows - 1);
+            for win in first..=last {
+                let lo = (win as f64 * w).max(a);
+                let hi = ((win + 1) as f64 * w).min(b);
+                if hi > lo {
+                    busy[win] += hi - lo;
+                }
+            }
+        }
+        busy
+            .into_iter()
+            .map(|b| b / (w * self.busy.len() as f64))
+            .collect()
+    }
+
+    /// Render a textual gantt chart (Fig 13): one row per (chiplet, kind),
+    /// `cols` characters wide over `[t0, t1]`.
+    pub fn render_gantt(&self, t0: SimTime, t1: SimTime, cols: usize) -> String {
+        assert!(self.enabled, "render_gantt needs span recording");
+        let kinds = [
+            ActivityKind::Compute,
+            ActivityKind::DdrLoad,
+            ActivityKind::D2dSend,
+            ActivityKind::D2dRecv,
+        ];
+        let span_t = (t1 - t0).max(1) as f64;
+        let mut out = String::new();
+        for chiplet in 0..self.busy.len() {
+            for kind in kinds {
+                let mut row = vec!['.'; cols];
+                for s in self.spans.iter().filter(|s| s.chiplet == chiplet && s.kind == kind) {
+                    if s.end <= t0 || s.start >= t1 {
+                        continue;
+                    }
+                    let a = ((s.start.max(t0) - t0) as f64 / span_t * cols as f64) as usize;
+                    let b = ((s.end.min(t1) - t0) as f64 / span_t * cols as f64).ceil() as usize;
+                    for c in row.iter_mut().take(b.min(cols)).skip(a) {
+                        *c = kind.glyph();
+                    }
+                }
+                out.push_str(&format!(
+                    "chiplet{} {:8} |{}|\n",
+                    chiplet,
+                    format!("{kind:?}"),
+                    row.iter().collect::<String>()
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(c: usize, kind: ActivityKind, s: u64, e: u64) -> Span {
+        Span { chiplet: c, kind, start: s, end: e, expert: 0 }
+    }
+
+    #[test]
+    fn busy_tracks_compute_only() {
+        let mut t = Timeline::new(2, false);
+        t.record(span(0, ActivityKind::Compute, 0, 10));
+        t.record(span(0, ActivityKind::DdrLoad, 0, 100));
+        t.record(span(1, ActivityKind::Compute, 5, 10));
+        assert_eq!(t.compute_busy(0), 10);
+        assert_eq!(t.compute_busy(1), 5);
+        assert!((t.utilization(10) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spans_dropped_when_disabled() {
+        let mut t = Timeline::new(1, false);
+        t.record(span(0, ActivityKind::Compute, 0, 10));
+        assert!(t.spans.is_empty());
+        let mut t = Timeline::new(1, true);
+        t.record(span(0, ActivityKind::Compute, 0, 10));
+        assert_eq!(t.spans.len(), 1);
+    }
+
+    #[test]
+    fn curve_integrates_to_mean() {
+        let mut t = Timeline::new(1, true);
+        t.record(span(0, ActivityKind::Compute, 0, 50));
+        t.record(span(0, ActivityKind::Compute, 75, 100));
+        let curve = t.utilization_curve(100, 4);
+        assert_eq!(curve.len(), 4);
+        assert!((curve[0] - 1.0).abs() < 1e-9);
+        assert!((curve[1] - 1.0).abs() < 1e-9);
+        assert!((curve[2] - 0.0).abs() < 1e-9);
+        assert!((curve[3] - 1.0).abs() < 1e-9);
+        let mean = curve.iter().sum::<f64>() / 4.0;
+        assert!((mean - t.utilization(100)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let mut t = Timeline::new(1, true);
+        t.record(span(0, ActivityKind::Compute, 0, 50));
+        t.record(span(0, ActivityKind::DdrLoad, 50, 100));
+        let g = t.render_gantt(0, 100, 20);
+        assert!(g.contains("chiplet0"));
+        assert!(g.contains('#'));
+        assert!(g.contains('D'));
+    }
+}

@@ -1,0 +1,71 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline with a fixed vendored crate set
+//! (no `rand`, `serde`, `clap`, `criterion`), so the crate carries its own
+//! deterministic PRNG, a minimal JSON reader for the artifact manifest, a
+//! fixed-width table printer for experiment output, and summary statistics.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;
+pub use table::Table;
+
+/// Integer ceil-division for timing arithmetic.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a / b + (a % b != 0) as u64
+}
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a cycle count at a given clock as microseconds.
+pub fn cycles_to_us(cycles: u64, freq_hz: f64) -> f64 {
+    cycles as f64 / freq_hz * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(u64::MAX - 1, u64::MAX), 1);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn cycles_to_us_at_800mhz() {
+        let us = cycles_to_us(800, 800e6);
+        assert!((us - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,422 @@
+//! Workload substrate: requests, iterations, and calibrated long-tail
+//! gating traces.
+//!
+//! The paper drives its evaluation with per-iteration input-token counts
+//! (16/64/256/1024) sampled from Wikitext-2 / C4, mixing prefill and decode
+//! via chunked prefill. Real datasets are substituted by a seeded generator
+//! whose per-expert token-count distribution matches the long-tail shape of
+//! Figure 2 (DESIGN.md §5): Zipf-distributed expert popularity, re-ranked
+//! per layer, jittered per iteration.
+
+use crate::config::{Dataset, MoeModelConfig};
+use crate::moe::ExpertId;
+use crate::util::Rng;
+use std::collections::HashSet;
+
+/// A request's contribution to one iteration (chunked prefill: a prefill
+/// chunk or a single decode token).
+#[derive(Clone, Debug)]
+pub struct RequestChunk {
+    pub request_id: u32,
+    pub tokens: usize,
+    /// true = prefill chunk, false = decode step.
+    pub is_prefill: bool,
+}
+
+/// Gating decision for one token at one layer.
+#[derive(Clone, Debug)]
+pub struct TokenGate {
+    pub request_id: u32,
+    /// Routed top-k experts followed by shared experts.
+    pub experts: Vec<ExpertId>,
+}
+
+/// All gating decisions of one layer for the iteration's token batch.
+#[derive(Clone, Debug, Default)]
+pub struct LayerGating {
+    pub tokens: Vec<TokenGate>,
+}
+
+/// One forward scheduling iteration: the token batch and per-layer gating.
+#[derive(Clone, Debug)]
+pub struct IterationWorkload {
+    pub chunks: Vec<RequestChunk>,
+    pub layers: Vec<LayerGating>,
+}
+
+impl IterationWorkload {
+    pub fn total_tokens(&self) -> usize {
+        self.chunks.iter().map(|c| c.tokens).sum()
+    }
+}
+
+/// Per-expert load of one layer after sharding tokens across chiplets —
+/// the structure every strategy consumes.
+#[derive(Clone, Debug)]
+pub struct ExpertLoad {
+    pub expert: ExpertId,
+    /// Token count held by each chiplet that activates this expert.
+    pub tokens_per_chiplet: Vec<u32>,
+    pub total: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerWorkload {
+    /// Only experts with at least one token, ascending expert id.
+    pub experts: Vec<ExpertLoad>,
+    pub n_chiplets: usize,
+    pub total_tokens: u32,
+}
+
+impl LayerWorkload {
+    pub fn expert_load(&self, e: ExpertId) -> Option<&ExpertLoad> {
+        self.experts.iter().find(|l| l.expert == e)
+    }
+}
+
+/// Shard a layer's tokens round-robin across chiplets (the data-parallel
+/// residency both FSE-DP and the baselines start from) and aggregate per
+/// expert. Tokens of `deferred` requests are excluded (token buffering).
+pub fn shard_layer(
+    gating: &LayerGating,
+    n_experts_total: usize,
+    n_chiplets: usize,
+    deferred: &HashSet<u32>,
+) -> LayerWorkload {
+    let mut per: Vec<Vec<u32>> = vec![vec![0; n_chiplets]; n_experts_total];
+    let mut slot = 0usize;
+    let mut total = 0u32;
+    for tg in &gating.tokens {
+        if deferred.contains(&tg.request_id) {
+            continue;
+        }
+        let chiplet = slot % n_chiplets;
+        slot += 1;
+        total += 1;
+        for &e in &tg.experts {
+            per[e as usize][chiplet] += 1;
+        }
+    }
+    let experts = per
+        .into_iter()
+        .enumerate()
+        .filter_map(|(e, tokens_per_chiplet)| {
+            let t: u32 = tokens_per_chiplet.iter().sum();
+            (t > 0).then_some(ExpertLoad {
+                expert: e as ExpertId,
+                tokens_per_chiplet,
+                total: t,
+            })
+        })
+        .collect();
+    LayerWorkload { experts, n_chiplets, total_tokens: total }
+}
+
+/// Calibrated long-tail gating-trace generator.
+pub struct TraceGenerator {
+    model: MoeModelConfig,
+    dataset: Dataset,
+    /// Per-layer expert popularity weights (unnormalized).
+    layer_popularity: Vec<Vec<f64>>,
+    rng: Rng,
+    next_request_id: u32,
+    /// Persistent decode-request pool: decode requests live across many
+    /// iterations (each contributes one token per forward pass), which is
+    /// what lets Algorithm 2's per-request QoS timers accrue credit.
+    decode_pool: Vec<u32>,
+}
+
+impl TraceGenerator {
+    pub fn new(model: &MoeModelConfig, dataset: Dataset, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xE5E5_57FE_A11E_D000);
+        let layer_popularity = (0..model.n_layers)
+            .map(|l| Self::layer_weights(model, dataset, &mut rng, l))
+            .collect();
+        TraceGenerator {
+            model: model.clone(),
+            dataset,
+            layer_popularity,
+            rng,
+            next_request_id: 0,
+            decode_pool: Vec::new(),
+        }
+    }
+
+    /// Zipf weights over experts with a per-layer re-ranking: rank order is
+    /// a blend of a global permutation and a per-layer one, controlled by
+    /// the dataset's decorrelation.
+    fn layer_weights(
+        model: &MoeModelConfig,
+        dataset: Dataset,
+        rng: &mut Rng,
+        layer: usize,
+    ) -> Vec<f64> {
+        let e = model.n_experts;
+        let s = dataset.zipf_s();
+        // Global hot ranking shared across layers.
+        let mut global_rank: Vec<usize> = (0..e).collect();
+        let mut global_rng = Rng::new(0xA5A5 ^ model.n_experts as u64);
+        global_rng.shuffle(&mut global_rank);
+        // Per-layer ranking.
+        let mut layer_rank: Vec<usize> = (0..e).collect();
+        let mut lr = rng.fork(layer as u64 + 1);
+        lr.shuffle(&mut layer_rank);
+
+        let d = dataset.layer_decorrelation();
+        let mut weights = vec![0.0; e];
+        for i in 0..e {
+            let wr_global = 1.0 / ((global_rank[i] + 1) as f64).powf(s);
+            let wr_layer = 1.0 / ((layer_rank[i] + 1) as f64).powf(s);
+            weights[i] = (1.0 - d) * wr_global + d * wr_layer;
+        }
+        weights
+    }
+
+    pub fn model(&self) -> &MoeModelConfig {
+        &self.model
+    }
+
+    pub fn dataset(&self) -> Dataset {
+        self.dataset
+    }
+
+    /// Compose one iteration's request mix under chunked prefill: a couple
+    /// of concurrent requests, at most one in prefill, the rest decoding
+    /// one token each; the prefill chunk absorbs the remaining budget.
+    fn request_mix(&mut self, tokens: usize) -> Vec<RequestChunk> {
+        let mut chunks = Vec::new();
+        // Low-batch regime: 1..=8 concurrent requests (paper §II-B).
+        let n_requests = self.rng.range(1, 9.min(tokens + 1));
+        let decode_requests = n_requests - 1;
+        let prefill_tokens = tokens.saturating_sub(decode_requests);
+        // Decode requests persist across iterations (multi-pass decoding);
+        // occasionally one finishes and a fresh request replaces it.
+        while self.decode_pool.len() < decode_requests {
+            self.next_request_id += 1;
+            self.decode_pool.push(self.next_request_id);
+        }
+        if !self.decode_pool.is_empty() && self.rng.bool(0.1) {
+            let victim = self.rng.range(0, self.decode_pool.len());
+            self.next_request_id += 1;
+            self.decode_pool[victim] = self.next_request_id;
+        }
+        if prefill_tokens > 0 {
+            self.next_request_id += 1;
+            chunks.push(RequestChunk {
+                request_id: self.next_request_id,
+                tokens: prefill_tokens,
+                is_prefill: true,
+            });
+        }
+        for i in 0..decode_requests {
+            chunks.push(RequestChunk {
+                request_id: self.decode_pool[i],
+                tokens: 1,
+                is_prefill: false,
+            });
+        }
+        // Guarantee exact token budget even for tiny iterations.
+        let have: usize = chunks.iter().map(|c| c.tokens).sum();
+        debug_assert_eq!(have, tokens);
+        chunks
+    }
+
+    /// Sample gates for `n` extra tokens of `request_id` at one layer —
+    /// used to re-inject token-buffered (deferred) requests into a later
+    /// iteration at the layer where they paused.
+    pub fn sample_gates(
+        &mut self,
+        layer: usize,
+        iter_idx: usize,
+        n: usize,
+        request_id: u32,
+    ) -> Vec<TokenGate> {
+        let k = self.model.top_k;
+        let e = self.model.n_experts;
+        let shared: Vec<ExpertId> =
+            (0..self.model.n_shared).map(|i| (e + i) as ExpertId).collect();
+        let mut jitter_rng = self.rng.fork((iter_idx as u64) << 16 | layer as u64 | 1 << 48);
+        let weights: Vec<f64> = self.layer_popularity[layer]
+            .iter()
+            .map(|w| w * (0.35 * jitter_rng.normal()).exp())
+            .collect();
+        (0..n)
+            .map(|_| {
+                let mut experts = sample_topk(&mut jitter_rng, &weights, k);
+                experts.extend_from_slice(&shared);
+                TokenGate { request_id, experts }
+            })
+            .collect()
+    }
+
+    /// Generate one iteration with `tokens` input tokens.
+    pub fn iteration(&mut self, iter_idx: usize, tokens: usize) -> IterationWorkload {
+        assert!(tokens > 0);
+        let chunks = self.request_mix(tokens);
+        let k = self.model.top_k;
+        let e = self.model.n_experts;
+        let shared: Vec<ExpertId> =
+            (0..self.model.n_shared).map(|i| (e + i) as ExpertId).collect();
+
+        let mut layers = Vec::with_capacity(self.model.n_layers);
+        for l in 0..self.model.n_layers {
+            // Per-iteration jitter keeps hot sets drifting across forward
+            // passes (requests come and go).
+            let mut jitter_rng = self.rng.fork((iter_idx as u64) << 16 | l as u64);
+            let weights: Vec<f64> = self.layer_popularity[l]
+                .iter()
+                .map(|w| w * (0.35 * jitter_rng.normal()).exp())
+                .collect();
+
+            let mut gates = Vec::with_capacity(tokens);
+            for chunk in &chunks {
+                for _ in 0..chunk.tokens {
+                    let experts = sample_topk(&mut jitter_rng, &weights, k);
+                    let mut all = experts;
+                    all.extend_from_slice(&shared);
+                    gates.push(TokenGate { request_id: chunk.request_id, experts: all });
+                }
+            }
+            layers.push(LayerGating { tokens: gates });
+        }
+        IterationWorkload { chunks, layers }
+    }
+}
+
+/// Sample `k` distinct experts proportional to `weights` (sequential
+/// weighted sampling without replacement).
+fn sample_topk(rng: &mut Rng, weights: &[f64], k: usize) -> Vec<ExpertId> {
+    debug_assert!(k <= weights.len());
+    let mut w = weights.to_vec();
+    let mut picked = Vec::with_capacity(k);
+    for _ in 0..k {
+        let i = rng.weighted(&w);
+        picked.push(i as ExpertId);
+        w[i] = 0.0;
+    }
+    picked
+}
+
+/// Sorted (descending) per-expert token counts — the Figure 2 profile.
+pub fn sorted_expert_counts(gating: &LayerGating, n_experts_total: usize) -> Vec<u32> {
+    let mut counts = vec![0u32; n_experts_total];
+    for tg in &gating.tokens {
+        for &e in &tg.experts {
+            counts[e as usize] += 1;
+        }
+    }
+    counts.sort_unstable_by(|a, b| b.cmp(a));
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn gen(tokens: usize) -> (TraceGenerator, IterationWorkload) {
+        let model = presets::qwen3_a3b();
+        let mut g = TraceGenerator::new(&model, Dataset::C4, 7);
+        let it = g.iteration(0, tokens);
+        (g, it)
+    }
+
+    #[test]
+    fn iteration_has_exact_tokens_and_layers() {
+        let (g, it) = gen(64);
+        assert_eq!(it.total_tokens(), 64);
+        assert_eq!(it.layers.len(), g.model().n_layers);
+        for l in &it.layers {
+            assert_eq!(l.tokens.len(), 64);
+        }
+    }
+
+    #[test]
+    fn gates_have_topk_distinct_plus_shared() {
+        let model = presets::deepseek_moe();
+        let mut g = TraceGenerator::new(&model, Dataset::Wikitext2, 3);
+        let it = g.iteration(0, 16);
+        for tg in &it.layers[0].tokens {
+            assert_eq!(tg.experts.len(), model.top_k + model.n_shared);
+            let routed = &tg.experts[..model.top_k];
+            let set: HashSet<_> = routed.iter().collect();
+            assert_eq!(set.len(), model.top_k, "routed experts distinct");
+            assert!(routed.iter().all(|&e| (e as usize) < model.n_experts));
+            // shared experts are the fixed trailing ids
+            for (i, &e) in tg.experts[model.top_k..].iter().enumerate() {
+                assert_eq!(e as usize, model.n_experts + i);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let model = presets::qwen3_a3b();
+        let mut a = TraceGenerator::new(&model, Dataset::C4, 42);
+        let mut b = TraceGenerator::new(&model, Dataset::C4, 42);
+        let ia = a.iteration(0, 32);
+        let ib = b.iteration(0, 32);
+        for (x, y) in ia.layers[0].tokens.iter().zip(&ib.layers[0].tokens) {
+            assert_eq!(x.experts, y.experts);
+        }
+    }
+
+    #[test]
+    fn long_tail_shape() {
+        // Fig 2: hot experts take a disproportionate share; a sizable
+        // fraction of experts is cold.
+        let model = presets::qwen3_a3b();
+        let mut g = TraceGenerator::new(&model, Dataset::WinoGrande, 1);
+        let it = g.iteration(0, 64);
+        let counts = sorted_expert_counts(&it.layers[0], model.n_experts);
+        let total: u32 = counts.iter().sum();
+        assert_eq!(total, 64 * model.top_k as u32);
+        let top8: u32 = counts[..8].iter().sum();
+        assert!(
+            top8 as f64 / total as f64 > 0.25,
+            "top-8 share too flat: {top8}/{total}"
+        );
+        let cold = counts.iter().filter(|&&c| c <= 1).count();
+        assert!(cold > model.n_experts / 4, "tail too short: {cold}");
+    }
+
+    #[test]
+    fn sharding_conserves_tokens() {
+        let (_, it) = gen(64);
+        let model = presets::qwen3_a3b();
+        let lw = shard_layer(&it.layers[0], model.n_experts, 4, &HashSet::new());
+        assert_eq!(lw.total_tokens, 64);
+        let sum: u32 = lw.experts.iter().map(|e| e.total).sum();
+        assert_eq!(sum, 64 * model.top_k as u32);
+        for e in &lw.experts {
+            assert_eq!(e.tokens_per_chiplet.iter().sum::<u32>(), e.total);
+            assert_eq!(e.tokens_per_chiplet.len(), 4);
+        }
+    }
+
+    #[test]
+    fn deferral_removes_request_tokens() {
+        let model = presets::qwen3_a3b();
+        let mut g = TraceGenerator::new(&model, Dataset::C4, 9);
+        let it = g.iteration(0, 64);
+        let victim = it.chunks[0].request_id;
+        let victim_tokens = it.chunks[0].tokens as u32;
+        let mut deferred = HashSet::new();
+        deferred.insert(victim);
+        let lw = shard_layer(&it.layers[0], model.n_experts, 4, &deferred);
+        assert_eq!(lw.total_tokens, 64 - victim_tokens);
+    }
+
+    #[test]
+    fn request_mix_is_low_batch() {
+        let (_, it) = gen(256);
+        assert!(it.chunks.len() <= 8);
+        assert!(it.chunks.iter().filter(|c| c.is_prefill).count() <= 1);
+    }
+
+    #[test]
+    fn single_token_iteration_works() {
+        let (_, it) = gen(1);
+        assert_eq!(it.total_tokens(), 1);
+    }
+}

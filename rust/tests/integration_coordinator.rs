@@ -1,0 +1,135 @@
+//! Integration: the full coordinator stack (trace generator → sharding →
+//! trajectory scheduling → flow engine) on real Table-I model shapes,
+//! checking the paper's headline relationships hold end to end.
+
+use expert_streaming::config::{presets, Dataset, StrategyKind};
+use expert_streaming::coordinator::{make_strategy, LayerCtx};
+use expert_streaming::moe::{default_num_slices, ExpertGeometry};
+use expert_streaming::workload::{shard_layer, TraceGenerator};
+use std::collections::HashSet;
+
+fn layer_ctx(
+    model: &expert_streaming::config::MoeModelConfig,
+    hw: &expert_streaming::config::HardwareConfig,
+    tokens: usize,
+    seed: u64,
+) -> expert_streaming::workload::LayerWorkload {
+    let mut gen = TraceGenerator::new(model, Dataset::C4, seed);
+    let it = gen.iteration(0, tokens);
+    shard_layer(
+        &it.layers[model.n_layers / 2],
+        model.n_experts + model.n_shared,
+        hw.n_chiplets(),
+        &HashSet::new(),
+    )
+}
+
+#[test]
+fn fsedp_beats_ep_on_every_model_low_batch() {
+    // The Fig 9 headline: FSE-DP+paired wins at 64 tokens on all 4 models.
+    let hw = presets::mcm_2x2();
+    for model in presets::all_models() {
+        let slices = default_num_slices(&model, &hw);
+        let geom = ExpertGeometry::new(&model, &hw, slices);
+        let wl = layer_ctx(&model, &hw, 64, 7);
+        let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+        let fse = make_strategy(StrategyKind::FseDpPaired, slices).run_layer(&ctx);
+        let ep = make_strategy(StrategyKind::Ep, slices).run_layer(&ctx);
+        let speedup = ep.makespan as f64 / fse.makespan as f64;
+        assert!(
+            speedup > 1.0,
+            "{}: FSE-DP lost ({:.2}x)",
+            model.name,
+            speedup
+        );
+    }
+}
+
+#[test]
+fn speedup_band_consistent_with_paper() {
+    // Across models/tokens, FSE-DP's advantage over the best baseline
+    // should land in a plausible band around the paper's 1.22-2.00x
+    // (we allow a wider envelope: the substrate differs).
+    let hw = presets::mcm_2x2();
+    let mut speedups = Vec::new();
+    for model in presets::all_models() {
+        for tokens in [16usize, 64, 256] {
+            let slices = default_num_slices(&model, &hw);
+            let geom = ExpertGeometry::new(&model, &hw, slices);
+            let wl = layer_ctx(&model, &hw, tokens, 11);
+            let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+            let fse = make_strategy(StrategyKind::FseDpPaired, slices).run_layer(&ctx);
+            let ep = make_strategy(StrategyKind::Ep, slices).run_layer(&ctx);
+            let hydra = make_strategy(StrategyKind::Hydra, slices).run_layer(&ctx);
+            let best_baseline = ep.makespan.min(hydra.makespan);
+            speedups.push(best_baseline as f64 / fse.makespan as f64);
+        }
+    }
+    let mean = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    assert!(
+        (1.1..4.0).contains(&mean),
+        "mean speedup {mean:.2} outside plausible band; samples {speedups:?}"
+    );
+    // One known weak cell: Phi-3.5 at 16 tokens (75 MiB experts, almost no
+    // reuse) — FSE-DP's launch gating serializes giant expert streams and
+    // EP's owner pipelining is competitive. Documented in EXPERIMENTS.md.
+    assert!(speedups.iter().all(|&s| s > 0.75), "{speedups:?}");
+    assert!(
+        speedups.iter().filter(|&&s| s > 1.0).count() >= speedups.len() - 1,
+        "more than one losing cell: {speedups:?}"
+    );
+}
+
+#[test]
+fn trajectories_cover_exactly_token_holding_chiplets() {
+    use expert_streaming::coordinator::Trajectory;
+    use expert_streaming::sim::Mesh;
+    let hw = presets::mcm_nxn(3);
+    let model = presets::deepseek_moe();
+    let mesh = Mesh::new(&hw);
+    let wl = layer_ctx(&model, &hw, 128, 3);
+    for load in &wl.experts {
+        let t = Trajectory::for_expert(load, &mesh);
+        let covered: HashSet<usize> = t.chiplets.iter().copied().collect();
+        let expected: HashSet<usize> = load
+            .tokens_per_chiplet
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(c, _)| c)
+            .collect();
+        assert_eq!(covered, expected, "expert {}", load.expert);
+        assert_eq!(t.total_tokens(), load.total);
+    }
+}
+
+#[test]
+fn shared_experts_always_activated_deepseek() {
+    let hw = presets::mcm_2x2();
+    let model = presets::deepseek_moe();
+    let wl = layer_ctx(&model, &hw, 64, 5);
+    for shared_id in model.n_experts..model.n_experts + model.n_shared {
+        let load = wl.expert_load(shared_id as u16).expect("shared expert active");
+        assert_eq!(load.total as usize, 64, "shared expert sees every token");
+    }
+}
+
+#[test]
+fn scheduler_overhead_stays_sub_microsecond_per_decision() {
+    let hw = presets::mcm_2x2();
+    let model = presets::qwen3_a3b();
+    let slices = default_num_slices(&model, &hw);
+    let geom = ExpertGeometry::new(&model, &hw, slices);
+    let wl = layer_ctx(&model, &hw, 256, 9);
+    let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+    let r = make_strategy(StrategyKind::FseDpPaired, slices).run_layer(&ctx);
+    assert!(r.scheduler_cycles > 0);
+    // The paper's RTL: sub-microsecond (≤800 cycles) per decision.
+    // Our accounting is aggregate; bound the *average* per decision.
+    let decisions = wl.experts.len() as u64; // at least one decision per expert group
+    assert!(
+        r.scheduler_cycles / decisions.max(1) < 800,
+        "scheduler avg {} cycles/decision",
+        r.scheduler_cycles / decisions.max(1)
+    );
+}

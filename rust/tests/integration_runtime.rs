@@ -1,0 +1,141 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//! Requires `make artifacts` (skips with a message otherwise — but `make
+//! test` always builds artifacts first).
+
+use expert_streaming::runtime::artifacts::{ArtifactKind, Manifest};
+use expert_streaming::runtime::engine::{PjrtEngine, Tensor};
+use expert_streaming::runtime::reference;
+use expert_streaming::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest"))
+}
+
+fn rand_t(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.normal_f32(scale)).collect())
+}
+
+#[test]
+fn expert_ffn_artifact_matches_reference() {
+    let Some(m) = manifest() else { return };
+    let (d, f) = (m.config.d_model, m.config.d_ffn);
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let mut rng = Rng::new(1);
+    for tokens in [1usize, 4, 16] {
+        let x = rand_t(&mut rng, vec![tokens, d], 0.5);
+        let w1 = rand_t(&mut rng, vec![d, f], 0.1);
+        let w3 = rand_t(&mut rng, vec![d, f], 0.1);
+        let w2 = rand_t(&mut rng, vec![f, d], 0.1);
+        let out = engine
+            .execute_bucketed(ArtifactKind::ExpertFfn, tokens, &x, &[w1.clone(), w3.clone(), w2.clone()])
+            .unwrap();
+        let want = reference::expert_ffn(&x, &w1, &w3, &w2);
+        let err = reference::max_abs_diff(&out[0], &want);
+        assert!(err < 1e-3, "tokens={tokens}: err {err}");
+    }
+}
+
+#[test]
+fn gate_artifact_matches_reference() {
+    let Some(m) = manifest() else { return };
+    let (d, e, k) = (m.config.d_model, m.config.n_experts, m.config.top_k);
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let mut rng = Rng::new(2);
+    let tokens = 8;
+    let x = rand_t(&mut rng, vec![tokens, d], 0.5);
+    let wg = rand_t(&mut rng, vec![d, e], 0.5);
+    let out = engine
+        .execute_bucketed(ArtifactKind::Gate, tokens, &x, &[wg.clone()])
+        .unwrap();
+    let (w_ref, i_ref) = reference::gate_topk(&x, &wg, k);
+    assert!(reference::max_abs_diff(&out[0], &w_ref) < 1e-4);
+    assert_eq!(out[1].data, i_ref.data, "top-k indices disagree");
+}
+
+#[test]
+fn attention_artifact_matches_reference() {
+    let Some(m) = manifest() else { return };
+    let (d, h) = (m.config.d_model, m.config.n_heads);
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let mut rng = Rng::new(3);
+    let tokens = 4;
+    let x = rand_t(&mut rng, vec![tokens, d], 0.5);
+    let ws: Vec<Tensor> = (0..4).map(|_| rand_t(&mut rng, vec![d, d], 0.1)).collect();
+    let out = engine
+        .execute_bucketed(ArtifactKind::Attn, tokens, &x, &ws)
+        .unwrap();
+    let want = reference::attention_causal(&x, &ws[0], &ws[1], &ws[2], &ws[3], h);
+    let err = reference::max_abs_diff(&out[0], &want);
+    assert!(err < 1e-3, "err {err}");
+}
+
+#[test]
+fn moe_layer_artifact_matches_reference() {
+    let Some(m) = manifest() else { return };
+    let (d, f, e, k) = (m.config.d_model, m.config.d_ffn, m.config.n_experts, m.config.top_k);
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let mut rng = Rng::new(4);
+    let tokens = 4;
+    let x = rand_t(&mut rng, vec![tokens, d], 0.5);
+    let wg = rand_t(&mut rng, vec![d, e], 0.4);
+    // Fused artifact takes stacked per-expert weights.
+    let w1s: Vec<Tensor> = (0..e).map(|_| rand_t(&mut rng, vec![d, f], 0.08)).collect();
+    let w3s: Vec<Tensor> = (0..e).map(|_| rand_t(&mut rng, vec![d, f], 0.08)).collect();
+    let w2s: Vec<Tensor> = (0..e).map(|_| rand_t(&mut rng, vec![f, d], 0.08)).collect();
+    let stack = |ts: &[Tensor], shape: Vec<usize>| {
+        Tensor::new(shape, ts.iter().flat_map(|t| t.data.clone()).collect())
+    };
+    let out = engine
+        .execute_bucketed(
+            ArtifactKind::MoeLayer,
+            tokens,
+            &x,
+            &[
+                wg.clone(),
+                stack(&w1s, vec![e, d, f]),
+                stack(&w3s, vec![e, d, f]),
+                stack(&w2s, vec![e, f, d]),
+            ],
+        )
+        .unwrap();
+    let want = reference::moe_layer(&x, &wg, &w1s, &w3s, &w2s, k);
+    let err = reference::max_abs_diff(&out[0], &want);
+    assert!(err < 1e-3, "err {err}");
+}
+
+#[test]
+fn padding_is_transparent() {
+    // Serving pads token batches up to the bucket; results must match the
+    // unpadded rows exactly regardless of the pad amount.
+    let Some(m) = manifest() else { return };
+    let (d, f) = (m.config.d_model, m.config.d_ffn);
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let mut rng = Rng::new(5);
+    let x3 = rand_t(&mut rng, vec![3, d], 0.5);
+    let w1 = rand_t(&mut rng, vec![d, f], 0.1);
+    let w3 = rand_t(&mut rng, vec![d, f], 0.1);
+    let w2 = rand_t(&mut rng, vec![f, d], 0.1);
+    // 3 tokens pad to bucket 4.
+    let out3 = engine
+        .execute_bucketed(ArtifactKind::ExpertFfn, 3, &x3, &[w1.clone(), w3.clone(), w2.clone()])
+        .unwrap();
+    let want = reference::expert_ffn(&x3, &w1, &w3, &w2);
+    assert!(reference::max_abs_diff(&out3[0], &want) < 1e-3);
+    assert_eq!(out3[0].shape, vec![3, d]);
+}
+
+#[test]
+fn rejects_shape_mismatch_and_unknown_artifacts() {
+    let Some(m) = manifest() else { return };
+    let d = m.config.d_model;
+    let mut engine = PjrtEngine::new(m).unwrap();
+    assert!(engine.execute("nonexistent", &[]).is_err());
+    let bad = Tensor::zeros(vec![1, d + 1]);
+    assert!(engine.execute("gate_t1", &[bad.clone(), bad]).is_err());
+}

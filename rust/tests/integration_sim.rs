@@ -1,0 +1,73 @@
+//! Integration: simulator substrate pieces composing — mesh routing under
+//! load, DDR channel contention, timeline math across modules.
+
+use expert_streaming::config::presets;
+use expert_streaming::sim::{ActivityKind, Mesh, SerialResource, Span, Timeline};
+
+#[test]
+fn mesh_congestion_serializes_but_distinct_links_parallel() {
+    let hw = presets::mcm_nxn(4);
+    let mut mesh = Mesh::new(&hw);
+    let bytes = 1_000_000;
+    // Two transfers sharing the 0->1 link serialize.
+    let a = mesh.transfer(0, 1, bytes, 0);
+    let b = mesh.transfer(0, 1, bytes, 0);
+    assert!(b > a);
+    // A disjoint link is unaffected.
+    let c = mesh.transfer(14, 15, bytes, 0);
+    assert_eq!(c, a);
+}
+
+#[test]
+fn multi_hop_transfer_costs_more_than_single() {
+    let hw = presets::mcm_nxn(4);
+    let mut m1 = Mesh::new(&hw);
+    let mut m2 = Mesh::new(&hw);
+    let single = m1.transfer(0, 1, 500_000, 0);
+    let multi = m2.transfer(0, 15, 500_000, 0); // 6 hops
+    assert!(multi > single);
+    assert_eq!(m2.route(0, 15).len(), 6);
+}
+
+#[test]
+fn ddr_channels_model_fair_fifo() {
+    let hw = presets::mcm_2x2();
+    let mut ch = SerialResource::new();
+    let cycles = hw.ddr_cycles(1 << 20);
+    let (_, e1) = ch.acquire(0, cycles);
+    let (s2, e2) = ch.acquire(0, cycles);
+    assert_eq!(s2, e1);
+    assert_eq!(e2, 2 * cycles);
+    assert!((ch.utilization(e2) - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn timeline_curve_and_gantt_consistent() {
+    let mut t = Timeline::new(2, true);
+    for c in 0..2 {
+        t.record(Span { chiplet: c, kind: ActivityKind::Compute, start: 0, end: 100, expert: 0 });
+        t.record(Span { chiplet: c, kind: ActivityKind::DdrLoad, start: 100, end: 200, expert: 0 });
+    }
+    assert!((t.utilization(200) - 0.5).abs() < 1e-12);
+    let curve = t.utilization_curve(200, 10);
+    assert_eq!(curve.len(), 10);
+    assert!(curve[..5].iter().all(|&u| (u - 1.0).abs() < 1e-9));
+    assert!(curve[5..].iter().all(|&u| u.abs() < 1e-9));
+    let gantt = t.render_gantt(0, 200, 40);
+    assert_eq!(gantt.lines().count(), 8); // 2 chiplets x 4 kinds
+}
+
+#[test]
+fn snake_rings_stay_local_across_sizes() {
+    for n in 2..=4 {
+        let hw = presets::mcm_nxn(n);
+        let mesh = Mesh::new(&hw);
+        let order = mesh.snake_order();
+        let worst = order
+            .windows(2)
+            .map(|w| mesh.hops(w[0], w[1]))
+            .max()
+            .unwrap();
+        assert_eq!(worst, 1, "{n}x{n} snake broke adjacency");
+    }
+}

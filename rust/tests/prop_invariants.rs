@@ -1,0 +1,200 @@
+//! Property-based invariants (hand-rolled: the offline crate set has no
+//! proptest). Each property runs many seeded random cases through the full
+//! flow engine and checks the paper's correctness claims:
+//!
+//! * completeness / no-duplication — every (expert, micro-slice, station)
+//!   computes exactly once regardless of trajectory dynamics;
+//! * conservation — DDR traffic = one copy of each activated expert; D2D
+//!   traffic = slice_bytes × (stations − 1) per slice;
+//! * buffer safety — occupancy never exceeds capacity + one emergency
+//!   slice; all reservations drain;
+//! * termination — rings always drain, even with pathological buffers;
+//! * order-insensitivity of totals — group order changes *when*, not
+//!   *what*.
+
+use expert_streaming::config::presets;
+use expert_streaming::coordinator::flow::{run_layer, FlowConfig};
+use expert_streaming::coordinator::paired_load::{paired_order, sequential_order};
+use expert_streaming::moe::ExpertGeometry;
+use expert_streaming::sim::ActivityKind;
+use expert_streaming::util::Rng;
+use expert_streaming::workload::{ExpertLoad, LayerWorkload};
+
+/// Random workload: up to `max_experts` experts over `n_chiplets`, skewed
+/// long-tail token counts, some single-chiplet cold experts.
+fn random_workload(rng: &mut Rng, n_chiplets: usize, max_experts: usize) -> LayerWorkload {
+    let n_experts = rng.range(1, max_experts + 1);
+    let mut experts = Vec::new();
+    for e in 0..n_experts {
+        let mut tokens = vec![0u32; n_chiplets];
+        if rng.bool(0.3) {
+            // cold expert: one station
+            tokens[rng.range(0, n_chiplets)] = rng.range(1, 3) as u32;
+        } else {
+            let stations = rng.range(1, n_chiplets + 1);
+            let mut order: Vec<usize> = (0..n_chiplets).collect();
+            rng.shuffle(&mut order);
+            for &c in order.iter().take(stations) {
+                tokens[c] = rng.range(1, 40) as u32;
+            }
+        }
+        let total = tokens.iter().sum();
+        experts.push(ExpertLoad { expert: e as u16, tokens_per_chiplet: tokens, total });
+    }
+    LayerWorkload { experts, n_chiplets, total_tokens: 0 }
+}
+
+fn geom_for(slices: usize) -> (expert_streaming::config::HardwareConfig, ExpertGeometry) {
+    let hw = presets::mcm_2x2();
+    let geom = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, slices);
+    (hw, geom)
+}
+
+#[test]
+fn prop_completeness_and_conservation() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..60 {
+        let slices = [1, 2, 4, 8][rng.range(0, 4)];
+        let wl = random_workload(&mut rng, 4, 12);
+        let (hw, geom) = geom_for(slices);
+        let groups = paired_order(&wl);
+        let cfg = FlowConfig { num_slices: slices, rule5: false, record_spans: true };
+        let r = run_layer(&hw, &geom, &wl, &groups, cfg);
+
+        // DDR: exactly one copy of every activated expert.
+        assert_eq!(
+            r.ddr_bytes,
+            wl.experts.len() as u64 * slices as u64 * geom.slice_bytes,
+            "case {case}: ddr bytes"
+        );
+        // D2D: each slice forwarded (stations-1) times.
+        let want_d2d: u64 = wl
+            .experts
+            .iter()
+            .map(|l| {
+                let stations = l.tokens_per_chiplet.iter().filter(|&&t| t > 0).count() as u64;
+                slices as u64 * (stations - 1) * geom.slice_bytes
+            })
+            .sum();
+        assert_eq!(r.d2d_bytes, want_d2d, "case {case}: d2d bytes");
+
+        // Completeness: compute spans = slices × stations per expert, and
+        // per (expert, chiplet) exactly `slices` computes.
+        for l in &wl.experts {
+            for (c, &t) in l.tokens_per_chiplet.iter().enumerate() {
+                let visits = r
+                    .timeline
+                    .spans
+                    .iter()
+                    .filter(|s| {
+                        s.kind == ActivityKind::Compute && s.chiplet == c && s.expert == l.expert
+                    })
+                    .count();
+                let want = if t > 0 { slices } else { 0 };
+                assert_eq!(visits, want, "case {case}: expert {} chiplet {c}", l.expert);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_buffer_safety_under_random_capacities() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..40 {
+        let slices = [2, 4, 8][rng.range(0, 3)];
+        let wl = random_workload(&mut rng, 4, 10);
+        let (mut hw, geom) = geom_for(slices);
+        // Capacity from pathological (~1 slice) to roomy.
+        let mult = [1, 2, 3, 8, 32][rng.range(0, 5)];
+        hw.weight_buffer_bytes = geom.slice_bytes * mult + 1;
+        let cfg = FlowConfig { num_slices: slices, rule5: rng.bool(0.3), record_spans: false };
+        let r = run_layer(&hw, &geom, &wl, &paired_order(&wl), cfg);
+        assert!(r.makespan > 0, "case {case} did not run");
+        assert!(
+            r.max_chiplet_peak_bytes <= hw.weight_buffer_bytes + geom.slice_bytes,
+            "case {case}: peak {} > cap {} + slice {}",
+            r.max_chiplet_peak_bytes,
+            hw.weight_buffer_bytes,
+            geom.slice_bytes
+        );
+    }
+}
+
+#[test]
+fn prop_termination_across_mesh_sizes() {
+    let mut rng = Rng::new(0xDEAD);
+    for n in 2..=4usize {
+        for _ in 0..10 {
+            let hw = presets::mcm_nxn(n);
+            let geom = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 4);
+            let wl = random_workload(&mut rng, n * n, 16);
+            let cfg = FlowConfig { num_slices: 4, rule5: false, record_spans: false };
+            let r = run_layer(&hw, &geom, &wl, &paired_order(&wl), cfg);
+            assert!(r.makespan > 0);
+        }
+    }
+}
+
+#[test]
+fn prop_group_order_changes_when_not_what() {
+    let mut rng = Rng::new(0xFACE);
+    for case in 0..30 {
+        let wl = random_workload(&mut rng, 4, 10);
+        let (hw, geom) = geom_for(4);
+        let cfg = FlowConfig { num_slices: 4, rule5: false, record_spans: false };
+        let a = run_layer(&hw, &geom, &wl, &paired_order(&wl), cfg);
+        let b = run_layer(&hw, &geom, &wl, &sequential_order(&wl), cfg);
+        assert_eq!(a.ddr_bytes, b.ddr_bytes, "case {case}");
+        assert_eq!(a.d2d_bytes, b.d2d_bytes, "case {case}");
+    }
+}
+
+#[test]
+fn prop_rule5_preserves_work_totals() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..30 {
+        let wl = random_workload(&mut rng, 4, 10);
+        let (hw, geom) = geom_for(8);
+        let base = FlowConfig { num_slices: 8, rule5: false, record_spans: false };
+        let r5 = FlowConfig { num_slices: 8, rule5: true, record_spans: false };
+        let a = run_layer(&hw, &geom, &wl, &paired_order(&wl), base);
+        let b = run_layer(&hw, &geom, &wl, &paired_order(&wl), r5);
+        assert_eq!(a.ddr_bytes, b.ddr_bytes, "case {case}");
+        assert_eq!(a.d2d_bytes, b.d2d_bytes, "case {case}");
+    }
+}
+
+#[test]
+fn prop_token_buffering_never_loses_tokens() {
+    use expert_streaming::coordinator::TokenBufferPolicy;
+    use expert_streaming::workload::{LayerGating, TokenGate};
+    use std::collections::HashSet;
+
+    let mut rng = Rng::new(0x70CE);
+    for _ in 0..40 {
+        let n_requests = rng.range(1, 6) as u32;
+        let n_experts = 8;
+        let mut policy = TokenBufferPolicy::new(rng.range(1, 4) as u32, rng.range(1, 6) as u32);
+        let mut total_deferred = 0u64;
+        for _pass in 0..30 {
+            for r in 0..n_requests {
+                policy.on_forward_pass(r);
+            }
+            let gating = LayerGating {
+                tokens: (0..n_requests)
+                    .map(|r| TokenGate {
+                        request_id: r,
+                        experts: vec![rng.range(0, n_experts) as u16],
+                    })
+                    .collect(),
+            };
+            let d = policy.decide_layer(&gating, n_experts, &HashSet::new());
+            // Deferral is per-request and bounded by the active set.
+            assert!(d.len() <= n_requests as usize);
+            total_deferred += d.len() as u64;
+        }
+        // Credits bound: ≤ passes/n_threshold per request (+1 rounding).
+        let bound = n_requests as u64 * (30 / policy.n_threshold as u64 + 1);
+        assert!(total_deferred <= bound, "{total_deferred} > {bound}");
+    }
+}

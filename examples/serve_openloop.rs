@@ -1,0 +1,63 @@
+//! Open-loop serving demo: Poisson arrivals continuous-batched onto the
+//! 2×2 MCM, comparing FSE-DP against the EP baseline at one offered load.
+//!
+//!     cargo run --release --example serve_openloop
+
+use expert_streaming::config::{presets, Dataset, StrategyKind};
+use expert_streaming::server::{mean_iteration_us, LoadMode, ServerConfig, ServerSim};
+
+fn main() {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+
+    // Anchor the offered load on a closed-burst capacity estimate so the
+    // demo lands near (but under) saturation on any machine.
+    let calib_cfg = ServerConfig {
+        strategy: StrategyKind::Ep,
+        mode: LoadMode::Burst { n_requests: 4 * preset.max_batch },
+        ..Default::default()
+    };
+    let calib = ServerSim::new(&model, &hw, Dataset::C4, &preset, calib_cfg).run();
+    let rate_rps = 0.6 * calib.service_rps(hw.freq_hz);
+    println!(
+        "model {} / preset '{}': EP closed-loop capacity ~{:.1} req/s; offering {:.1} req/s",
+        model.name,
+        preset.name,
+        calib.service_rps(hw.freq_hz),
+        rate_rps
+    );
+
+    let mode = LoadMode::Open { rate_rps, duration_s: 20.0 / rate_rps };
+    for strategy in [StrategyKind::Ep, StrategyKind::FseDpPaired] {
+        let cfg = ServerConfig { strategy, mode, ..Default::default() };
+        let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+        let m = sim.run();
+        println!("\n== {} ==", strategy.name());
+        println!("  requests      : {}/{} completed", m.completed, m.arrived);
+        println!(
+            "  TTFT (ms)     : p50 {:.2}  p95 {:.2}  p99 {:.2}",
+            m.ttft_us.median() / 1e3,
+            m.ttft_us.quantile(0.95) / 1e3,
+            m.p99_ttft_ms()
+        );
+        println!(
+            "  TPOT (ms)     : p50 {:.2}  p99 {:.2}",
+            m.tpot_us.median() / 1e3,
+            m.p99_tpot_ms()
+        );
+        println!(
+            "  e2e (ms)      : p50 {:.2}  p99 {:.2}",
+            m.e2e_us.median() / 1e3,
+            m.e2e_us.p99() / 1e3
+        );
+        println!(
+            "  iterations    : {} ({:.1} us mean), queue depth mean {:.1} max {:.0}",
+            m.iterations,
+            mean_iteration_us(&m, &hw),
+            m.queue_depth.mean(),
+            m.queue_depth.max()
+        );
+        println!("  goodput       : {:.2} req/s", m.goodput_rps(hw.freq_hz));
+    }
+}

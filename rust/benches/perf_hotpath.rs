@@ -3,7 +3,14 @@
 //!  1. flow-engine layer simulation throughput (layer-sims/s and
 //!     simulated-cycles/wall-µs) on the Qwen3 64-token workload;
 //!  2. scheduler decision + trace-generation cost;
-//!  3. numeric serving latency through PJRT (when artifacts exist).
+//!  3. serving-iteration throughput of the L4 `server` subsystem (closed
+//!     burst on the smoke model);
+//!  4. numeric serving latency through PJRT (when artifacts exist).
+//!
+//! Besides the human-readable output, results are written to
+//! `BENCH_serve.json` (in the cargo working directory) as
+//! `{name, ops_per_s, p99_us}` records so future PRs can track the perf
+//! trajectory mechanically.
 //!
 //! `cargo bench --bench perf_hotpath`
 
@@ -12,11 +19,33 @@ use expert_streaming::coordinator::{make_strategy, LayerCtx};
 use expert_streaming::engine::serve::NumericEngine;
 use expert_streaming::moe::{default_num_slices, ExpertGeometry};
 use expert_streaming::runtime::artifacts::Manifest;
+use expert_streaming::server::{LoadMode, ServerConfig, ServerSim};
+use expert_streaming::util::Summary;
 use expert_streaming::workload::{shard_layer, TraceGenerator};
 use std::collections::HashSet;
 use std::time::Instant;
 
-fn bench_flow_engine() {
+/// One machine-readable result: throughput plus tail latency of the op.
+struct BenchRecord {
+    name: String,
+    ops_per_s: f64,
+    p99_us: f64,
+}
+
+/// Time `reps` calls of `op`, returning (ops/s, p99 wall µs per op).
+fn measure<F: FnMut()>(reps: usize, mut op: F) -> (f64, f64) {
+    let mut per_op = Summary::new();
+    let t_all = Instant::now();
+    for _ in 0..reps {
+        let t = Instant::now();
+        op();
+        per_op.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let dt = t_all.elapsed().as_secs_f64();
+    (reps as f64 / dt, per_op.p99())
+}
+
+fn bench_flow_engine(records: &mut Vec<BenchRecord>) {
     let hw = presets::mcm_2x2();
     let model = presets::qwen3_a3b();
     let slices = default_num_slices(&model, &hw);
@@ -36,38 +65,80 @@ fn bench_flow_engine() {
         // warm up
         strategy.run_layer(&ctx);
         let reps = 200;
-        let t = Instant::now();
         let mut sim_cycles = 0u64;
-        for _ in 0..reps {
+        let (ops, p99) = measure(reps, || {
             sim_cycles += strategy.run_layer(&ctx).makespan;
-        }
-        let dt = t.elapsed().as_secs_f64();
+        });
         println!(
-            "[perf] {:<16} {:>7.0} layer-sims/s   {:>8.1} sim-Mcycles/wall-s",
+            "[perf] {:<16} {:>7.0} layer-sims/s   {:>8.1} sim-Mcycles/wall-s   p99 {:>7.1} us/layer",
             kind.name(),
-            reps as f64 / dt,
-            sim_cycles as f64 / dt / 1e6
+            ops,
+            sim_cycles as f64 * ops / reps as f64 / 1e6,
+            p99
         );
+        records.push(BenchRecord {
+            name: format!("flow_engine/{}", kind.name()),
+            ops_per_s: ops,
+            p99_us: p99,
+        });
     }
 }
 
-fn bench_trace_generation() {
+fn bench_trace_generation(records: &mut Vec<BenchRecord>) {
     let model = presets::qwen3_a3b();
     let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
-    let t = Instant::now();
-    let reps = 50;
-    for i in 0..reps {
+    let mut i = 0;
+    let (ops, p99) = measure(50, || {
         let it = gen.iteration(i, 256);
         std::hint::black_box(&it);
-    }
-    let dt = t.elapsed().as_secs_f64();
+        i += 1;
+    });
     println!(
-        "[perf] trace generation: {:.1} iterations/s (256 tokens x 48 layers each)",
-        reps as f64 / dt
+        "[perf] trace generation: {ops:.1} iterations/s, p99 {p99:.1} us (256 tokens x 48 layers each)"
     );
+    records.push(BenchRecord { name: "trace_generation".into(), ops_per_s: ops, p99_us: p99 });
 }
 
-fn bench_numeric_serving() {
+fn bench_serve_iteration(records: &mut Vec<BenchRecord>) {
+    // One op = a full closed-burst serve (arrival -> batch -> per-layer
+    // costing -> completion) on the smoke model; the iteration rate is
+    // derived from the iterations each run executes.
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let reps = 15;
+    let mut iterations = 0usize;
+    let mut seed = 0u64;
+    let (runs_per_s, p99_run_us) = measure(reps, || {
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Burst { n_requests: 8 },
+            seed,
+            ..Default::default()
+        };
+        let m = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run();
+        iterations += m.iterations;
+        seed += 1;
+    });
+    let iters_per_s = runs_per_s * iterations as f64 / reps as f64;
+    println!(
+        "[perf] serve iteration: {iters_per_s:.0} sched-iters/s ({runs_per_s:.1} burst-serves/s, p99 {p99_run_us:.0} us/serve)"
+    );
+    records.push(BenchRecord {
+        name: "serve_burst/FSE-DP+paired".into(),
+        ops_per_s: runs_per_s,
+        p99_us: p99_run_us,
+    });
+    records.push(BenchRecord {
+        name: "serve_iteration/FSE-DP+paired".into(),
+        ops_per_s: iters_per_s,
+        // Per-iteration tail approximated from the run tail and the mean
+        // iteration count (iterations inside one run are not timed solo).
+        p99_us: p99_run_us / (iterations as f64 / reps as f64).max(1.0),
+    });
+}
+
+fn bench_numeric_serving(records: &mut Vec<BenchRecord>) {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         println!("[perf] numeric serving skipped (run `make artifacts`)");
@@ -76,21 +147,51 @@ fn bench_numeric_serving() {
     let mut engine = NumericEngine::new(&dir, 2, 42).expect("engine");
     engine.warm_up().expect("warm-up");
     for tokens in [4usize, 16, 64] {
-        // warm + measure best-of-3 (PJRT CPU timings jitter)
-        let mut best = f64::INFINITY;
-        for seed in 0..3u64 {
+        // A few attempts: print the best (PJRT CPU timings jitter), but
+        // record the per-attempt distribution so p99_us really is a tail.
+        let mut attempts = Summary::new();
+        for seed in 0..5u64 {
             let r = engine.serve_batch(tokens, seed).expect("serve");
-            best = best.min(r.wallclock_ms);
+            attempts.push(r.wallclock_ms * 1e3);
         }
         println!(
-            "[perf] numeric serve batch {tokens:>3}: best {best:.1} ms over 2 layers"
+            "[perf] numeric serve batch {tokens:>3}: best {:.1} ms over 2 layers",
+            attempts.min() / 1e3
         );
+        records.push(BenchRecord {
+            name: format!("numeric_serve/batch{tokens}"),
+            ops_per_s: if attempts.mean() > 0.0 { 1e6 / attempts.mean() } else { 0.0 },
+            p99_us: attempts.p99(),
+        });
+    }
+}
+
+/// Hand-rolled JSON emitter (the offline crate set has no serde).
+fn write_json(records: &[BenchRecord]) {
+    let mut out = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ops_per_s\": {:.3}, \"p99_us\": {:.3}}}{}\n",
+            r.name,
+            r.ops_per_s,
+            r.p99_us,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("[perf] wrote {path} ({} records)", records.len()),
+        Err(e) => eprintln!("[perf] warning: could not write {path}: {e}"),
     }
 }
 
 fn main() {
     println!("== perf_hotpath ==");
-    bench_flow_engine();
-    bench_trace_generation();
-    bench_numeric_serving();
+    let mut records = Vec::new();
+    bench_flow_engine(&mut records);
+    bench_trace_generation(&mut records);
+    bench_serve_iteration(&mut records);
+    bench_numeric_serving(&mut records);
+    write_json(&records);
 }

@@ -1,0 +1,18 @@
+//! Bench harness for the serving-level RPS sweep: runs the `serve_sweep`
+//! experiment end to end and reports wall time, so serving-path
+//! regressions show up next to the figure benches.
+//! `REPRO_QUICK=1 cargo bench --bench serve_sweep` for a smoke run.
+
+use expert_streaming::experiments::{run_by_id, ExpOpts};
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("REPRO_QUICK").is_ok();
+    let opts = ExpOpts { quick, ..Default::default() };
+    let t = Instant::now();
+    run_by_id("serve_sweep", &opts).expect("experiment failed");
+    println!(
+        "[bench serve_sweep] open-loop RPS sweep in {:.2}s (quick={quick})",
+        t.elapsed().as_secs_f64()
+    );
+}

@@ -6,10 +6,12 @@ pub mod hardware;
 pub mod model;
 pub mod parse;
 pub mod presets;
+pub mod serve;
 
 pub use hardware::{DdrConfig, D2dConfig, HardwareConfig, SchedulerCost};
 pub use model::{Dataset, MoeModelConfig};
 pub use parse::Overrides;
+pub use serve::{ArrivalKind, ServePreset, SloConfig};
 
 /// Which parallelization strategy a run uses (paper §VI baselines +
 /// ablation configurations A1–A5).

@@ -60,6 +60,9 @@ impl Overrides {
                 "weight_buffer_mb" | "token_buffer_mb" | "ddr_gbps" | "ddr_channels"
                 | "d2d_gbps" | "hop_ns" | "mesh" | "macs" | "freq_mhz" | "overhead_cycles"
                 | "slices" | "tokens" | "seed" | "iters" | "slack" => {}
+                // Selection keys read by `repro run` before this is called
+                // (not hardware knobs, but they share the override string).
+                "model" | "dataset" | "strategy" => {}
                 other => return Err(format!("unknown override key '{other}'")),
             }
         }

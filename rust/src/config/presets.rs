@@ -1,7 +1,9 @@
-//! Table I presets: the 2×2 MCM test chip and the four evaluated models.
+//! Table I presets: the 2×2 MCM test chip and the four evaluated models,
+//! plus serving scenarios for the L4 open-loop subsystem.
 
 use super::hardware::{D2dConfig, DdrConfig, HardwareConfig, SchedulerCost};
 use super::model::MoeModelConfig;
+use super::serve::{ArrivalKind, ServePreset, SloConfig};
 
 /// The paper's 2×2 5nm MCM test chip (Table I, top).
 pub fn mcm_2x2() -> HardwareConfig {
@@ -107,6 +109,71 @@ pub fn model_by_name(name: &str) -> Option<MoeModelConfig> {
 /// The paper's tokens-per-iteration buckets (§VI-A).
 pub const TOKENS_PER_ITERATION: [usize; 4] = [16, 64, 256, 1024];
 
+/// A scaled-down MoE used by serving smoke runs and unit tests: keeps the
+/// long-tail routing pressure (many experts, top-8) while each layer
+/// simulates in microseconds of wall time. Its aggregate expert weights
+/// (~48 MiB/layer) still exceed the per-die buffer, so streaming matters.
+pub fn tiny_moe() -> MoeModelConfig {
+    MoeModelConfig {
+        name: "Tiny-MoE",
+        d_model: 512,
+        d_expert: 256,
+        n_experts: 64,
+        top_k: 8,
+        n_shared: 0,
+        n_heads: 8,
+        n_layers: 8,
+        params_b: 0.03,
+    }
+}
+
+/// Interactive chat-style serving scenario — the default for
+/// `repro serve-sweep`: Poisson arrivals, short prompts, modest outputs,
+/// the paper's 64-token iteration budget, low-batch concurrency, and an
+/// auto-calibrated SLO (3× / 2.5× the unloaded EP p99 TTFT / TPOT).
+pub fn serve_chat() -> ServePreset {
+    ServePreset {
+        name: "chat",
+        arrival: ArrivalKind::Poisson,
+        prompt_mean: 96.0,
+        prompt_cv: 0.8,
+        output_mean: 24.0,
+        output_cv: 0.6,
+        max_len: 512,
+        token_budget: 64,
+        max_batch: 8,
+        prefill_chunk: 32,
+        slo: SloConfig::default(),
+    }
+}
+
+/// Bursty traffic: on-off modulated arrivals (2 s bursts every 6 s at 3×
+/// the base rate) with heavier-tailed prompts — stresses the admission
+/// queue and tail TTFT rather than steady-state throughput.
+pub fn serve_bursty() -> ServePreset {
+    ServePreset {
+        name: "bursty",
+        arrival: ArrivalKind::OnOff { on_s: 2.0, off_s: 4.0, burst_factor: 3.0 },
+        prompt_mean: 128.0,
+        prompt_cv: 1.2,
+        output_mean: 24.0,
+        output_cv: 0.8,
+        max_len: 768,
+        token_budget: 64,
+        max_batch: 8,
+        prefill_chunk: 32,
+        slo: SloConfig::default(),
+    }
+}
+
+pub fn serve_preset_by_name(name: &str) -> Option<ServePreset> {
+    match name.to_ascii_lowercase().as_str() {
+        "chat" => Some(serve_chat()),
+        "bursty" => Some(serve_bursty()),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +183,22 @@ mod tests {
         assert_eq!(model_by_name("qwen").unwrap().name, "Qwen3-A3B");
         assert_eq!(model_by_name("deepseek").unwrap().name, "DeepSeek-MoE");
         assert!(model_by_name("gpt5").is_none());
+    }
+
+    #[test]
+    fn serve_presets_lookup() {
+        assert_eq!(serve_preset_by_name("chat").unwrap().name, "chat");
+        assert_eq!(serve_preset_by_name("BURSTY").unwrap().name, "bursty");
+        assert!(serve_preset_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn tiny_moe_streams() {
+        // The serving smoke model must not fit on chip, or the sweep would
+        // not exercise the streaming path it exists to compare.
+        let hw = mcm_2x2();
+        let m = tiny_moe();
+        assert!(m.expert_bytes(hw.weight_bytes) * m.n_experts as u64 > hw.weight_buffer_bytes);
     }
 
     #[test]

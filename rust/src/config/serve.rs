@@ -1,0 +1,115 @@
+//! Serving-layer configuration: open-loop arrival processes, request
+//! length distributions, continuous-batching budgets, and latency SLOs.
+//!
+//! Pure data — the sampling and scheduling logic lives in `crate::server`
+//! (L4). Keeping the knobs here lets presets, the override parser, and the
+//! sweep drivers share one vocabulary without a layering cycle.
+
+/// Inter-arrival process of the open-loop request generator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless Poisson arrivals (exponential gaps).
+    Poisson,
+    /// Gamma-distributed gaps with coefficient of variation `cv`
+    /// (`cv > 1` = burstier than Poisson, `cv < 1` = smoother; `cv = 1`
+    /// degenerates to Poisson).
+    Gamma { cv: f64 },
+    /// On-off modulated Poisson: arrivals at `burst_factor ×` the base
+    /// rate during ON windows, silence during OFF. Window lengths are
+    /// exponential with means `on_s` / `off_s` (seconds). Presets pick
+    /// `burst_factor ≈ (on_s + off_s) / on_s` so the long-run offered
+    /// rate still matches the configured RPS.
+    OnOff { on_s: f64, off_s: f64, burst_factor: f64 },
+}
+
+impl ArrivalKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Gamma { .. } => "gamma",
+            ArrivalKind::OnOff { .. } => "on-off",
+        }
+    }
+}
+
+/// Latency SLO a sweep enforces, in milliseconds of simulated time.
+/// A non-positive bound means "derive from calibration" (the sweep driver
+/// measures the baseline's unloaded latency and scales it).
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// p99 time-to-first-token budget (ms); <= 0 ⇒ auto-calibrate.
+    pub ttft_p99_ms: f64,
+    /// p99 time-per-output-token budget (ms); <= 0 ⇒ auto-calibrate.
+    pub tpot_p99_ms: f64,
+    /// Calibration multiplier applied to the unloaded p99 TTFT.
+    pub auto_ttft_mult: f64,
+    /// Calibration multiplier applied to the unloaded p99 TPOT.
+    pub auto_tpot_mult: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            ttft_p99_ms: 0.0,
+            tpot_p99_ms: 0.0,
+            auto_ttft_mult: 3.0,
+            auto_tpot_mult: 2.5,
+        }
+    }
+}
+
+/// One serving scenario: how requests arrive, how long they are, and how
+/// the continuous batcher is provisioned.
+#[derive(Clone, Debug)]
+pub struct ServePreset {
+    pub name: &'static str,
+    pub arrival: ArrivalKind,
+    /// Mean prompt length in tokens (lognormal).
+    pub prompt_mean: f64,
+    /// Coefficient of variation of the prompt-length distribution.
+    pub prompt_cv: f64,
+    /// Mean output length in tokens (lognormal).
+    pub output_mean: f64,
+    /// Coefficient of variation of the output-length distribution.
+    pub output_cv: f64,
+    /// Hard cap on sampled prompt/output lengths.
+    pub max_len: usize,
+    /// Per-iteration token budget of the continuous batcher (the chunked
+    /// prefill budget; paper §VI-A evaluates 16–1024 tokens/iteration).
+    pub token_budget: usize,
+    /// Maximum concurrently running (prefill + decode) requests — the
+    /// low-batch regime the paper targets (§II-B).
+    pub max_batch: usize,
+    /// Largest prefill chunk granted to one request per iteration.
+    pub prefill_chunk: usize,
+    pub slo: SloConfig,
+}
+
+impl ServePreset {
+    /// Sanity bounds every scheduler entry point asserts once.
+    pub fn validate(&self) {
+        assert!(self.token_budget > 0, "token_budget must be positive");
+        assert!(self.max_batch > 0, "max_batch must be positive");
+        assert!(self.prefill_chunk > 0, "prefill_chunk must be positive");
+        assert!(self.prompt_mean >= 1.0 && self.output_mean >= 1.0);
+        assert!(self.max_len >= 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::presets;
+
+    #[test]
+    fn presets_validate() {
+        presets::serve_chat().validate();
+        presets::serve_bursty().validate();
+    }
+
+    #[test]
+    fn default_slo_is_auto() {
+        let slo = super::SloConfig::default();
+        assert!(slo.ttft_p99_ms <= 0.0 && slo.tpot_p99_ms <= 0.0);
+        assert!(slo.auto_ttft_mult > 1.0 && slo.auto_tpot_mult > 1.0);
+    }
+}

@@ -11,4 +11,4 @@ pub mod serve;
 pub mod timing;
 
 pub use serve::{NumericEngine, ServeReport};
-pub use timing::{E2eConfig, E2eReport, E2eSimulator};
+pub use timing::{attention_cycles, E2eConfig, E2eReport, E2eSimulator};

@@ -69,6 +69,40 @@ impl E2eReport {
     }
 }
 
+/// Attention-phase cycles for `tokens` tokens at one layer, assuming an
+/// average context of `avg_context`. Dense and head-parallel across
+/// chiplets (paper §VI-C): the per-layer QKVO projections + score/value
+/// work on the PE arrays, overlapped with the attention-weight DDR stream
+/// and the hidden-state D2D broadcast — `max` of the three.
+///
+/// Free function so both the offline evaluator (`E2eSimulator`) and the
+/// serving layer (`crate::server`) charge attention identically.
+pub fn attention_cycles(
+    model: &MoeModelConfig,
+    hw: &HardwareConfig,
+    avg_context: usize,
+    tokens: usize,
+) -> u64 {
+    if tokens == 0 {
+        return 0;
+    }
+    let macs = tokens as u64 * model.attn_macs_per_token(avg_context);
+    let compute = crate::util::ceil_div(
+        crate::util::ceil_div(macs, hw.n_chiplets() as u64),
+        hw.macs_per_die,
+    );
+    // Attention weights (4·d²) streamed over the aggregate DDR.
+    let w_bytes = 4 * (model.d_model as u64).pow(2) * hw.weight_bytes;
+    let ddr = (w_bytes as f64
+        / (hw.ddr_bytes_per_cycle() * hw.ddr.channels.min(hw.n_chiplets()) as f64))
+        .ceil() as u64;
+    // Hidden-state broadcast for head parallelism.
+    let bcast_bytes = tokens as u64 * model.token_bytes(hw.act_bytes);
+    let d2d = (bcast_bytes as f64 / hw.d2d_bytes_per_cycle()).ceil() as u64
+        + hw.d2d_hop_cycles();
+    compute.max(ddr).max(d2d)
+}
+
 pub struct E2eSimulator {
     pub model: MoeModelConfig,
     pub hw: HardwareConfig,
@@ -108,25 +142,7 @@ impl E2eSimulator {
 
     /// Attention-phase cycles for `tokens` tokens at one layer.
     fn attention_cycles(&self, tokens: usize) -> u64 {
-        if tokens == 0 {
-            return 0;
-        }
-        let hw = &self.hw;
-        let macs = tokens as u64 * self.model.attn_macs_per_token(self.cfg.avg_context);
-        let compute = crate::util::ceil_div(
-            crate::util::ceil_div(macs, hw.n_chiplets() as u64),
-            hw.macs_per_die,
-        );
-        // Attention weights (4·d²) streamed over the aggregate DDR.
-        let w_bytes = 4 * (self.model.d_model as u64).pow(2) * hw.weight_bytes;
-        let ddr = (w_bytes as f64
-            / (hw.ddr_bytes_per_cycle() * hw.ddr.channels.min(hw.n_chiplets()) as f64))
-            .ceil() as u64;
-        // Hidden-state broadcast for head parallelism.
-        let bcast_bytes = tokens as u64 * self.model.token_bytes(hw.act_bytes);
-        let d2d = (bcast_bytes as f64 / hw.d2d_bytes_per_cycle()).ceil() as u64
-            + hw.d2d_hop_cycles();
-        compute.max(ddr).max(d2d)
+        attention_cycles(&self.model, &self.hw, self.cfg.avg_context, tokens)
     }
 
     /// Run `iterations` forward passes of `tokens_per_iter` input tokens.

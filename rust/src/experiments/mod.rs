@@ -15,6 +15,10 @@
 //! | fig16  | DSE: buffer × DDR-BW and DDR × D2D feasibility   |
 //! | fig17  | granularity heatmap (micro-slices × buffer)      |
 //! | fig18  | scalability 2×2 → 4×4                            |
+//!
+//! Beyond the paper's figures, `serve_sweep` is the serving-level
+//! yardstick: an open-loop RPS ramp to SLO violation over the L4 server
+//! subsystem (see `crate::server`).
 
 pub mod fig11;
 pub mod fig12;
@@ -26,6 +30,7 @@ pub mod fig17;
 pub mod fig18;
 pub mod fig2;
 pub mod fig9;
+pub mod serve_sweep;
 pub mod table1;
 
 use crate::config::{Dataset, HardwareConfig, MoeModelConfig, StrategyKind};
@@ -51,9 +56,9 @@ impl Default for ExpOpts {
     }
 }
 
-pub const ALL_IDS: [&str; 11] = [
+pub const ALL_IDS: [&str; 12] = [
     "table1", "fig2", "fig9", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
-    "fig18",
+    "fig18", "serve_sweep",
 ];
 
 /// Run one experiment by id; returns the rendered tables.
@@ -70,6 +75,7 @@ pub fn run_by_id(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
         "fig16" => fig16::run(opts),
         "fig17" => fig17::run(opts),
         "fig18" => fig18::run(opts),
+        "serve_sweep" | "serve-sweep" => serve_sweep::run(opts),
         other => return Err(format!("unknown experiment '{other}' (see `repro list`)")),
     };
     for t in &tables {
@@ -137,6 +143,6 @@ mod tests {
         let tables = run_by_id("table1", &opts).unwrap();
         assert!(!tables.is_empty());
         assert!(run_by_id("fig99", &opts).is_err());
-        assert_eq!(ALL_IDS.len(), 11);
+        assert_eq!(ALL_IDS.len(), 12);
     }
 }

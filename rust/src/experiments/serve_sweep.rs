@@ -1,0 +1,247 @@
+//! `serve_sweep`: open-loop RPS sweep to SLO violation (the serving-level
+//! yardstick; not a paper figure).
+//!
+//! Method:
+//! 1. **Calibrate** on the EP baseline: a closed burst of `max_batch`
+//!    requests measures unloaded tail latencies (the SLO reference), and a
+//!    longer burst measures closed-loop service capacity (the RPS grid
+//!    anchor). The SLO defaults to 3× / 2.5× EP's unloaded p99 TTFT/TPOT
+//!    and is shared by every strategy — "same SLO" comparisons.
+//! 2. **Sweep**: for each strategy (FSE-DP+paired, EP, naive FSE-DP) and
+//!    each offered load on a shared grid, serve a seeded open-loop Poisson
+//!    stream and record TTFT/TPOT/e2e tails, queue depth, and completion.
+//! 3. **Refine**: per strategy, bracket the SLO knee from the grid's own
+//!    pass/fail outcomes (extending geometrically where the grid was
+//!    one-sided) and bisect it, so the reported maximum sustained RPS
+//!    resolves finer than the grid spacing at few extra probes.
+
+use super::ExpOpts;
+use crate::config::{presets, Dataset, MoeModelConfig, ServePreset, SloConfig, StrategyKind};
+use crate::server::{resolve_slo, LoadMode, ServeMetrics, ServerConfig, ServerSim};
+use crate::util::Table;
+
+/// Completion fraction below which a run counts as saturated regardless of
+/// the latency tails it managed to record before the cutoff.
+const MIN_COMPLETION_FRAC: f64 = 0.95;
+
+const SCHEMES: [StrategyKind; 3] =
+    [StrategyKind::FseDpPaired, StrategyKind::Ep, StrategyKind::FseDpNaive];
+
+/// Shared offered-load grid, as multiples of EP's calibrated capacity.
+const GRID: [f64; 6] = [0.30, 0.45, 0.60, 0.80, 1.00, 1.25];
+
+struct Sweep {
+    model: MoeModelConfig,
+    preset: ServePreset,
+    seed: u64,
+    requests_per_point: usize,
+}
+
+impl Sweep {
+    fn run_mode(&self, strategy: StrategyKind, mode: LoadMode) -> ServeMetrics {
+        let hw = presets::mcm_2x2();
+        let cfg = ServerConfig { strategy, mode, seed: self.seed, ..Default::default() };
+        ServerSim::new(&self.model, &hw, Dataset::C4, &self.preset, cfg).run()
+    }
+
+    fn run_open(&self, strategy: StrategyKind, rate_rps: f64) -> ServeMetrics {
+        let duration_s = self.requests_per_point as f64 / rate_rps;
+        self.run_mode(strategy, LoadMode::Open { rate_rps, duration_s })
+    }
+
+    /// Largest offered load (RPS) meeting the SLO, refined from the shared
+    /// grid's pass/fail outcomes: bracket the knee with the grid (extending
+    /// geometrically where the grid was one-sided), then bisect. Reusing
+    /// the grid keeps the probe count low. Deterministic.
+    fn saturation_rps(&self, strategy: StrategyKind, slo: &SloConfig, grid: &[(f64, bool)]) -> f64 {
+        let ok = |rps: f64| self.run_open(strategy, rps).meets(slo, MIN_COMPLETION_FRAC);
+        let mut lo = grid
+            .iter()
+            .filter(|&&(_, o)| o)
+            .map(|&(r, _)| r)
+            .fold(0.0f64, f64::max);
+        let mut hi = grid
+            .iter()
+            .filter(|&&(r, o)| !o && r > lo)
+            .map(|&(r, _)| r)
+            .fold(f64::INFINITY, f64::min);
+        if lo == 0.0 {
+            // Even the lightest grid load violated: ramp down below it.
+            let mut r = hi / 1.5;
+            for _ in 0..6 {
+                if ok(r) {
+                    lo = r;
+                    break;
+                }
+                hi = r;
+                r /= 1.5;
+            }
+            if lo == 0.0 {
+                return 0.0;
+            }
+        }
+        if !hi.is_finite() {
+            // The entire grid passed: ramp up until the first violation
+            // (bounded: 1.5^6 ≈ 11× the grid top).
+            let mut r = lo * 1.5;
+            for _ in 0..6 {
+                if ok(r) {
+                    lo = r;
+                    r *= 1.5;
+                } else {
+                    hi = r;
+                    break;
+                }
+            }
+            if !hi.is_finite() {
+                return lo; // never violated within the ramp cap
+            }
+        }
+        for _ in 0..4 {
+            let mid = 0.5 * (lo + hi);
+            if ok(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let hw = presets::mcm_2x2();
+    // Non-quick uses DeepSeek-MoE: a full Table-I model whose shared
+    // experts exercise the serving bridge, at 28 layers instead of
+    // Qwen3's 48 so `repro all` stays tractable.
+    let sweep = Sweep {
+        model: if opts.quick { presets::tiny_moe() } else { presets::deepseek_moe() },
+        preset: presets::serve_chat(),
+        seed: opts.seed,
+        requests_per_point: if opts.quick { 16 } else { 24 },
+    };
+
+    // 1. Calibration on EP (the baseline every speedup is quoted against).
+    let unloaded = sweep.run_mode(
+        StrategyKind::Ep,
+        LoadMode::Burst { n_requests: sweep.preset.max_batch },
+    );
+    let capacity = sweep.run_mode(
+        StrategyKind::Ep,
+        LoadMode::Burst { n_requests: 4 * sweep.preset.max_batch },
+    );
+    let slo: SloConfig = resolve_slo(&sweep.preset.slo, &unloaded);
+    let base_rps = capacity.service_rps(hw.freq_hz);
+    assert!(base_rps > 0.0, "calibration produced no completions");
+
+    // 2. Shared-grid sweep (the load-vs-tail-latency table).
+    let mut load_t = Table::new(
+        &format!(
+            "serve_sweep: {} / preset '{}' / open-loop Poisson, {} req/point, \
+             SLO p99 TTFT <= {:.2} ms, p99 TPOT <= {:.2} ms (3x/2.5x unloaded EP)",
+            sweep.model.name,
+            sweep.preset.name,
+            sweep.requests_per_point,
+            slo.ttft_p99_ms,
+            slo.tpot_p99_ms
+        ),
+        &[
+            "offered RPS",
+            "scheme",
+            "p99 TTFT (ms)",
+            "p99 TPOT (ms)",
+            "p50 e2e (ms)",
+            "completed",
+            "mean queue",
+            "SLO",
+        ],
+    );
+    let mut grid_outcomes: Vec<Vec<(f64, bool)>> = vec![Vec::new(); SCHEMES.len()];
+    for &mult in &GRID {
+        let rps = mult * base_rps;
+        for (si, &scheme) in SCHEMES.iter().enumerate() {
+            let m = sweep.run_open(scheme, rps);
+            let ok = m.meets(&slo, MIN_COMPLETION_FRAC);
+            grid_outcomes[si].push((rps, ok));
+            load_t.row(vec![
+                format!("{rps:.2}"),
+                scheme.name().into(),
+                format!("{:.2}", m.p99_ttft_ms()),
+                format!("{:.2}", m.p99_tpot_ms()),
+                format!("{:.2}", m.e2e_us.median() / 1e3),
+                format!("{}/{}", m.completed, m.arrived),
+                format!("{:.1}", m.queue_depth.mean()),
+                if ok { "ok".into() } else { "VIOLATED".to_string() },
+            ]);
+        }
+    }
+
+    // 3. Per-scheme saturation refinement.
+    let mut sum_t = Table::new(
+        "serve_sweep summary: max sustained RPS under the shared SLO",
+        &["scheme", "max sustained RPS", "vs EP"],
+    );
+    let sustained: Vec<f64> = SCHEMES
+        .iter()
+        .enumerate()
+        .map(|(si, &s)| sweep.saturation_rps(s, &slo, &grid_outcomes[si]))
+        .collect();
+    let ep_idx = SCHEMES.iter().position(|s| *s == StrategyKind::Ep).unwrap();
+    for (si, &scheme) in SCHEMES.iter().enumerate() {
+        let vs = if sustained[ep_idx] > 0.0 {
+            format!("{:.2}x", sustained[si] / sustained[ep_idx])
+        } else {
+            "n/a".into()
+        };
+        sum_t.row(vec![scheme.name().into(), format!("{:.2}", sustained[si]), vs]);
+    }
+
+    super::save(&load_t, opts, "serve_sweep_load");
+    super::save(&sum_t, opts, "serve_sweep_summary");
+    vec![load_t, sum_t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_runs_and_fsedp_sustains_more_than_ep() {
+        let opts = ExpOpts {
+            quick: true,
+            out_dir: "/tmp/expstr-test-results".into(),
+            ..Default::default()
+        };
+        let tables = run(&opts);
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), GRID.len() * SCHEMES.len());
+        assert_eq!(tables[1].n_rows(), SCHEMES.len());
+        let csv = tables[1].to_csv();
+        let max_of = |scheme: &str| -> f64 {
+            csv.lines()
+                .find(|l| l.starts_with(&format!("{scheme},")))
+                .and_then(|l| l.split(',').nth(1))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(-1.0)
+        };
+        let fsedp = max_of("FSE-DP+paired");
+        let ep = max_of("EP");
+        assert!(fsedp >= 0.0 && ep >= 0.0, "summary rows missing:\n{csv}");
+        assert!(
+            fsedp > ep,
+            "FSE-DP should sustain strictly more RPS than EP (got {fsedp} vs {ep})"
+        );
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let opts = ExpOpts {
+            quick: true,
+            out_dir: "/tmp/expstr-test-results".into(),
+            ..Default::default()
+        };
+        let a = run(&opts)[0].to_csv();
+        let b = run(&opts)[0].to_csv();
+        assert_eq!(a, b);
+    }
+}

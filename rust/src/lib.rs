@@ -15,6 +15,11 @@
 //!   flow rules, token buffering — over a cycle-level simulator of the
 //!   Table-I package, plus the PJRT runtime that executes the artifacts on
 //!   the request path without Python.
+//! * L4 (`server`): the open-loop serving subsystem — seeded request
+//!   arrival processes, an admission queue with continuous batching and
+//!   chunked prefill, and TTFT/TPOT/e2e SLO metrics — which turns the
+//!   per-iteration simulator into a servable system and gives every
+//!   strategy a throughput/latency yardstick (`repro serve-sweep`).
 
 pub mod baselines;
 pub mod config;
@@ -24,6 +29,7 @@ pub mod engine;
 pub mod experiments;
 pub mod moe;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod util;
 pub mod workload;

@@ -6,6 +6,14 @@
 //!   repro all [--quick]                run every experiment
 //!   repro run [key=value ...]          one simulated layer with overrides
 //!   repro serve [tokens=N] [layers=N]  numeric serving path (PJRT)
+//!   repro serve-sweep [--quick]        open-loop RPS sweep to SLO violation
+//!
+//! `serve-sweep` drives the L4 serving subsystem (`server::ServerSim`):
+//! seeded Poisson arrivals are continuous-batched onto the simulated
+//! package for FSE-DP, EP, and naive FSE-DP; the sweep ramps offered load,
+//! prints a load-vs-p99-TTFT/TPOT table, and reports each strategy's
+//! maximum sustained RPS under a shared SLO calibrated from unloaded EP
+//! (alias of `repro experiment serve_sweep`; accepts --quick/--seed/--out).
 //!
 //! Hand-rolled argument handling (the offline crate set has no clap).
 
@@ -22,7 +30,7 @@ use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]"
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR]"
     );
     ExitCode::FAILURE
 }
@@ -164,6 +172,14 @@ fn main() -> ExitCode {
         }
         "run" => cmd_run(&args[1..]),
         "serve" => cmd_serve(&args[1..]),
+        "serve-sweep" => {
+            let (opts, rest) = parse_opts(&args[1..]);
+            if let Some(stray) = rest.first() {
+                Err(format!("serve-sweep takes no positional args (got '{stray}')"))
+            } else {
+                experiments::run_by_id("serve_sweep", &opts).map(|_| ())
+            }
+        }
         _ => return usage(),
     };
     match result {

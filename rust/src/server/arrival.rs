@@ -1,0 +1,262 @@
+//! Open-loop request generation: seeded stochastic arrival processes and
+//! per-request prompt/output-length distributions.
+//!
+//! Open loop means arrivals do not wait for the system — exactly the load
+//! model under which saturation and tail latency are visible (a closed
+//! loop self-throttles and hides queueing collapse).
+
+use super::request::Request;
+use crate::config::{ArrivalKind, ServePreset};
+use crate::util::Rng;
+
+/// Lognormal token-length distribution parameterized by mean and
+/// coefficient of variation, clamped to `[1, max]`.
+#[derive(Clone, Copy, Debug)]
+struct LenDist {
+    mu: f64,
+    sigma: f64,
+    max: usize,
+}
+
+impl LenDist {
+    fn new(mean: f64, cv: f64, max: usize) -> LenDist {
+        assert!(mean >= 1.0 && cv >= 0.0);
+        let sigma2 = (1.0 + cv * cv).ln();
+        LenDist { mu: mean.ln() - sigma2 / 2.0, sigma: sigma2.sqrt(), max }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let v = (self.mu + self.sigma * rng.normal()).exp();
+        (v.round() as usize).clamp(1, self.max)
+    }
+}
+
+/// Seeded open-loop request source: yields requests in arrival order for
+/// one offered-load level.
+pub struct RequestGenerator {
+    rng: Rng,
+    arrival: ArrivalKind,
+    /// Mean inter-arrival gap in cycles (freq / offered RPS).
+    mean_gap_cycles: f64,
+    freq_hz: f64,
+    clock: f64,
+    next_id: u32,
+    /// On-off modulation state: currently inside an ON window?
+    in_on: bool,
+    /// Cycle at which the current window ends.
+    window_end: f64,
+    prompt: LenDist,
+    output: LenDist,
+}
+
+impl RequestGenerator {
+    pub fn new(preset: &ServePreset, rate_rps: f64, freq_hz: f64, seed: u64) -> RequestGenerator {
+        preset.validate();
+        assert!(rate_rps > 0.0, "offered load must be positive");
+        RequestGenerator {
+            rng: Rng::new(seed ^ 0x5E8F_E57A_CC1A_17E5),
+            arrival: preset.arrival,
+            mean_gap_cycles: freq_hz / rate_rps,
+            freq_hz,
+            clock: 0.0,
+            next_id: 0,
+            in_on: false,
+            window_end: 0.0,
+            prompt: LenDist::new(preset.prompt_mean, preset.prompt_cv, preset.max_len),
+            output: LenDist::new(preset.output_mean, preset.output_cv, preset.max_len),
+        }
+    }
+
+    /// Exponential gap with the given mean (inverse-CDF sampling).
+    fn exp_gap(&mut self, mean: f64) -> f64 {
+        // 1 - u ∈ (0, 1], so the log is finite.
+        -mean * (1.0 - self.rng.f64()).ln()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang, with the shape<1 boost.
+    fn gamma_unit(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            let boost = self.rng.f64().powf(1.0 / shape);
+            return self.gamma_unit(shape + 1.0) * boost;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.rng.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.rng.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Gamma-distributed gap with mean `mean` and coefficient of variation
+    /// `cv` (shape 1/cv², scale mean·cv²).
+    fn gamma_gap(&mut self, mean: f64, cv: f64) -> f64 {
+        if cv <= 0.0 {
+            return mean;
+        }
+        let shape = 1.0 / (cv * cv);
+        self.gamma_unit(shape) * mean / shape
+    }
+
+    /// Advance the process and return the next arrival time in cycles.
+    fn next_arrival(&mut self) -> f64 {
+        match self.arrival {
+            ArrivalKind::Poisson => {
+                let g = self.exp_gap(self.mean_gap_cycles);
+                self.clock += g;
+                self.clock
+            }
+            ArrivalKind::Gamma { cv } => {
+                let g = self.gamma_gap(self.mean_gap_cycles, cv);
+                self.clock += g;
+                self.clock
+            }
+            ArrivalKind::OnOff { on_s, off_s, burst_factor } => {
+                let on_mean = on_s * self.freq_hz;
+                let off_mean = off_s * self.freq_hz;
+                let burst_gap = self.mean_gap_cycles / burst_factor.max(1e-9);
+                loop {
+                    if !self.in_on {
+                        // Jump over the idle window and open an ON window.
+                        self.clock = self.window_end;
+                        self.in_on = true;
+                        let w = self.exp_gap(on_mean);
+                        self.window_end = self.clock + w;
+                    }
+                    let gap = self.exp_gap(burst_gap);
+                    if self.clock + gap <= self.window_end {
+                        self.clock += gap;
+                        return self.clock;
+                    }
+                    // Burst ends before the next arrival: go idle.
+                    self.clock = self.window_end;
+                    self.in_on = false;
+                    let w = self.exp_gap(off_mean);
+                    self.window_end = self.clock + w;
+                }
+            }
+        }
+    }
+
+    /// Next request in arrival order.
+    pub fn next_request(&mut self) -> Request {
+        let at = self.next_arrival().max(0.0) as u64;
+        self.next_id += 1;
+        let prompt = self.prompt.sample(&mut self.rng);
+        let output = self.output.sample(&mut self.rng);
+        Request::new(self.next_id, at, prompt, output)
+    }
+
+    /// All arrivals strictly before `horizon_cycles`, in order.
+    pub fn stream_until(&mut self, horizon_cycles: u64) -> Vec<Request> {
+        let mut out = Vec::new();
+        loop {
+            let r = self.next_request();
+            if r.arrival_cycles >= horizon_cycles {
+                return out;
+            }
+            out.push(r);
+        }
+    }
+
+    /// `n` requests all arriving at cycle 0 — the closed "burst" mode used
+    /// for service-capacity calibration.
+    pub fn burst(&mut self, n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|_| {
+                self.next_id += 1;
+                let prompt = self.prompt.sample(&mut self.rng);
+                let output = self.output.sample(&mut self.rng);
+                Request::new(self.next_id, 0, prompt, output)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    const FREQ: f64 = 800e6;
+
+    #[test]
+    fn poisson_rate_is_roughly_offered() {
+        let preset = presets::serve_chat();
+        let mut g = RequestGenerator::new(&preset, 100.0, FREQ, 7);
+        let horizon = (20.0 * FREQ) as u64; // 20 simulated seconds
+        let reqs = g.stream_until(horizon);
+        let rate = reqs.len() as f64 / 20.0;
+        assert!((rate - 100.0).abs() < 15.0, "rate {rate}");
+        // arrivals are ordered and in range
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_cycles <= w[1].arrival_cycles);
+        }
+        assert!(reqs.iter().all(|r| r.arrival_cycles < horizon));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let preset = presets::serve_chat();
+        let mut a = RequestGenerator::new(&preset, 50.0, FREQ, 42);
+        let mut b = RequestGenerator::new(&preset, 50.0, FREQ, 42);
+        for _ in 0..100 {
+            let (x, y) = (a.next_request(), b.next_request());
+            assert_eq!(x.arrival_cycles, y.arrival_cycles);
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.output_len, y.output_len);
+        }
+    }
+
+    #[test]
+    fn lengths_are_clamped_and_near_mean() {
+        let preset = presets::serve_chat();
+        let mut g = RequestGenerator::new(&preset, 10.0, FREQ, 3);
+        let reqs = g.burst(2000);
+        let mean_p: f64 =
+            reqs.iter().map(|r| r.prompt_len as f64).sum::<f64>() / reqs.len() as f64;
+        assert!((mean_p - preset.prompt_mean).abs() / preset.prompt_mean < 0.25, "{mean_p}");
+        assert!(reqs.iter().all(|r| (1..=preset.max_len).contains(&r.prompt_len)));
+        assert!(reqs.iter().all(|r| (1..=preset.max_len).contains(&r.output_len)));
+    }
+
+    #[test]
+    fn gamma_cv_one_close_to_poisson_count() {
+        let mut preset = presets::serve_chat();
+        preset.arrival = ArrivalKind::Gamma { cv: 1.0 };
+        let mut g = RequestGenerator::new(&preset, 80.0, FREQ, 11);
+        let n = g.stream_until((10.0 * FREQ) as u64).len();
+        assert!((n as f64 - 800.0).abs() < 120.0, "{n}");
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster() {
+        // Dispersion test: on-off arrivals have a higher variance-to-mean
+        // ratio of per-second counts than Poisson.
+        let poisson = presets::serve_chat();
+        let bursty = presets::serve_bursty();
+        let dispersion = |preset: &ServePreset, seed: u64| {
+            let mut g = RequestGenerator::new(preset, 60.0, FREQ, seed);
+            let secs = 40;
+            let reqs = g.stream_until((secs as f64 * FREQ) as u64);
+            let mut counts = vec![0.0f64; secs];
+            for r in &reqs {
+                counts[(r.arrival_cycles as f64 / FREQ) as usize] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / secs as f64;
+            let var =
+                counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / secs as f64;
+            var / mean.max(1e-9)
+        };
+        assert!(dispersion(&bursty, 5) > 2.0 * dispersion(&poisson, 5));
+    }
+}

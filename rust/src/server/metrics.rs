@@ -1,0 +1,170 @@
+//! Serving metrics: TTFT, TPOT, end-to-end latency, and queue depth, with
+//! p50/p95/p99 summaries and the SLO predicate the RPS sweep enforces.
+
+use super::request::Request;
+use crate::config::{HardwareConfig, SloConfig};
+use crate::util::Summary;
+
+/// Aggregated metrics of one serving run. Latencies are recorded in
+/// microseconds of simulated time.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Time to first token (queueing + prefill), completed requests.
+    pub ttft_us: Summary,
+    /// Time per output token after the first.
+    pub tpot_us: Summary,
+    /// End-to-end request latency.
+    pub e2e_us: Summary,
+    /// Admission-queue depth sampled once per iteration.
+    pub queue_depth: Summary,
+    /// Tokens scheduled per iteration (batch efficiency).
+    pub batch_tokens: Summary,
+    /// Requests offered to the system.
+    pub arrived: usize,
+    /// Requests fully completed.
+    pub completed: usize,
+    /// Scheduling iterations executed.
+    pub iterations: usize,
+    /// Simulated cycles spent inside iterations (busy time).
+    pub busy_cycles: u64,
+    /// Simulated clock at the end of the run.
+    pub end_cycles: u64,
+}
+
+impl ServeMetrics {
+    pub fn record_completion(&mut self, r: &Request, freq_hz: f64) {
+        let us = |c: f64| c / freq_hz * 1e6;
+        self.completed += 1;
+        if let Some(t) = r.ttft_cycles() {
+            self.ttft_us.push(us(t as f64));
+        }
+        if let Some(t) = r.tpot_cycles() {
+            self.tpot_us.push(us(t));
+        }
+        if let Some(t) = r.e2e_cycles() {
+            self.e2e_us.push(us(t as f64));
+        }
+    }
+
+    /// Fraction of offered requests that completed.
+    pub fn completion_frac(&self) -> f64 {
+        if self.arrived == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.arrived as f64
+    }
+
+    /// Completed requests per simulated second.
+    pub fn goodput_rps(&self, freq_hz: f64) -> f64 {
+        if self.end_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.end_cycles as f64 / freq_hz)
+    }
+
+    /// Completed requests per *busy* simulated second — the closed-loop
+    /// service capacity estimate used to place the sweep's RPS grid.
+    pub fn service_rps(&self, freq_hz: f64) -> f64 {
+        if self.busy_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.busy_cycles as f64 / freq_hz)
+    }
+
+    pub fn p99_ttft_ms(&self) -> f64 {
+        self.ttft_us.p99() / 1e3
+    }
+
+    pub fn p99_tpot_ms(&self) -> f64 {
+        self.tpot_us.p99() / 1e3
+    }
+
+    /// SLO predicate: enough requests finished, and tail latencies are
+    /// within budget. Runs cut off while overloaded fail via the
+    /// completion fraction even before their recorded tails blow up.
+    pub fn meets(&self, slo: &SloConfig, min_completion_frac: f64) -> bool {
+        debug_assert!(
+            slo.ttft_p99_ms > 0.0 && slo.tpot_p99_ms > 0.0,
+            "SLO must be resolved (calibrated) before checking"
+        );
+        self.completion_frac() >= min_completion_frac
+            && self.p99_ttft_ms() <= slo.ttft_p99_ms
+            && self.p99_tpot_ms() <= slo.tpot_p99_ms
+    }
+}
+
+/// Resolve an auto-calibrated SLO against an unloaded baseline run.
+pub fn resolve_slo(slo: &SloConfig, unloaded: &ServeMetrics) -> SloConfig {
+    let mut out = *slo;
+    if out.ttft_p99_ms <= 0.0 {
+        out.ttft_p99_ms = slo.auto_ttft_mult * unloaded.p99_ttft_ms();
+    }
+    if out.tpot_p99_ms <= 0.0 {
+        out.tpot_p99_ms = slo.auto_tpot_mult * unloaded.p99_tpot_ms();
+    }
+    out
+}
+
+/// Convenience: per-run mean iteration latency in microseconds.
+pub fn mean_iteration_us(m: &ServeMetrics, hw: &HardwareConfig) -> f64 {
+    if m.iterations == 0 {
+        return 0.0;
+    }
+    crate::util::cycles_to_us(m.busy_cycles / m.iterations as u64, hw.freq_hz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn sample_metrics() -> ServeMetrics {
+        let mut m = ServeMetrics { arrived: 2, ..Default::default() };
+        let mut r = Request::new(1, 0, 4, 3);
+        r.first_token_cycles = Some(800); // 1 us at 800 MHz
+        r.finish_cycles = Some(2400);
+        m.record_completion(&r, 800e6);
+        let mut r2 = Request::new(2, 800, 4, 3);
+        r2.first_token_cycles = Some(2400);
+        r2.finish_cycles = Some(4000);
+        m.record_completion(&r2, 800e6);
+        m
+    }
+
+    #[test]
+    fn records_latencies_in_us() {
+        let m = sample_metrics();
+        assert_eq!(m.completed, 2);
+        assert!((m.ttft_us.mean() - 1.5).abs() < 1e-9); // 1 us and 2 us
+        assert!((m.tpot_us.mean() - 1.0).abs() < 1e-9); // 1600 cycles / 2 tok
+        assert!((m.completion_frac() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_predicate() {
+        let m = sample_metrics();
+        let ok = SloConfig { ttft_p99_ms: 1.0, tpot_p99_ms: 1.0, ..Default::default() };
+        assert!(m.meets(&ok, 0.9)); // p99 TTFT ~2 us << 1 ms
+        let tight = SloConfig { ttft_p99_ms: 1e-3, tpot_p99_ms: 1.0, ..Default::default() };
+        assert!(!m.meets(&tight, 0.9));
+    }
+
+    #[test]
+    fn auto_slo_resolves_from_unloaded() {
+        let m = sample_metrics();
+        let resolved = resolve_slo(&SloConfig::default(), &m);
+        assert!(resolved.ttft_p99_ms > 0.0);
+        assert!((resolved.ttft_p99_ms - 3.0 * m.p99_ttft_ms()).abs() < 1e-12);
+        // Absolute bounds pass through untouched.
+        let fixed = SloConfig { ttft_p99_ms: 7.0, tpot_p99_ms: 5.0, ..Default::default() };
+        let r2 = resolve_slo(&fixed, &m);
+        assert_eq!((r2.ttft_p99_ms, r2.tpot_p99_ms), (7.0, 5.0));
+    }
+
+    #[test]
+    fn mean_iteration_us_uses_busy_time() {
+        let hw = presets::mcm_2x2();
+        let m = ServeMetrics { iterations: 4, busy_cycles: 3200, ..Default::default() };
+        assert!((mean_iteration_us(&m, &hw) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,37 @@
+//! L4 — the serving subsystem: requests arriving over time, not isolated
+//! iterations.
+//!
+//! Everything below this layer answers "how many cycles does one iteration
+//! take?"; this layer answers the questions production serving asks:
+//! *what TTFT/TPOT tails does a strategy deliver at a given offered load,
+//! and where does it saturate?*
+//!
+//! * [`request`] — request lifecycle (queued → prefill → decode → done)
+//!   with TTFT/TPOT/e2e accounting against the simulated clock.
+//! * [`arrival`] — seeded open-loop request generation: Poisson, Gamma,
+//!   and on-off bursty inter-arrivals plus lognormal prompt/output-length
+//!   distributions (`config::ServePreset` holds the knobs).
+//! * [`scheduler`] — admission queue + continuous-batching scheduler
+//!   forming each iteration's chunked-prefill batch under a token budget
+//!   and a low-batch concurrency cap.
+//! * [`metrics`] — TTFT/TPOT/e2e/queue-depth summaries (p50/p95/p99) and
+//!   the SLO predicate, with auto-calibration against unloaded baselines.
+//! * [`sim`] — the loop tying it together: batches are bridged into
+//!   `workload::IterationWorkload`s and costed with the same per-layer
+//!   arithmetic as `engine::timing`.
+//!
+//! The RPS sweep (`experiments::serve_sweep`, `repro serve-sweep`) ramps
+//! offered load until SLO violation and reports each strategy's maximum
+//! sustained RPS.
+
+pub mod arrival;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod sim;
+
+pub use arrival::RequestGenerator;
+pub use metrics::{mean_iteration_us, resolve_slo, ServeMetrics};
+pub use request::{Request, RequestState};
+pub use scheduler::ContinuousBatcher;
+pub use sim::{LoadMode, ServerConfig, ServerSim};

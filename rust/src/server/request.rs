@@ -1,0 +1,117 @@
+//! Request lifecycle for the serving layer.
+//!
+//! A request arrives with a prompt and a target output length, waits in
+//! the admission queue, is chunk-prefilled across one or more iterations,
+//! then decodes one token per iteration until done. The first output token
+//! is produced by the iteration that completes the prefill (so TTFT covers
+//! queueing + full prefill), and each decode step emits exactly one more.
+
+/// Where a request currently is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    /// Arrived, waiting in the admission queue.
+    Queued,
+    /// Admitted; prompt tokens are being chunk-prefilled.
+    Prefill,
+    /// Prefill complete; decoding one token per iteration.
+    Decode,
+    /// All output tokens produced.
+    Done,
+}
+
+/// One request flowing through the serving subsystem. All times are in
+/// simulated compute-die cycles (`config::HardwareConfig::freq_hz`).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u32,
+    /// Arrival time on the simulated clock.
+    pub arrival_cycles: u64,
+    /// Prompt length in tokens (>= 1).
+    pub prompt_len: usize,
+    /// Output length in tokens (>= 1), counting the prefill-produced one.
+    pub output_len: usize,
+    pub state: RequestState,
+    /// Prompt tokens already prefilled.
+    pub prefilled: usize,
+    /// Output tokens already produced.
+    pub decoded: usize,
+    /// Clock when the first output token completed (TTFT reference).
+    pub first_token_cycles: Option<u64>,
+    /// Clock when the last output token completed.
+    pub finish_cycles: Option<u64>,
+}
+
+impl Request {
+    pub fn new(id: u32, arrival_cycles: u64, prompt_len: usize, output_len: usize) -> Request {
+        assert!(prompt_len >= 1 && output_len >= 1);
+        Request {
+            id,
+            arrival_cycles,
+            prompt_len,
+            output_len,
+            state: RequestState::Queued,
+            prefilled: 0,
+            decoded: 0,
+            first_token_cycles: None,
+            finish_cycles: None,
+        }
+    }
+
+    pub fn remaining_prefill(&self) -> usize {
+        self.prompt_len - self.prefilled
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == RequestState::Done
+    }
+
+    /// Time to first token, if produced.
+    pub fn ttft_cycles(&self) -> Option<u64> {
+        self.first_token_cycles.map(|t| t - self.arrival_cycles)
+    }
+
+    /// Mean time per output token after the first, if finished and the
+    /// request decodes at least one token beyond the prefill.
+    pub fn tpot_cycles(&self) -> Option<f64> {
+        match (self.first_token_cycles, self.finish_cycles) {
+            (Some(first), Some(fin)) if self.output_len > 1 => {
+                Some((fin - first) as f64 / (self.output_len - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    /// End-to-end latency, if finished.
+    pub fn e2e_cycles(&self) -> Option<u64> {
+        self.finish_cycles.map(|t| t - self.arrival_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_latencies() {
+        let mut r = Request::new(1, 1000, 64, 5);
+        assert_eq!(r.state, RequestState::Queued);
+        assert_eq!(r.remaining_prefill(), 64);
+        r.prefilled = 64;
+        r.first_token_cycles = Some(5000);
+        r.finish_cycles = Some(13000);
+        r.state = RequestState::Done;
+        assert_eq!(r.ttft_cycles(), Some(4000));
+        assert_eq!(r.e2e_cycles(), Some(12000));
+        // 4 post-prefill tokens over 8000 cycles
+        assert_eq!(r.tpot_cycles(), Some(2000.0));
+    }
+
+    #[test]
+    fn single_token_request_has_no_tpot() {
+        let mut r = Request::new(2, 0, 8, 1);
+        r.first_token_cycles = Some(100);
+        r.finish_cycles = Some(100);
+        assert_eq!(r.tpot_cycles(), None);
+        assert_eq!(r.ttft_cycles(), Some(100));
+    }
+}

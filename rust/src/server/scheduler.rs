@@ -1,0 +1,232 @@
+//! Admission queue + continuous-batching scheduler.
+//!
+//! Every simulated iteration the batcher forms a chunked-prefill batch
+//! from in-flight work (vLLM-style continuous batching, scaled to the
+//! paper's low-batch regime): decode requests get one token each first —
+//! they hold KV state and determine TPOT — then the remaining token budget
+//! advances running prefills and admits queued requests FCFS, up to
+//! `max_batch` concurrent requests.
+
+use super::request::{Request, RequestState};
+use crate::config::ServePreset;
+use crate::workload::RequestChunk;
+use std::collections::VecDeque;
+
+/// Continuous batcher state: the admission queue plus in-flight requests.
+pub struct ContinuousBatcher {
+    token_budget: usize,
+    max_batch: usize,
+    prefill_chunk: usize,
+    queued: VecDeque<Request>,
+    /// Admitted requests in admission order (Prefill or Decode state).
+    running: Vec<Request>,
+}
+
+impl ContinuousBatcher {
+    pub fn new(preset: &ServePreset) -> ContinuousBatcher {
+        preset.validate();
+        ContinuousBatcher {
+            token_budget: preset.token_budget,
+            max_batch: preset.max_batch,
+            prefill_chunk: preset.prefill_chunk,
+            queued: VecDeque::new(),
+            running: Vec::new(),
+        }
+    }
+
+    /// Hand an arrived request to the admission queue.
+    pub fn enqueue(&mut self, r: Request) {
+        debug_assert_eq!(r.state, RequestState::Queued);
+        self.queued.push_back(r);
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queued.is_empty() || !self.running.is_empty()
+    }
+
+    /// Requests still incomplete (queued + running) when a run is cut off.
+    pub fn unfinished(&self) -> usize {
+        self.queued.len() + self.running.len()
+    }
+
+    /// Form the next iteration's batch. Returns the per-request chunks in
+    /// scheduling order; empty only when there is no work at all.
+    pub fn next_batch(&mut self) -> Vec<RequestChunk> {
+        let mut plan = Vec::new();
+        let mut budget = self.token_budget;
+
+        // 1. Decode steps: one token per decoding request, oldest first.
+        for r in self.running.iter() {
+            if budget == 0 {
+                break;
+            }
+            if r.state == RequestState::Decode {
+                plan.push(RequestChunk { request_id: r.id, tokens: 1, is_prefill: false });
+                budget -= 1;
+            }
+        }
+
+        // 2. Continue running prefills.
+        for r in self.running.iter() {
+            if budget == 0 {
+                break;
+            }
+            if r.state == RequestState::Prefill {
+                let chunk = r.remaining_prefill().min(self.prefill_chunk).min(budget);
+                if chunk > 0 {
+                    plan.push(RequestChunk { request_id: r.id, tokens: chunk, is_prefill: true });
+                    budget -= chunk;
+                }
+            }
+        }
+
+        // 3. Admit queued requests FCFS while budget and batch slots last.
+        while budget > 0
+            && self.running.len() < self.max_batch
+            && !self.queued.is_empty()
+        {
+            let mut r = self.queued.pop_front().unwrap();
+            r.state = RequestState::Prefill;
+            let chunk = r.remaining_prefill().min(self.prefill_chunk).min(budget);
+            plan.push(RequestChunk { request_id: r.id, tokens: chunk, is_prefill: true });
+            budget -= chunk;
+            self.running.push(r);
+        }
+
+        debug_assert!(plan.iter().map(|c| c.tokens).sum::<usize>() <= self.token_budget);
+        plan
+    }
+
+    /// Advance request state after the iteration carrying `plan` finished
+    /// at `now` (cycles). Returns the requests completed this iteration.
+    pub fn complete_iteration(&mut self, plan: &[RequestChunk], now: u64) -> Vec<Request> {
+        for c in plan {
+            let r = self
+                .running
+                .iter_mut()
+                .find(|r| r.id == c.request_id)
+                .expect("planned chunk for unknown request");
+            if c.is_prefill {
+                debug_assert_eq!(r.state, RequestState::Prefill);
+                r.prefilled += c.tokens;
+                debug_assert!(r.prefilled <= r.prompt_len);
+                if r.prefilled == r.prompt_len {
+                    // The prefill-completing iteration emits the first
+                    // output token.
+                    r.first_token_cycles = Some(now);
+                    r.decoded = 1;
+                    r.state = RequestState::Decode;
+                }
+            } else {
+                debug_assert_eq!(r.state, RequestState::Decode);
+                r.decoded += 1;
+            }
+            if r.decoded >= r.output_len {
+                r.finish_cycles = Some(now);
+                r.state = RequestState::Done;
+            }
+        }
+        let mut done = Vec::new();
+        self.running.retain_mut(|r| {
+            if r.is_done() {
+                done.push(r.clone());
+                false
+            } else {
+                true
+            }
+        });
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn batcher() -> ContinuousBatcher {
+        ContinuousBatcher::new(&presets::serve_chat()) // budget 64, batch 8, chunk 32
+    }
+
+    #[test]
+    fn chunked_prefill_respects_budget_and_chunk() {
+        let mut b = batcher();
+        b.enqueue(Request::new(1, 0, 100, 4));
+        let p1 = b.next_batch();
+        assert_eq!(p1.len(), 1);
+        assert_eq!((p1[0].tokens, p1[0].is_prefill), (32, true));
+        b.complete_iteration(&p1, 1000);
+        // 100-token prompt: chunks 32/32/32/4, then decode begins.
+        for _ in 0..2 {
+            let p = b.next_batch();
+            b.complete_iteration(&p, 2000);
+        }
+        let p4 = b.next_batch();
+        assert_eq!((p4[0].tokens, p4[0].is_prefill), (4, true));
+        let done = b.complete_iteration(&p4, 3000);
+        assert!(done.is_empty());
+        // First token produced at prefill completion.
+        let p5 = b.next_batch();
+        assert_eq!((p5[0].tokens, p5[0].is_prefill), (1, false));
+    }
+
+    #[test]
+    fn decode_has_priority_and_admission_fills_rest() {
+        let mut b = batcher();
+        // One decoding request in flight...
+        b.enqueue(Request::new(1, 0, 1, 10));
+        let p = b.next_batch();
+        b.complete_iteration(&p, 10); // prefill of 1 done -> Decode
+        // ...and a large queued prompt.
+        b.enqueue(Request::new(2, 0, 500, 2));
+        let p = b.next_batch();
+        assert_eq!(p[0].request_id, 1);
+        assert!(!p[0].is_prefill);
+        assert_eq!(p[1].request_id, 2);
+        assert!(p[1].is_prefill);
+        // Budget 64: 1 decode + min(chunk 32, 63) prefill.
+        assert_eq!(p[1].tokens, 32);
+    }
+
+    #[test]
+    fn max_batch_bounds_admissions() {
+        let mut b = batcher();
+        for id in 0..20 {
+            b.enqueue(Request::new(id, 0, 2, 2));
+        }
+        let p = b.next_batch();
+        // 8 slots, each prompt fits in one 2-token chunk.
+        assert_eq!(p.len(), 8);
+        assert_eq!(b.in_flight(), 8);
+        assert_eq!(b.queue_depth(), 12);
+    }
+
+    #[test]
+    fn requests_complete_and_leave() {
+        let mut b = batcher();
+        b.enqueue(Request::new(7, 0, 3, 2));
+        let mut clock = 0;
+        let mut finished = Vec::new();
+        while b.has_work() {
+            let p = b.next_batch();
+            assert!(!p.is_empty());
+            clock += 100;
+            finished.extend(b.complete_iteration(&p, clock));
+        }
+        assert_eq!(finished.len(), 1);
+        let r = &finished[0];
+        assert_eq!(r.decoded, 2);
+        // prefill (iter 1) emits token 1; decode (iter 2) emits token 2
+        assert_eq!(r.first_token_cycles, Some(100));
+        assert_eq!(r.finish_cycles, Some(200));
+        assert_eq!(b.unfinished(), 0);
+    }
+}

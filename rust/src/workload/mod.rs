@@ -249,10 +249,22 @@ impl TraceGenerator {
             .collect()
     }
 
-    /// Generate one iteration with `tokens` input tokens.
+    /// Generate one iteration with `tokens` input tokens, composing the
+    /// request mix internally (offline evaluation path).
     pub fn iteration(&mut self, iter_idx: usize, tokens: usize) -> IterationWorkload {
         assert!(tokens > 0);
         let chunks = self.request_mix(tokens);
+        self.iteration_for_chunks(iter_idx, chunks)
+    }
+
+    /// Generate one iteration's per-layer gating for an externally supplied
+    /// request mix — the serving layer's continuous batcher decides *which*
+    /// requests contribute tokens; this samples *where* those tokens route.
+    pub fn iteration_for_chunks(
+        &mut self,
+        iter_idx: usize,
+        chunks: Vec<RequestChunk>,
+    ) -> IterationWorkload {
         let k = self.model.top_k;
         let e = self.model.n_experts;
         let shared: Vec<ExpertId> =
@@ -268,7 +280,7 @@ impl TraceGenerator {
                 .map(|w| w * (0.35 * jitter_rng.normal()).exp())
                 .collect();
 
-            let mut gates = Vec::with_capacity(tokens);
+            let mut gates = Vec::with_capacity(chunks.iter().map(|c| c.tokens).sum());
             for chunk in &chunks {
                 for _ in 0..chunk.tokens {
                     let experts = sample_topk(&mut jitter_rng, &weights, k);

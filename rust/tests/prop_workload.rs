@@ -1,0 +1,164 @@
+//! Property-based invariants of the workload substrate (hand-rolled: the
+//! offline crate set has no proptest). Many seeded random cases across all
+//! Table-I models check:
+//!
+//! * gating shape — routed top-k experts are distinct and in range, shared
+//!   experts are always appended as the fixed trailing ids;
+//! * conservation — per-layer token counts are conserved across
+//!   `shard_layer` for any chiplet count and any deferral set;
+//! * chunk bridging — `iteration_for_chunks` honors the supplied request
+//!   mix exactly (ids, counts, per-layer totals).
+
+use expert_streaming::config::{presets, Dataset, MoeModelConfig};
+use expert_streaming::util::Rng;
+use expert_streaming::workload::{shard_layer, RequestChunk, TraceGenerator};
+use std::collections::HashSet;
+
+const DATASETS: [Dataset; 3] = [Dataset::Wikitext2, Dataset::C4, Dataset::WinoGrande];
+
+fn models() -> Vec<MoeModelConfig> {
+    let mut m = presets::all_models();
+    m.push(presets::tiny_moe());
+    m
+}
+
+#[test]
+fn prop_routed_topk_distinct_and_shared_appended() {
+    let mut rng = Rng::new(0x90B5_11E5);
+    for model in models() {
+        for case in 0..8 {
+            let dataset = DATASETS[rng.range(0, DATASETS.len())];
+            let seed = rng.next_u64();
+            let tokens = rng.range(1, 96);
+            let mut g = TraceGenerator::new(&model, dataset, seed);
+            let it = g.iteration(case, tokens);
+            assert_eq!(it.layers.len(), model.n_layers);
+            for layer in &it.layers {
+                assert_eq!(layer.tokens.len(), tokens, "{}: token count", model.name);
+                for tg in &layer.tokens {
+                    assert_eq!(tg.experts.len(), model.top_k + model.n_shared);
+                    let routed = &tg.experts[..model.top_k];
+                    let distinct: HashSet<_> = routed.iter().collect();
+                    assert_eq!(
+                        distinct.len(),
+                        model.top_k,
+                        "{}: routed experts must be distinct",
+                        model.name
+                    );
+                    assert!(routed.iter().all(|&e| (e as usize) < model.n_experts));
+                    // Shared experts: always appended, always the same
+                    // fixed trailing ids, in order.
+                    for (i, &e) in tg.experts[model.top_k..].iter().enumerate() {
+                        assert_eq!(e as usize, model.n_experts + i, "{}: shared id", model.name);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shard_layer_conserves_tokens() {
+    let mut rng = Rng::new(0x5A4D_C0DE);
+    for model in models() {
+        for case in 0..6 {
+            let dataset = DATASETS[rng.range(0, DATASETS.len())];
+            let mut g = TraceGenerator::new(&model, dataset, rng.next_u64());
+            let tokens = rng.range(1, 128);
+            let it = g.iteration(case, tokens);
+            let n_total = model.n_experts + model.n_shared;
+            let n_chiplets = [1, 2, 4, 9, 16][rng.range(0, 5)];
+
+            // Random deferral set drawn from the iteration's request ids.
+            let ids: Vec<u32> = it.chunks.iter().map(|c| c.request_id).collect();
+            let mut deferred = HashSet::new();
+            for &id in &ids {
+                if rng.bool(0.3) {
+                    deferred.insert(id);
+                }
+            }
+            let deferred_tokens: usize = it
+                .chunks
+                .iter()
+                .filter(|c| deferred.contains(&c.request_id))
+                .map(|c| c.tokens)
+                .sum();
+
+            for layer in &it.layers {
+                let lw = shard_layer(layer, n_total, n_chiplets, &deferred);
+                // Total tokens conserved modulo the deferred ones.
+                assert_eq!(lw.total_tokens as usize, tokens - deferred_tokens);
+                // Activation counts: every surviving token contributes
+                // exactly top_k + n_shared expert activations.
+                let acts: u64 = lw.experts.iter().map(|e| e.total as u64).sum();
+                assert_eq!(
+                    acts,
+                    (tokens - deferred_tokens) as u64 * (model.top_k + model.n_shared) as u64
+                );
+                for e in &lw.experts {
+                    assert_eq!(e.tokens_per_chiplet.len(), n_chiplets);
+                    assert_eq!(e.tokens_per_chiplet.iter().sum::<u32>(), e.total);
+                    assert!(e.total > 0, "shard_layer must drop empty experts");
+                    assert!((e.expert as usize) < n_total);
+                }
+                // Ascending expert ids (the contract strategies rely on).
+                for w in lw.experts.windows(2) {
+                    assert!(w[0].expert < w[1].expert);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_iteration_for_chunks_honors_request_mix() {
+    let mut rng = Rng::new(0xC4C4_57A8);
+    let model = presets::deepseek_moe(); // has shared experts
+    for case in 0..12 {
+        let mut g = TraceGenerator::new(&model, Dataset::C4, rng.next_u64());
+        let n_chunks = rng.range(1, 7);
+        let chunks: Vec<RequestChunk> = (0..n_chunks)
+            .map(|i| RequestChunk {
+                request_id: 1000 + i as u32,
+                tokens: if rng.bool(0.5) { 1 } else { rng.range(1, 40) },
+                is_prefill: rng.bool(0.4),
+            })
+            .collect();
+        let total: usize = chunks.iter().map(|c| c.tokens).sum();
+        let it = g.iteration_for_chunks(case, chunks.clone());
+
+        assert_eq!(it.chunks.len(), chunks.len());
+        assert_eq!(it.total_tokens(), total);
+        for layer in &it.layers {
+            assert_eq!(layer.tokens.len(), total);
+            // Per-request token counts match the supplied mix, and gating
+            // preserves chunk order.
+            let mut idx = 0;
+            for c in &chunks {
+                for _ in 0..c.tokens {
+                    assert_eq!(layer.tokens[idx].request_id, c.request_id);
+                    idx += 1;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_iteration_for_chunks_deterministic() {
+    let model = presets::qwen3_a3b();
+    let chunks = vec![
+        RequestChunk { request_id: 1, tokens: 17, is_prefill: true },
+        RequestChunk { request_id: 2, tokens: 1, is_prefill: false },
+        RequestChunk { request_id: 3, tokens: 1, is_prefill: false },
+    ];
+    let mut a = TraceGenerator::new(&model, Dataset::Wikitext2, 99);
+    let mut b = TraceGenerator::new(&model, Dataset::Wikitext2, 99);
+    let ia = a.iteration_for_chunks(0, chunks.clone());
+    let ib = b.iteration_for_chunks(0, chunks);
+    for (la, lb) in ia.layers.iter().zip(&ib.layers) {
+        for (x, y) in la.tokens.iter().zip(&lb.tokens) {
+            assert_eq!(x.experts, y.experts);
+        }
+    }
+}

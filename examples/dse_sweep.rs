@@ -24,7 +24,8 @@ fn main() {
     }
     println!();
 
-    let points = dse::sweep_buffer_vs_ddr(&model, &base, &buffers, &ddrs, 64, 2);
+    // threads = 0: fan grid points across all cores (identical results).
+    let points = dse::sweep_buffer_vs_ddr(&model, &base, &buffers, &ddrs, 64, 2, 0);
     for &buf in &buffers {
         print!("{buf:>10.0}MB");
         for &d in &ddrs {

@@ -1,18 +1,25 @@
-//! Hot-path micro/mesobenchmarks for the §Perf pass (EXPERIMENTS.md):
+//! Hot-path micro/mesobenchmarks for the §Perf pass:
 //!
 //!  1. flow-engine layer simulation throughput (layer-sims/s and
-//!     simulated-cycles/wall-µs) on the Qwen3 64-token workload;
+//!     simulated-cycles/wall-µs) on the Qwen3 64-token workload — the
+//!     scratch-arena fast path;
 //!  2. scheduler decision + trace-generation cost;
 //!  3. serving-iteration throughput of the L4 `server` subsystem (closed
-//!     burst on the smoke model);
-//!  4. numeric serving latency through PJRT (when artifacts exist).
+//!     burst on the smoke model), with the layer memo on and off, and
+//!     per-iteration latencies timed *individually* (the p99 really is a
+//!     tail, not the run tail divided by the mean iteration count);
+//!  4. the parallel sweep executor: independent seeded burst serves fanned
+//!     across the worker pool vs. the serial loop;
+//!  5. numeric serving latency through PJRT (when artifacts exist).
 //!
 //! Besides the human-readable output, results are written to
 //! `BENCH_serve.json` (in the cargo working directory) as
-//! `{name, ops_per_s, p99_us}` records so future PRs can track the perf
-//! trajectory mechanically.
+//! `{name, ops_per_s, p99_us}` records plus top-level `pool_size` and
+//! `memo_hit_rate` fields, so future PRs can track the perf trajectory
+//! mechanically (see ROADMAP "Perf trajectory" for how to read it).
 //!
-//! `cargo bench --bench perf_hotpath`
+//! `cargo bench --bench perf_hotpath`; set `REPRO_QUICK=1` (CI) for
+//! reduced reps.
 
 use expert_streaming::config::{presets, Dataset, StrategyKind};
 use expert_streaming::coordinator::{make_strategy, LayerCtx};
@@ -20,7 +27,7 @@ use expert_streaming::engine::serve::NumericEngine;
 use expert_streaming::moe::{default_num_slices, ExpertGeometry};
 use expert_streaming::runtime::artifacts::Manifest;
 use expert_streaming::server::{LoadMode, ServerConfig, ServerSim};
-use expert_streaming::util::Summary;
+use expert_streaming::util::{parallel_map, pool_size, Summary};
 use expert_streaming::workload::{shard_layer, TraceGenerator};
 use std::collections::HashSet;
 use std::time::Instant;
@@ -32,17 +39,31 @@ struct BenchRecord {
     p99_us: f64,
 }
 
-/// Time `reps` calls of `op`, returning (ops/s, p99 wall µs per op).
-fn measure<F: FnMut()>(reps: usize, mut op: F) -> (f64, f64) {
+fn quick() -> bool {
+    std::env::var("REPRO_QUICK").is_ok()
+}
+
+/// Rep count: full locally, reduced under `REPRO_QUICK=1` (CI keeps the
+/// bench exercising every path without burning minutes).
+fn reps(full: usize) -> usize {
+    if quick() {
+        (full / 5).max(3)
+    } else {
+        full
+    }
+}
+
+/// Time `n` calls of `op`, returning (ops/s, p99 wall µs per op).
+fn measure<F: FnMut()>(n: usize, mut op: F) -> (f64, f64) {
     let mut per_op = Summary::new();
     let t_all = Instant::now();
-    for _ in 0..reps {
+    for _ in 0..n {
         let t = Instant::now();
         op();
         per_op.push(t.elapsed().as_secs_f64() * 1e6);
     }
     let dt = t_all.elapsed().as_secs_f64();
-    (reps as f64 / dt, per_op.p99())
+    (n as f64 / dt, per_op.p99())
 }
 
 fn bench_flow_engine(records: &mut Vec<BenchRecord>) {
@@ -62,18 +83,18 @@ fn bench_flow_engine(records: &mut Vec<BenchRecord>) {
 
     for kind in [StrategyKind::FseDpPaired, StrategyKind::Ep] {
         let mut strategy = make_strategy(kind, slices);
-        // warm up
+        // Warm up (also charges the strategy's arena to steady state).
         strategy.run_layer(&ctx);
-        let reps = 200;
+        let n = reps(200);
         let mut sim_cycles = 0u64;
-        let (ops, p99) = measure(reps, || {
+        let (ops, p99) = measure(n, || {
             sim_cycles += strategy.run_layer(&ctx).makespan;
         });
         println!(
             "[perf] {:<16} {:>7.0} layer-sims/s   {:>8.1} sim-Mcycles/wall-s   p99 {:>7.1} us/layer",
             kind.name(),
             ops,
-            sim_cycles as f64 * ops / reps as f64 / 1e6,
+            sim_cycles as f64 * ops / n as f64 / 1e6,
             p99
         );
         records.push(BenchRecord {
@@ -88,7 +109,7 @@ fn bench_trace_generation(records: &mut Vec<BenchRecord>) {
     let model = presets::qwen3_a3b();
     let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
     let mut i = 0;
-    let (ops, p99) = measure(50, || {
+    let (ops, p99) = measure(reps(50), || {
         let it = gen.iteration(i, 256);
         std::hint::black_box(&it);
         i += 1;
@@ -99,17 +120,84 @@ fn bench_trace_generation(records: &mut Vec<BenchRecord>) {
     records.push(BenchRecord { name: "trace_generation".into(), ops_per_s: ops, p99_us: p99 });
 }
 
-fn bench_serve_iteration(records: &mut Vec<BenchRecord>) {
-    // One op = a full closed-burst serve (arrival -> batch -> per-layer
-    // costing -> completion) on the smoke model; the iteration rate is
-    // derived from the iterations each run executes.
+/// Closed-burst serve benches: memo on (the default fast path) and memo
+/// off (pure flow-engine cost). Returns the memo hit rate of the cached
+/// runs for the JSON header.
+fn bench_serve_iteration(records: &mut Vec<BenchRecord>) -> f64 {
     let hw = presets::mcm_2x2();
     let model = presets::tiny_moe();
     let preset = presets::serve_chat();
-    let reps = 15;
-    let mut iterations = 0usize;
-    let mut seed = 0u64;
-    let (runs_per_s, p99_run_us) = measure(reps, || {
+    let n = reps(15);
+    let mut hit_rate = 0.0;
+    for memo in [true, false] {
+        let mut iterations = 0usize;
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut seed = 0u64;
+        // Per-iteration wall latencies, timed individually inside the run:
+        // `p99_us` of the iteration record is a real tail.
+        let mut iter_wall = Summary::new();
+        let (runs_per_s, p99_run_us) = measure(n, || {
+            let cfg = ServerConfig {
+                strategy: StrategyKind::FseDpPaired,
+                mode: LoadMode::Burst { n_requests: 8 },
+                seed,
+                memo,
+                ..Default::default()
+            };
+            let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+            let m = sim.run_with_timer(&mut |d| iter_wall.push(d.as_secs_f64() * 1e6));
+            iterations += m.iterations;
+            hits += m.memo_hits;
+            misses += m.memo_misses;
+            seed += 1;
+        });
+        let iters_per_s = runs_per_s * iterations as f64 / n as f64;
+        let tag = if memo { "" } else { "/nomemo" };
+        if memo {
+            hit_rate = if hits + misses > 0 {
+                hits as f64 / (hits + misses) as f64
+            } else {
+                0.0
+            };
+            println!(
+                "[perf] serve iteration: {iters_per_s:.0} sched-iters/s ({runs_per_s:.1} burst-serves/s, p99 {:.1} us/iter, memo hit rate {:.1}%)",
+                iter_wall.p99(),
+                hit_rate * 100.0
+            );
+        } else {
+            println!(
+                "[perf] serve iteration (memo off): {iters_per_s:.0} sched-iters/s (p99 {:.1} us/iter)",
+                iter_wall.p99()
+            );
+        }
+        records.push(BenchRecord {
+            name: format!("serve_burst/FSE-DP+paired{tag}"),
+            ops_per_s: runs_per_s,
+            p99_us: p99_run_us,
+        });
+        records.push(BenchRecord {
+            name: format!("serve_iteration/FSE-DP+paired{tag}"),
+            ops_per_s: iters_per_s,
+            p99_us: iter_wall.p99(),
+        });
+    }
+    hit_rate
+}
+
+/// The sweep executor: N independent seeded burst serves, serial vs.
+/// fanned across the pool. Same work, same results — the ratio is the
+/// wall-clock speedup `repro serve-sweep` inherits.
+fn bench_parallel_sweep(records: &mut Vec<BenchRecord>) {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let jobs: usize = if quick() { 8 } else { 16 };
+    // Each job times itself, so `p99_us` is a genuine per-serve tail —
+    // including pool contention effects — while `ops_per_s` comes from the
+    // batch wall-clock.
+    let serve = |seed: u64| -> f64 {
+        let t = Instant::now();
         let cfg = ServerConfig {
             strategy: StrategyKind::FseDpPaired,
             mode: LoadMode::Burst { n_requests: 8 },
@@ -117,25 +205,32 @@ fn bench_serve_iteration(records: &mut Vec<BenchRecord>) {
             ..Default::default()
         };
         let m = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run();
-        iterations += m.iterations;
-        seed += 1;
-    });
-    let iters_per_s = runs_per_s * iterations as f64 / reps as f64;
-    println!(
-        "[perf] serve iteration: {iters_per_s:.0} sched-iters/s ({runs_per_s:.1} burst-serves/s, p99 {p99_run_us:.0} us/serve)"
-    );
-    records.push(BenchRecord {
-        name: "serve_burst/FSE-DP+paired".into(),
-        ops_per_s: runs_per_s,
-        p99_us: p99_run_us,
-    });
-    records.push(BenchRecord {
-        name: "serve_iteration/FSE-DP+paired".into(),
-        ops_per_s: iters_per_s,
-        // Per-iteration tail approximated from the run tail and the mean
-        // iteration count (iterations inside one run are not timed solo).
-        p99_us: p99_run_us / (iterations as f64 / reps as f64).max(1.0),
-    });
+        std::hint::black_box(m.end_cycles);
+        t.elapsed().as_secs_f64() * 1e6
+    };
+    for (threads, tag) in [(1usize, "serial"), (0usize, "pool")] {
+        let t = Instant::now();
+        let per_job_us = parallel_map((0..jobs as u64).collect(), threads, serve);
+        let dt = t.elapsed().as_secs_f64();
+        let mut tail = Summary::new();
+        tail.extend(&per_job_us);
+        let name = if threads == 0 {
+            format!("parallel_sweep/pool{}", pool_size())
+        } else {
+            "parallel_sweep/serial".into()
+        };
+        println!(
+            "[perf] sweep executor ({tag}): {jobs} burst-serves in {:.1} ms ({:.1} serves/s, p99 {:.0} us/serve)",
+            dt * 1e3,
+            jobs as f64 / dt,
+            tail.p99()
+        );
+        records.push(BenchRecord {
+            name,
+            ops_per_s: jobs as f64 / dt,
+            p99_us: tail.p99(),
+        });
+    }
 }
 
 fn bench_numeric_serving(records: &mut Vec<BenchRecord>) {
@@ -167,8 +262,11 @@ fn bench_numeric_serving(records: &mut Vec<BenchRecord>) {
 }
 
 /// Hand-rolled JSON emitter (the offline crate set has no serde).
-fn write_json(records: &[BenchRecord]) {
-    let mut out = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"results\": [\n");
+fn write_json(records: &[BenchRecord], memo_hit_rate: f64) {
+    let mut out = String::from("{\n  \"bench\": \"perf_hotpath\",\n");
+    out.push_str(&format!("  \"pool_size\": {},\n", pool_size()));
+    out.push_str(&format!("  \"memo_hit_rate\": {memo_hit_rate:.4},\n"));
+    out.push_str("  \"results\": [\n");
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
             "    {{\"name\": \"{}\", \"ops_per_s\": {:.3}, \"p99_us\": {:.3}}}{}\n",
@@ -191,7 +289,8 @@ fn main() {
     let mut records = Vec::new();
     bench_flow_engine(&mut records);
     bench_trace_generation(&mut records);
-    bench_serve_iteration(&mut records);
+    let memo_hit_rate = bench_serve_iteration(&mut records);
+    bench_parallel_sweep(&mut records);
     bench_numeric_serving(&mut records);
-    write_json(&records);
+    write_json(&records, memo_hit_rate);
 }

@@ -4,15 +4,19 @@
 //! `REPRO_QUICK=1 cargo bench --bench serve_sweep` for a smoke run.
 
 use expert_streaming::experiments::{run_by_id, ExpOpts};
+use expert_streaming::util::pool_size;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::var("REPRO_QUICK").is_ok();
+    // threads = 0: grid points and per-scheme bisections fan across the
+    // worker pool (REPRO_THREADS=1 forces the serial path for A/B runs).
     let opts = ExpOpts { quick, ..Default::default() };
     let t = Instant::now();
     run_by_id("serve_sweep", &opts).expect("experiment failed");
     println!(
-        "[bench serve_sweep] open-loop RPS sweep in {:.2}s (quick={quick})",
-        t.elapsed().as_secs_f64()
+        "[bench serve_sweep] open-loop RPS sweep in {:.2}s (quick={quick}, pool={})",
+        t.elapsed().as_secs_f64(),
+        pool_size()
     );
 }

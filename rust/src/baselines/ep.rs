@@ -99,6 +99,12 @@ impl Strategy for EpStrategy {
         self.popularity.clear();
     }
 
+    fn is_stateless(&self) -> bool {
+        // Hydra's placement depends on the cross-layer popularity EMA, so
+        // its layer results must never be memoized.
+        !self.hydra
+    }
+
     fn run_layer(&mut self, ctx: &LayerCtx) -> LayerResult {
         let owner = self.placement(ctx);
         let result = simulate_ep_layer(ctx.hw, ctx, &owner);

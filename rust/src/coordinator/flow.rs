@@ -23,6 +23,21 @@
 //! until the transfer completes — the elastic-reservoir behaviour of
 //! Fig 13. A single emergency overcommit per reservation is permitted to
 //! keep rings free of buffer deadlock (counted; see `BufferTracker`).
+//!
+//! ## Performance: the scratch arena (§Perf iteration 4)
+//!
+//! Serving simulates tens of thousands of layers per second, so per-layer
+//! heap churn dominated the hot path. All growable engine state — flows,
+//! per-chiplet queues, the event heap and its payload, the forwards table,
+//! the EIT, mesh/DDR/buffer trackers, and trajectory vectors — now lives
+//! in a [`FlowArena`] owned by the strategy and reused across `run_layer`
+//! calls. A layer run only allocates while warming the arena up to the
+//! episode's high-water marks. The in-flight-forward map is a flat table
+//! indexed by `(flow, slice, chiplet)` instead of a `HashMap`, and the
+//! per-event `traj.chiplets.clone()` calls were removed via split borrows.
+//! Results are bit-identical to the pre-arena engine: event order is
+//! governed solely by the `(time, seq)` heap key, and nothing about seq
+//! assignment changed.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -101,6 +116,27 @@ enum FwdState {
 }
 
 impl Flow {
+    fn empty() -> Flow {
+        Flow {
+            expert: 0,
+            traj: Trajectory { expert: 0, chiplets: Vec::new(), tokens: Vec::new() },
+            state: FlowState::Pending,
+            visits: Vec::new(),
+            starts: Vec::new(),
+            slices_done: 0,
+            group: 0,
+        }
+    }
+
+    /// Clear per-layer contents while keeping every allocation.
+    fn recycled(mut self) -> Flow {
+        self.traj.chiplets.clear();
+        self.traj.tokens.clear();
+        self.visits.clear();
+        self.starts.clear();
+        self
+    }
+
     fn n_slices(&self) -> usize {
         self.visits.len()
     }
@@ -145,22 +181,169 @@ struct Chip {
     engaged: u32,
 }
 
+impl Chip {
+    fn reset(&mut self) {
+        self.compute_busy = false;
+        self.pending.clear();
+        self.ddr_q_active.clear();
+        self.ddr_q_pre.clear();
+        self.loading = false;
+        self.waiting_in.clear();
+        self.engaged = 0;
+    }
+}
+
+/// Flat-indexed in-flight-forward table replacing the per-layer
+/// `HashMap<(flow, slice, chiplet), FwdState>`: one slot per
+/// `(flow, slice, chiplet)` triple. The engine removes every entry it
+/// inserts before the layer drains, so `reset` is O(1) in the steady
+/// state (tracked by the `live` counter).
+#[derive(Default)]
+struct FwdTable {
+    slots: Vec<Option<FwdState>>,
+    stride_flow: usize,
+    n_chips: usize,
+    live: usize,
+}
+
+impl FwdTable {
+    fn reset(&mut self, n_flows: usize, n_slices: usize, n_chips: usize) {
+        if self.live > 0 {
+            self.slots.iter_mut().for_each(|s| *s = None);
+            self.live = 0;
+        }
+        let need = n_flows * n_slices * n_chips;
+        if self.slots.len() < need {
+            self.slots.resize(need, None);
+        }
+        self.stride_flow = n_slices * n_chips;
+        self.n_chips = n_chips;
+    }
+
+    #[inline]
+    fn idx(&self, flow: usize, slice: usize, chip: ChipletId) -> usize {
+        flow * self.stride_flow + slice * self.n_chips + chip
+    }
+
+    fn insert(&mut self, flow: usize, slice: usize, chip: ChipletId, st: FwdState) {
+        let i = self.idx(flow, slice, chip);
+        if self.slots[i].is_none() {
+            self.live += 1;
+        }
+        self.slots[i] = Some(st);
+    }
+
+    fn remove(&mut self, flow: usize, slice: usize, chip: ChipletId) -> Option<FwdState> {
+        let i = self.idx(flow, slice, chip);
+        let r = self.slots[i].take();
+        if r.is_some() {
+            self.live -= 1;
+        }
+        r
+    }
+}
+
+/// Reusable engine state, owned by the strategy and shared across
+/// `run_layer` calls. Everything here is semantically per-layer — `prepare`
+/// wipes it — so reuse cannot leak state between layers; only allocations
+/// survive. A fresh arena and a warm arena produce bit-identical results.
+pub struct FlowArena {
+    flows: Vec<Flow>,
+    flow_pool: Vec<Flow>,
+    chips: Vec<Chip>,
+    groups: VecDeque<(usize, Vec<usize>)>, // (group idx, flow indices)
+    group_pool: Vec<Vec<usize>>,
+    forwards: FwdTable,
+    queue: BinaryHeap<Reverse<(SimTime, u64)>>,
+    payload: Vec<Ev>,
+    eit: Eit,
+    mesh: Mesh,
+    /// (rows, cols) the cached snake rank was computed for.
+    shape: (usize, usize),
+    snake_rank: Vec<usize>,
+    ddr: Vec<SerialResource>,
+    buffers: BufferTracker,
+    /// Sort scratch for in-place trajectory builds.
+    traj_scratch: Vec<(usize, ChipletId, u32)>,
+    /// Rule 5 virtual-occupancy scratch.
+    scratch_u64: Vec<u64>,
+    /// Preload-candidate scratch for `decide`.
+    scratch_flows: Vec<usize>,
+}
+
+impl Default for FlowArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FlowArena {
+    pub fn new() -> Self {
+        FlowArena {
+            flows: Vec::new(),
+            flow_pool: Vec::new(),
+            chips: Vec::new(),
+            groups: VecDeque::new(),
+            group_pool: Vec::new(),
+            forwards: FwdTable::default(),
+            queue: BinaryHeap::new(),
+            payload: Vec::new(),
+            eit: Eit::default(),
+            mesh: Mesh::default(),
+            shape: (0, 0),
+            snake_rank: Vec::new(),
+            ddr: Vec::new(),
+            buffers: BufferTracker::new(0, 0),
+            traj_scratch: Vec::new(),
+            scratch_u64: Vec::new(),
+            scratch_flows: Vec::new(),
+        }
+    }
+
+    /// Reset all per-layer state for the given hardware, reusing every
+    /// allocation whose shape still fits.
+    fn prepare(&mut self, hw: &HardwareConfig) {
+        let n = hw.n_chiplets();
+        self.mesh.reinit(hw);
+        if self.shape != (hw.mesh_rows, hw.mesh_cols) {
+            self.shape = (hw.mesh_rows, hw.mesh_cols);
+            self.snake_rank = self.mesh.snake_rank();
+        }
+        if self.ddr.len() != hw.ddr.channels {
+            self.ddr = vec![SerialResource::new(); hw.ddr.channels];
+        } else {
+            for d in &mut self.ddr {
+                d.reset();
+            }
+        }
+        self.buffers.reset(n, hw.weight_buffer_bytes);
+        if self.chips.len() != n {
+            self.chips.clear();
+            self.chips.resize_with(n, Chip::default);
+        } else {
+            for c in &mut self.chips {
+                c.reset();
+            }
+        }
+        while let Some(f) = self.flows.pop() {
+            self.flow_pool.push(f.recycled());
+        }
+        while let Some((_, mut v)) = self.groups.pop_front() {
+            v.clear();
+            self.group_pool.push(v);
+        }
+        self.queue.clear();
+        self.payload.clear();
+    }
+}
+
 pub struct FlowEngine<'a> {
     hw: &'a HardwareConfig,
     geom: &'a ExpertGeometry,
     cfg: FlowConfig,
-    mesh: Mesh,
-    ddr: Vec<SerialResource>,
-    buffers: BufferTracker,
-    chips: Vec<Chip>,
-    flows: Vec<Flow>,
-    groups: VecDeque<(usize, Vec<usize>)>, // (group idx, flow indices)
-    forwards: std::collections::HashMap<(usize, usize, ChipletId), FwdState>,
+    a: &'a mut FlowArena,
     icv: Icv,
-    eit: Eit,
     meter: SchedulerMeter,
-    queue: BinaryHeap<Reverse<(SimTime, u64)>>,
-    payload: Vec<Ev>,
     seq: u64,
     timeline: Timeline,
     makespan: SimTime,
@@ -175,12 +358,11 @@ impl<'a> FlowEngine<'a> {
         workload: &LayerWorkload,
         groups: &[ExpertGroup],
         cfg: FlowConfig,
+        arena: &'a mut FlowArena,
     ) -> Self {
         let n = hw.n_chiplets();
-        let mesh = Mesh::new(hw);
-        let mut flows = Vec::new();
-        let mut group_queue = VecDeque::new();
-        let mut eit = Eit::new(
+        arena.prepare(hw);
+        arena.eit.reset(
             workload
                 .experts
                 .iter()
@@ -189,45 +371,39 @@ impl<'a> FlowEngine<'a> {
                 .unwrap_or(1),
         );
         for (gi, g) in groups.iter().enumerate() {
-            let mut flow_ids = Vec::new();
+            let mut flow_ids = arena.group_pool.pop().unwrap_or_default();
             for &e in &g.experts {
                 let load = workload
                     .expert_load(e)
                     .expect("scheduled expert missing from workload");
-                let traj = Trajectory::for_expert(load, &mesh);
-                assert!(!traj.is_empty(), "expert {e} has an empty trajectory");
-                eit.set(e, mask_of(&traj.chiplets), traj.total_tokens());
-                flow_ids.push(flows.len());
-                flows.push(Flow {
-                    expert: e,
-                    state: FlowState::Pending,
-                    visits: vec![0; cfg.num_slices],
-                    starts: vec![0; cfg.num_slices],
-                    slices_done: 0,
-                    group: gi,
-                    traj,
-                });
+                let mut flow = arena.flow_pool.pop().unwrap_or_else(Flow::empty);
+                flow.traj
+                    .fill_for_expert(load, &arena.snake_rank, &mut arena.traj_scratch);
+                assert!(!flow.traj.is_empty(), "expert {e} has an empty trajectory");
+                arena
+                    .eit
+                    .set(e, mask_of(&flow.traj.chiplets), flow.traj.total_tokens());
+                flow.expert = e;
+                flow.state = FlowState::Pending;
+                flow.visits.clear();
+                flow.visits.resize(cfg.num_slices, 0);
+                flow.starts.clear();
+                flow.starts.resize(cfg.num_slices, 0);
+                flow.slices_done = 0;
+                flow.group = gi;
+                flow_ids.push(arena.flows.len());
+                arena.flows.push(flow);
             }
-            group_queue.push_back((gi, flow_ids));
+            arena.groups.push_back((gi, flow_ids));
         }
-        let mut chips = Vec::new();
-        chips.resize_with(n, Chip::default);
+        arena.forwards.reset(arena.flows.len(), cfg.num_slices, n);
         FlowEngine {
             hw,
             geom,
             cfg,
-            mesh,
-            ddr: vec![SerialResource::new(); hw.ddr.channels],
-            buffers: BufferTracker::new(n, hw.weight_buffer_bytes),
-            chips,
-            flows,
-            groups: group_queue,
-            forwards: std::collections::HashMap::new(),
+            a: arena,
             icv: Icv::all_idle(n),
-            eit,
             meter: SchedulerMeter::default(),
-            queue: BinaryHeap::new(),
-            payload: Vec::new(),
             seq: 0,
             timeline: Timeline::new(n, cfg.record_spans),
             makespan: 0,
@@ -237,20 +413,20 @@ impl<'a> FlowEngine<'a> {
     }
 
     fn push(&mut self, t: SimTime, ev: Ev) {
-        self.payload.push(ev);
-        self.queue.push(Reverse((t, self.seq)));
+        self.a.payload.push(ev);
+        self.a.queue.push(Reverse((t, self.seq)));
         self.seq += 1;
     }
 
     /// Run the layer to completion.
     pub fn run(mut self) -> LayerRun {
         // Per-layer scheduler setup: EIT fill + hot/cold bitonic sort.
-        let setup = self.meter.charge_setup(&self.hw.scheduler, self.eit.len());
+        let setup = self.meter.charge_setup(&self.hw.scheduler, self.a.eit.len());
         self.push(setup, Ev::Decide);
         loop {
-            while let Some(Reverse((t, seq))) = self.queue.pop() {
+            while let Some(Reverse((t, seq))) = self.a.queue.pop() {
                 self.makespan = self.makespan.max(t);
-                let ev = self.payload[seq as usize];
+                let ev = self.a.payload[seq as usize];
                 // Runaway backstop: a correct layer needs O(experts ×
                 // slices × stations) events; far below this bound.
                 if self.seq > 50_000_000 {
@@ -259,34 +435,35 @@ impl<'a> FlowEngine<'a> {
                         self.seq,
                         t,
                         ev,
-                        self.flows.iter().filter(|f| f.done()).count(),
-                        self.flows.len(),
-                        self.groups.len()
+                        self.a.flows.iter().filter(|f| f.done()).count(),
+                        self.a.flows.len(),
+                        self.a.groups.len()
                     );
                 }
                 self.handle(t, ev);
             }
-            if self.flows.iter().all(|f| f.done()) {
+            if self.a.flows.iter().all(|f| f.done()) {
                 break;
             }
             // Stall: a cycle of backpressured forwards around a full ring
             // (possible with pathologically small buffers). Break it by
             // force-starting one blocked transfer with an emergency
             // overcommit — the deadlock-free virtual slot.
-            let chip = (0..self.chips.len())
-                .find(|&c| !self.chips[c].waiting_in.is_empty())
+            let chip = (0..self.a.chips.len())
+                .find(|&c| !self.a.chips[c].waiting_in.is_empty())
                 .expect("stalled flow with no blocked transfers");
             let now = self.makespan;
-            let (flow, slice, dest_pos, src) = self.chips[chip].waiting_in.pop_front().unwrap();
+            let (flow, slice, dest_pos, src) = self.a.chips[chip].waiting_in.pop_front().unwrap();
             self.serve_parked(src, chip, flow, slice, dest_pos, now);
         }
-        debug_assert!(self.flows.iter().all(|f| f.done()), "layer did not drain");
-        debug_assert!(self.buffers.drained(), "buffer bytes leaked");
+        debug_assert!(self.a.flows.iter().all(|f| f.done()), "layer did not drain");
+        debug_assert!(self.a.buffers.drained(), "buffer bytes leaked");
+        debug_assert_eq!(self.a.forwards.live, 0, "in-flight forwards leaked");
         LayerRun {
             makespan: self.makespan,
-            package_peak_weight_bytes: self.buffers.package_peak(),
-            max_chiplet_peak_bytes: self.buffers.max_chiplet_peak(),
-            overcommits: self.buffers.overcommits(),
+            package_peak_weight_bytes: self.a.buffers.package_peak(),
+            max_chiplet_peak_bytes: self.a.buffers.max_chiplet_peak(),
+            overcommits: self.a.buffers.overcommits(),
             ddr_bytes: self.ddr_bytes,
             d2d_bytes: self.d2d_bytes,
             scheduler_cycles: self.meter.cycles,
@@ -298,18 +475,18 @@ impl<'a> FlowEngine<'a> {
     fn handle(&mut self, now: SimTime, ev: Ev) {
         match ev {
             Ev::Loaded { chip, flow, slice } => {
-                self.chips[chip].loading = false;
-                let pos = self.flows[flow].traj.position_of(chip).expect("home on trajectory");
-                self.chips[chip].pending.push(SliceAt { flow, slice, pos });
+                self.a.chips[chip].loading = false;
+                let pos = self.a.flows[flow].traj.position_of(chip).expect("home on trajectory");
+                self.a.chips[chip].pending.push(SliceAt { flow, slice, pos });
                 self.try_start_load(chip, now);
                 self.try_start_compute(chip, now);
             }
             Ev::Arrived { chip, flow, slice, pos } => {
-                self.chips[chip].pending.push(SliceAt { flow, slice, pos });
+                self.a.chips[chip].pending.push(SliceAt { flow, slice, pos });
                 self.try_start_compute(chip, now);
             }
             Ev::ComputeDone { chip, flow, slice, last } => {
-                self.chips[chip].compute_busy = false;
+                self.a.chips[chip].compute_busy = false;
                 self.finish_visit(chip, flow, slice, last, now);
                 self.try_start_compute(chip, now);
             }
@@ -325,18 +502,18 @@ impl<'a> FlowEngine<'a> {
     fn group_mask(&self, flow_ids: &[usize]) -> ChipletMask {
         flow_ids
             .iter()
-            .map(|&f| self.eit.lookup(self.flows[f].expert).0)
+            .map(|&f| self.a.eit.lookup(self.a.flows[f].expert).0)
             .fold(0, |a, b| a | b)
     }
 
     fn decide(&mut self, now: SimTime) {
         loop {
-            if !self.icv.any_idle() || self.groups.is_empty() {
+            if !self.icv.any_idle() || self.a.groups.is_empty() {
                 break;
             }
             let mut launched = None;
             let mut examined = 0;
-            for (qi, (_, flow_ids)) in self.groups.iter().enumerate() {
+            for (qi, (_, flow_ids)) in self.a.groups.iter().enumerate() {
                 examined += flow_ids.len();
                 let mask = self.group_mask(flow_ids);
                 if self.icv.intersects(mask) {
@@ -349,13 +526,16 @@ impl<'a> FlowEngine<'a> {
                 .charge_decision(&self.hw.scheduler, examined, launched.is_some() as usize);
             match launched {
                 Some(qi) => {
-                    let (_, flow_ids) = self.groups.remove(qi).unwrap();
+                    let (_, flow_ids) = self.a.groups.remove(qi).unwrap();
                     let mask = self.group_mask(&flow_ids);
                     self.icv.allocate(mask);
                     let t = now + cost;
-                    for f in flow_ids {
+                    for &f in &flow_ids {
                         self.launch_flow(f, t);
                     }
+                    let mut recycled = flow_ids;
+                    recycled.clear();
+                    self.a.group_pool.push(recycled);
                 }
                 None => break,
             }
@@ -365,111 +545,131 @@ impl<'a> FlowEngine<'a> {
         // keeps DDR busy across launches without ballooning occupancy to
         // whatever the buffer holds (the elasticity Fig 12 reports).
         const PRELOAD_WINDOW: usize = 6;
-        let pending: Vec<usize> = self
-            .groups
-            .iter()
-            .take(PRELOAD_WINDOW)
-            .flat_map(|(_, fs)| fs.iter().copied())
-            .filter(|&f| self.flows[f].state == FlowState::Pending)
-            .collect();
-        for f in pending {
+        let mut pending = std::mem::take(&mut self.a.scratch_flows);
+        pending.clear();
+        pending.extend(
+            self.a
+                .groups
+                .iter()
+                .take(PRELOAD_WINDOW)
+                .flat_map(|(_, fs)| fs.iter().copied())
+                .filter(|&f| self.a.flows[f].state == FlowState::Pending),
+        );
+        for &f in &pending {
             self.preload_flow(f, now);
         }
+        self.a.scratch_flows = pending;
     }
 
     fn assign_homes(&mut self, flow: usize, now: SimTime) {
-        let n_slices = self.flows[flow].n_slices();
-        let traj_chips = self.flows[flow].traj.chiplets.clone();
-        let active = self.flows[flow].state == FlowState::Active;
-        let mut push = |chips: &mut Vec<Chip>, c: ChipletId, entry: (usize, usize)| {
-            if active {
-                chips[c].ddr_q_active.push_back(entry);
+        let slice_bytes = self.geom.slice_bytes;
+        {
+            let a = &mut *self.a;
+            let traj = &a.flows[flow].traj;
+            let n_slices = a.flows[flow].n_slices();
+            let active = a.flows[flow].state == FlowState::Active;
+            if self.cfg.rule5 {
+                // Rule 5: each slice goes to the currently emptiest
+                // trajectory chiplet (greedy, accounting queued-but-
+                // unloaded bytes).
+                let virtual_q = &mut a.scratch_u64;
+                virtual_q.clear();
+                for &c in &traj.chiplets {
+                    virtual_q.push(
+                        a.buffers.occupied(c)
+                            + (a.chips[c].ddr_q_active.len() + a.chips[c].ddr_q_pre.len()) as u64
+                                * slice_bytes,
+                    );
+                }
+                for s in 0..n_slices {
+                    let best = (0..virtual_q.len())
+                        .min_by_key(|&i| (virtual_q[i], i))
+                        .unwrap();
+                    let c = traj.chiplets[best];
+                    if active {
+                        a.chips[c].ddr_q_active.push_back((flow, s));
+                    } else {
+                        a.chips[c].ddr_q_pre.push_back((flow, s));
+                    }
+                    virtual_q[best] += slice_bytes;
+                }
             } else {
-                chips[c].ddr_q_pre.push_back(entry);
-            }
-        };
-        if self.cfg.rule5 {
-            // Rule 5: each slice goes to the currently emptiest trajectory
-            // chiplet (greedy, accounting queued-but-unloaded bytes).
-            let mut virtual_q: Vec<u64> = traj_chips
-                .iter()
-                .map(|&c| {
-                    self.buffers.occupied(c)
-                        + (self.chips[c].ddr_q_active.len() + self.chips[c].ddr_q_pre.len())
-                            as u64
-                            * self.geom.slice_bytes
-                })
-                .collect();
-            for s in 0..n_slices {
-                let (best, _) = virtual_q
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|&(i, &v)| (v, i))
-                    .unwrap();
-                push(&mut self.chips, traj_chips[best], (flow, s));
-                virtual_q[best] += self.geom.slice_bytes;
-            }
-        } else {
-            // Static round-robin sharding over the trajectory: one physical
-            // copy package-wide, spread across DDR channels.
-            for s in 0..n_slices {
-                let home = traj_chips[s % traj_chips.len()];
-                push(&mut self.chips, home, (flow, s));
+                // Static round-robin sharding over the trajectory: one
+                // physical copy package-wide, spread across DDR channels.
+                for s in 0..n_slices {
+                    let home = traj.chiplets[s % traj.chiplets.len()];
+                    if active {
+                        a.chips[home].ddr_q_active.push_back((flow, s));
+                    } else {
+                        a.chips[home].ddr_q_pre.push_back((flow, s));
+                    }
+                }
             }
         }
-        for c in traj_chips {
+        for i in 0..self.a.flows[flow].traj.len() {
+            let c = self.a.flows[flow].traj.chiplets[i];
             self.try_start_load(c, now);
         }
     }
 
     fn preload_flow(&mut self, flow: usize, now: SimTime) {
-        if self.flows[flow].state != FlowState::Pending {
+        if self.a.flows[flow].state != FlowState::Pending {
             return;
         }
-        self.flows[flow].state = FlowState::Preloading;
+        self.a.flows[flow].state = FlowState::Preloading;
         self.assign_homes(flow, now);
     }
 
     fn launch_flow(&mut self, flow: usize, now: SimTime) {
-        let prior = self.flows[flow].state;
-        self.flows[flow].state = FlowState::Active;
-        let traj = self.flows[flow].traj.chiplets.clone();
-        for &c in &traj {
-            self.chips[c].engaged += 1;
+        let prior = self.a.flows[flow].state;
+        self.a.flows[flow].state = FlowState::Active;
+        {
+            let a = &mut *self.a;
+            let traj = &a.flows[flow].traj;
+            for &c in &traj.chiplets {
+                a.chips[c].engaged += 1;
+            }
         }
         if prior == FlowState::Pending {
             self.assign_homes(flow, now);
         } else {
             // Promote the flow's remaining preload-queue entries to the
-            // active queue (one O(queue) pass per launch, keeping the
-            // per-event load path O(1)).
-            for &c in &traj {
-                let mut keep = VecDeque::with_capacity(self.chips[c].ddr_q_pre.len());
-                while let Some(entry) = self.chips[c].ddr_q_pre.pop_front() {
+            // active queue (one O(queue) in-place rotation per launch,
+            // preserving relative order; the per-event load path stays
+            // O(1) and nothing is reallocated).
+            let a = &mut *self.a;
+            let traj = &a.flows[flow].traj;
+            for &c in &traj.chiplets {
+                let chip = &mut a.chips[c];
+                for _ in 0..chip.ddr_q_pre.len() {
+                    let entry = chip.ddr_q_pre.pop_front().unwrap();
                     if entry.0 == flow {
-                        self.chips[c].ddr_q_active.push_back(entry);
+                        chip.ddr_q_active.push_back(entry);
                     } else {
-                        keep.push_back(entry);
+                        chip.ddr_q_pre.push_back(entry);
                     }
                 }
-                self.chips[c].ddr_q_pre = keep;
             }
         }
         // Already-preloaded pending slices may start computing now, and the
         // flow's remaining loads gain queue priority.
-        for c in traj {
+        for i in 0..self.a.flows[flow].traj.len() {
+            let c = self.a.flows[flow].traj.chiplets[i];
             self.try_start_compute(c, now);
             self.try_start_load(c, now);
         }
     }
 
     fn flow_completed(&mut self, flow: usize, now: SimTime) {
-        let traj = self.flows[flow].traj.chiplets.clone();
         let mut release_mask: ChipletMask = 0;
-        for c in traj {
-            self.chips[c].engaged -= 1;
-            if self.chips[c].engaged == 0 {
-                release_mask |= 1 << c;
+        {
+            let a = &mut *self.a;
+            let traj = &a.flows[flow].traj;
+            for &c in &traj.chiplets {
+                a.chips[c].engaged -= 1;
+                if a.chips[c].engaged == 0 {
+                    release_mask |= 1 << c;
+                }
             }
         }
         self.icv.release(release_mask);
@@ -483,51 +683,51 @@ impl<'a> FlowEngine<'a> {
     /// pre-loads (Preloading flows) may only use half the buffer — both
     /// keep speculative pre-loading from starving the live trajectories.
     fn try_start_load(&mut self, chip: ChipletId, now: SimTime) {
-        if self.chips[chip].loading {
+        if self.a.chips[chip].loading {
             return;
         }
-        let (flow, slice) = if let Some(&(flow, slice)) = self.chips[chip].ddr_q_active.front() {
+        let (flow, slice) = if let Some(&(flow, slice)) = self.a.chips[chip].ddr_q_active.front() {
             // Emergency slot: a slice larger than the remaining space may
             // still load into an empty buffer (tiny-buffer configs).
-            if !self.buffers.fits(chip, self.geom.slice_bytes)
-                && self.buffers.occupied(chip) != 0
+            if !self.a.buffers.fits(chip, self.geom.slice_bytes)
+                && self.a.buffers.occupied(chip) != 0
             {
                 return;
             }
-            self.chips[chip].ddr_q_active.pop_front();
+            self.a.chips[chip].ddr_q_active.pop_front();
             (flow, slice)
-        } else if let Some(&(flow, slice)) = self.chips[chip].ddr_q_pre.front() {
-            if self.flows[flow].state == FlowState::Pending {
+        } else if let Some(&(flow, slice)) = self.a.chips[chip].ddr_q_pre.front() {
+            if self.a.flows[flow].state == FlowState::Pending {
                 return;
             }
             // Preload headroom: speculative loads may fill at most half the
             // buffer and must always leave two slice slots for live flows
             // (Rule 4's "whenever there is available space", bounded so
             // pre-loading cannot starve active trajectories).
-            let cap = (self.buffers.capacity() / 2)
-                .min(self.buffers.capacity().saturating_sub(2 * self.geom.slice_bytes));
-            if self.buffers.occupied(chip) + self.geom.slice_bytes > cap {
+            let cap = (self.a.buffers.capacity() / 2)
+                .min(self.a.buffers.capacity().saturating_sub(2 * self.geom.slice_bytes));
+            if self.a.buffers.occupied(chip) + self.geom.slice_bytes > cap {
                 return;
             }
-            self.chips[chip].ddr_q_pre.pop_front();
+            self.a.chips[chip].ddr_q_pre.pop_front();
             (flow, slice)
         } else {
             return;
         };
-        self.chips[chip].loading = true;
-        self.buffers.reserve(chip, self.geom.slice_bytes, now);
+        self.a.chips[chip].loading = true;
+        self.a.buffers.reserve(chip, self.geom.slice_bytes, now);
         let channel = self.hw.ddr_channel_of(chip);
         // Per-load control overhead (descriptor + routing-table entry).
         let cycles = self.hw.ddr_cycles(self.geom.slice_bytes)
             + self.hw.microslice_overhead_cycles;
-        let (start, end) = self.ddr[channel].acquire(now, cycles);
+        let (start, end) = self.a.ddr[channel].acquire(now, cycles);
         self.ddr_bytes += self.geom.slice_bytes;
         self.timeline.record(Span {
             chiplet: chip,
             kind: ActivityKind::DdrLoad,
             start,
             end,
-            expert: self.flows[flow].expert,
+            expert: self.a.flows[flow].expert,
         });
         self.push(end, Ev::Loaded { chip, flow, slice });
     }
@@ -536,35 +736,39 @@ impl<'a> FlowEngine<'a> {
     /// received/loaded micro-slice of an *active* flow, eagerly forwarding
     /// it at compute start.
     fn try_start_compute(&mut self, chip: ChipletId, now: SimTime) {
-        if self.chips[chip].compute_busy {
+        if self.a.chips[chip].compute_busy {
             return;
         }
         // LIFO scan for the newest pending slice whose flow is active.
-        let idx = self.chips[chip]
-            .pending
-            .iter()
-            .rposition(|s| self.flows[s.flow].state == FlowState::Active);
+        let idx = {
+            let a = &*self.a;
+            a.chips[chip]
+                .pending
+                .iter()
+                .rposition(|s| a.flows[s.flow].state == FlowState::Active)
+        };
         let Some(idx) = idx else { return };
-        let SliceAt { flow, slice, pos } = self.chips[chip].pending.remove(idx);
+        let SliceAt { flow, slice, pos } = self.a.chips[chip].pending.remove(idx);
 
-        let tokens = self.flows[flow].traj.tokens[pos] as u64;
+        let tokens = self.a.flows[flow].traj.tokens[pos] as u64;
         let dur = self.geom.slice_compute_cycles(self.hw, tokens);
-        self.chips[chip].compute_busy = true;
+        self.a.chips[chip].compute_busy = true;
         self.timeline.record(Span {
             chiplet: chip,
             kind: ActivityKind::Compute,
             start: now,
             end: now + dur,
-            expert: self.flows[flow].expert,
+            expert: self.a.flows[flow].expert,
         });
 
         // Eager forward (Fig 4(b)): ship the slice onward at compute start
         // unless this is its final trajectory station (Rule 3). The station
         // ordinal comes from the compute-start counter — see `Flow::starts`.
-        self.flows[flow].starts[slice] += 1;
-        let is_last = self.flows[flow].starts[slice] as usize == self.flows[flow].traj.len();
+        self.a.flows[flow].starts[slice] += 1;
+        let is_last =
+            self.a.flows[flow].starts[slice] as usize == self.a.flows[flow].traj.len();
         if !is_last {
-            let next = self.flows[flow].traj.next_pos(pos);
+            let next = self.a.flows[flow].traj.next_pos(pos);
             self.forward(chip, flow, slice, next, now);
         }
         self.push(now + dur, Ev::ComputeDone { chip, flow, slice, last: is_last });
@@ -573,13 +777,13 @@ impl<'a> FlowEngine<'a> {
     /// Forward a micro-slice to the next trajectory station, parking it in
     /// the destination's backpressure queue when the buffer is full.
     fn forward(&mut self, src: ChipletId, flow: usize, slice: usize, dest_pos: usize, now: SimTime) {
-        let dest = self.flows[flow].traj.chiplets[dest_pos];
-        if self.buffers.fits(dest, self.geom.slice_bytes) || self.buffers.occupied(dest) == 0 {
+        let dest = self.a.flows[flow].traj.chiplets[dest_pos];
+        if self.a.buffers.fits(dest, self.geom.slice_bytes) || self.a.buffers.occupied(dest) == 0 {
             let arrival = self.start_transfer(src, dest, flow, slice, dest_pos, now);
-            self.forwards.insert((flow, slice, src), FwdState::Started(arrival));
+            self.a.forwards.insert(flow, slice, src, FwdState::Started(arrival));
         } else {
-            self.forwards.insert((flow, slice, src), FwdState::Parked);
-            self.chips[dest].waiting_in.push_back((flow, slice, dest_pos, src));
+            self.a.forwards.insert(flow, slice, src, FwdState::Parked);
+            self.a.chips[dest].waiting_in.push_back((flow, slice, dest_pos, src));
         }
     }
 
@@ -593,22 +797,23 @@ impl<'a> FlowEngine<'a> {
         dest_pos: usize,
         now: SimTime,
     ) -> SimTime {
-        self.buffers.reserve(dest, self.geom.slice_bytes, now);
-        let arrival = self.mesh.transfer(src, dest, self.geom.slice_bytes, now);
+        let expert = self.a.flows[flow].expert;
+        self.a.buffers.reserve(dest, self.geom.slice_bytes, now);
+        let arrival = self.a.mesh.transfer(src, dest, self.geom.slice_bytes, now);
         self.d2d_bytes += self.geom.slice_bytes;
         self.timeline.record(Span {
             chiplet: src,
             kind: ActivityKind::D2dSend,
             start: now,
             end: arrival,
-            expert: self.flows[flow].expert,
+            expert,
         });
         self.timeline.record(Span {
             chiplet: dest,
             kind: ActivityKind::D2dRecv,
             start: now,
             end: arrival,
-            expert: self.flows[flow].expert,
+            expert,
         });
         self.push(arrival, Ev::Arrived { chip: dest, flow, slice, pos: dest_pos });
         arrival
@@ -626,8 +831,9 @@ impl<'a> FlowEngine<'a> {
         now: SimTime,
     ) {
         let prior = self
+            .a
             .forwards
-            .remove(&(flow, slice, src))
+            .remove(flow, slice, src)
             .expect("parked transfer without forward state");
         let arrival = self.start_transfer(src, dest, flow, slice, dest_pos, now);
         match prior {
@@ -637,7 +843,7 @@ impl<'a> FlowEngine<'a> {
                 self.push(arrival, Ev::Release { chip: src, bytes: self.geom.slice_bytes });
             }
             FwdState::Parked => {
-                self.forwards.insert((flow, slice, src), FwdState::Started(arrival));
+                self.a.forwards.insert(flow, slice, src, FwdState::Started(arrival));
             }
             FwdState::Started(_) => unreachable!("transfer started twice"),
         }
@@ -657,17 +863,18 @@ impl<'a> FlowEngine<'a> {
         was_last_station: bool,
         now: SimTime,
     ) {
-        self.flows[flow].visits[slice] += 1;
-        let all_visited = self.flows[flow].visits[slice] as usize == self.flows[flow].traj.len();
+        self.a.flows[flow].visits[slice] += 1;
+        let all_visited =
+            self.a.flows[flow].visits[slice] as usize == self.a.flows[flow].traj.len();
         let bytes = self.geom.slice_bytes;
         if all_visited {
-            self.flows[flow].slices_done += 1;
+            self.a.flows[flow].slices_done += 1;
         }
         if was_last_station {
             // Rule 3: final station — release immediately.
             self.free_bytes(chip, bytes, now);
         } else {
-            match self.forwards.remove(&(flow, slice, chip)) {
+            match self.a.forwards.remove(flow, slice, chip) {
                 Some(FwdState::Started(arrival)) if arrival > now => {
                     self.push(arrival, Ev::Release { chip, bytes });
                 }
@@ -675,12 +882,12 @@ impl<'a> FlowEngine<'a> {
                 Some(FwdState::Parked) => {
                     // Forward still blocked: keep the copy resident and let
                     // `serve_parked` schedule the release on transfer start.
-                    self.forwards.insert((flow, slice, chip), FwdState::ParkedComputeDone);
+                    self.a.forwards.insert(flow, slice, chip, FwdState::ParkedComputeDone);
                 }
                 other => unreachable!("visit finished with forward state {other:?}"),
             }
         }
-        if all_visited && self.flows[flow].done() {
+        if all_visited && self.a.flows[flow].done() {
             self.flow_completed(flow, now);
         }
     }
@@ -688,22 +895,37 @@ impl<'a> FlowEngine<'a> {
     /// Release bytes and serve any backpressured transfers / DDR loads that
     /// were waiting for space.
     fn free_bytes(&mut self, chip: ChipletId, bytes: u64, now: SimTime) {
-        self.buffers.release(chip, bytes, now);
-        while let Some(&(flow, slice, dest_pos, src)) = self.chips[chip].waiting_in.front() {
-            if !self.buffers.fits(chip, self.geom.slice_bytes)
-                && self.buffers.occupied(chip) != 0
+        self.a.buffers.release(chip, bytes, now);
+        while let Some(&(flow, slice, dest_pos, src)) = self.a.chips[chip].waiting_in.front() {
+            if !self.a.buffers.fits(chip, self.geom.slice_bytes)
+                && self.a.buffers.occupied(chip) != 0
             {
                 break;
             }
-            self.chips[chip].waiting_in.pop_front();
+            self.a.chips[chip].waiting_in.pop_front();
             self.serve_parked(src, chip, flow, slice, dest_pos, now);
         }
         self.try_start_load(chip, now);
     }
 }
 
-/// Convenience wrapper: run one layer under the given ablation config.
+/// Convenience wrapper: run one layer under the given ablation config with
+/// a throwaway arena. Hot callers (strategies, the serving loop) should
+/// prefer [`run_layer_in`] with a long-lived arena.
 pub fn run_layer(
+    hw: &HardwareConfig,
+    geom: &ExpertGeometry,
+    workload: &LayerWorkload,
+    groups: &[ExpertGroup],
+    cfg: FlowConfig,
+) -> LayerRun {
+    let mut arena = FlowArena::new();
+    run_layer_in(&mut arena, hw, geom, workload, groups, cfg)
+}
+
+/// Run one layer reusing the caller's [`FlowArena`] across calls.
+pub fn run_layer_in(
+    arena: &mut FlowArena,
     hw: &HardwareConfig,
     geom: &ExpertGeometry,
     workload: &LayerWorkload,
@@ -723,7 +945,7 @@ pub fn run_layer(
             scheduler_decisions: 0,
         };
     }
-    FlowEngine::new(hw, geom, workload, groups, cfg).run()
+    FlowEngine::new(hw, geom, workload, groups, cfg, arena).run()
 }
 
 #[cfg(test)]
@@ -877,6 +1099,46 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.d2d_bytes, b.d2d_bytes);
         assert_eq!(a.package_peak_weight_bytes, b.package_peak_weight_bytes);
+    }
+
+    #[test]
+    fn arena_reuse_matches_fresh() {
+        // The refactor's core invariant: a warm arena (reused across many
+        // different layers, including a rule5 run and a different slice
+        // count) must produce results bit-identical to a throwaway arena.
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let layers = [
+            vec![vec![3, 1, 4, 1], vec![5, 9, 2, 6]],
+            vec![vec![9, 1, 0, 3]],
+            vec![vec![8, 8, 8, 8], vec![1, 0, 0, 0], vec![0, 2, 0, 2], vec![3, 3, 0, 0]],
+            vec![vec![2, 2, 2, 2], vec![1, 1, 1, 1], vec![0, 0, 7, 0]],
+        ];
+        let mut arena = FlowArena::new();
+        for round in 0..2 {
+            for (i, counts) in layers.iter().enumerate() {
+                let slices = if i % 2 == 0 { 4 } else { 8 };
+                let rule5 = i == 2;
+                let geom = ExpertGeometry::new(&model, &hw, slices);
+                let wl = workload(counts.clone());
+                let groups = paired_order(&wl);
+                let c = FlowConfig { num_slices: slices, rule5, record_spans: true };
+                let warm = run_layer_in(&mut arena, &hw, &geom, &wl, &groups, c);
+                let fresh = run_layer(&hw, &geom, &wl, &groups, c);
+                assert_eq!(warm.makespan, fresh.makespan, "layer {i} round {round}");
+                assert_eq!(warm.ddr_bytes, fresh.ddr_bytes, "layer {i}");
+                assert_eq!(warm.d2d_bytes, fresh.d2d_bytes, "layer {i}");
+                assert_eq!(
+                    warm.package_peak_weight_bytes, fresh.package_peak_weight_bytes,
+                    "layer {i}"
+                );
+                assert_eq!(warm.max_chiplet_peak_bytes, fresh.max_chiplet_peak_bytes);
+                assert_eq!(warm.scheduler_cycles, fresh.scheduler_cycles);
+                assert_eq!(warm.scheduler_decisions, fresh.scheduler_decisions);
+                assert_eq!(warm.overcommits, fresh.overcommits);
+                assert_eq!(warm.timeline.spans.len(), fresh.timeline.spans.len());
+            }
+        }
     }
 
     #[test]

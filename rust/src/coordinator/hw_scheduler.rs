@@ -34,6 +34,13 @@ impl Eit {
         Eit { entries: vec![(0, 0); n_experts] }
     }
 
+    /// Clear and resize for reuse across layers (the arena path: the
+    /// entry vector keeps its allocation between `run_layer` calls).
+    pub fn reset(&mut self, n_experts: usize) {
+        self.entries.clear();
+        self.entries.resize(n_experts, (0, 0));
+    }
+
     pub fn set(&mut self, e: ExpertId, mask: ChipletMask, tokens: u32) {
         self.entries[e as usize] = (mask, tokens);
     }

@@ -17,7 +17,7 @@ pub mod paired_load;
 pub mod token_buffer;
 pub mod trajectory;
 
-pub use flow::{FlowConfig, LayerRun};
+pub use flow::{FlowArena, FlowConfig, LayerRun};
 pub use token_buffer::TokenBufferPolicy;
 pub use trajectory::Trajectory;
 
@@ -102,6 +102,15 @@ pub trait Strategy {
 
     /// Reset cross-layer state between independent runs.
     fn reset(&mut self) {}
+
+    /// Whether `run_layer` is a pure function of its `LayerCtx` — i.e. the
+    /// strategy carries no *semantic* cross-layer state (scratch arenas
+    /// don't count). Memoization layers (the serving layer-memo cache) may
+    /// only cache results of stateless strategies; Hydra's popularity EMA
+    /// makes it the one stateful implementation today.
+    fn is_stateless(&self) -> bool {
+        true
+    }
 }
 
 /// FSE-DP under micro-slice flow: ablations A2 (sequential), A3 (paired),
@@ -110,6 +119,9 @@ pub trait Strategy {
 pub struct FseDpStrategy {
     kind: StrategyKind,
     pub num_slices: usize,
+    /// Scratch arena reused across `run_layer` calls (§Perf iteration 4);
+    /// purely an allocation cache, never semantic state.
+    arena: FlowArena,
 }
 
 impl FseDpStrategy {
@@ -121,7 +133,7 @@ impl FseDpStrategy {
                 | StrategyKind::FseDpRule5
                 | StrategyKind::FseDpBuffered
         ));
-        FseDpStrategy { kind, num_slices }
+        FseDpStrategy { kind, num_slices, arena: FlowArena::new() }
     }
 }
 
@@ -140,7 +152,7 @@ impl Strategy for FseDpStrategy {
             rule5: self.kind == StrategyKind::FseDpRule5,
             record_spans: ctx.record_spans,
         };
-        let run = flow::run_layer(ctx.hw, ctx.geom, ctx.workload, &groups, cfg);
+        let run = flow::run_layer_in(&mut self.arena, ctx.hw, ctx.geom, ctx.workload, &groups, cfg);
         // FSE-DP keeps exactly one copy of each token package-wide: the
         // local shard plus the per-expert activation accumulators.
         let token_peak = ctx.workload.total_tokens as u64 * ctx.geom.token_bytes * 2;

@@ -24,20 +24,35 @@ impl Trajectory {
     /// Build the trajectory for one expert from its per-chiplet load,
     /// ordering by mesh snake rank.
     pub fn for_expert(load: &ExpertLoad, mesh: &Mesh) -> Trajectory {
-        let rank = mesh.snake_rank();
-        let mut stations: Vec<(usize, ChipletId, u32)> = load
-            .tokens_per_chiplet
-            .iter()
-            .enumerate()
-            .filter(|(_, &t)| t > 0)
-            .map(|(c, &t)| (rank[c], c, t))
-            .collect();
-        stations.sort_unstable();
-        Trajectory {
-            expert: load.expert,
-            chiplets: stations.iter().map(|&(_, c, _)| c).collect(),
-            tokens: stations.iter().map(|&(_, _, t)| t).collect(),
-        }
+        let mut t = Trajectory { expert: load.expert, chiplets: Vec::new(), tokens: Vec::new() };
+        t.fill_for_expert(load, &mesh.snake_rank(), &mut Vec::new());
+        t
+    }
+
+    /// Rebuild this trajectory in place from a per-chiplet load, using a
+    /// precomputed snake rank and a reusable sort scratch — the arena hot
+    /// path: zero allocations once capacities have warmed up. Must order
+    /// stations exactly like [`Trajectory::for_expert`].
+    pub fn fill_for_expert(
+        &mut self,
+        load: &ExpertLoad,
+        rank: &[usize],
+        scratch: &mut Vec<(usize, ChipletId, u32)>,
+    ) {
+        self.expert = load.expert;
+        self.chiplets.clear();
+        self.tokens.clear();
+        scratch.clear();
+        scratch.extend(
+            load.tokens_per_chiplet
+                .iter()
+                .enumerate()
+                .filter(|(_, &t)| t > 0)
+                .map(|(c, &t)| (rank[c], c, t)),
+        );
+        scratch.sort_unstable();
+        self.chiplets.extend(scratch.iter().map(|&(_, c, _)| c));
+        self.tokens.extend(scratch.iter().map(|&(_, _, t)| t));
     }
 
     pub fn len(&self) -> usize {

@@ -4,6 +4,7 @@
 
 use crate::config::{Dataset, HardwareConfig, MoeModelConfig, StrategyKind};
 use crate::engine::timing::{E2eConfig, E2eSimulator};
+use crate::util::parallel_map;
 
 /// Per-component area/power coefficients used by the feasibility model.
 /// Values are anchored on the paper's figures: UCIe ×32 module ≈ 288 GB/s
@@ -99,6 +100,8 @@ pub fn evaluate_point(
 }
 
 /// Fig 16(a): fixed D2D, sweep (weight buffer MB × per-die DDR GB/s).
+/// Each grid point is an independent seeded simulation, fanned across
+/// `threads` workers (0 = auto) with input-ordered results.
 pub fn sweep_buffer_vs_ddr(
     model: &MoeModelConfig,
     base: &HardwareConfig,
@@ -106,29 +109,31 @@ pub fn sweep_buffer_vs_ddr(
     ddr_gbps: &[f64],
     tokens: usize,
     iterations: usize,
+    threads: usize,
 ) -> Vec<DsePoint> {
     let cost = CostModel::default();
-    let mut out = Vec::new();
-    for &buf in buffers_mb {
-        for &ddr in ddr_gbps {
-            let mut hw = base.clone();
-            hw.weight_buffer_bytes = (buf * 1024.0 * 1024.0) as u64;
-            hw.ddr.gbps_per_channel = ddr; // one channel per die in 2×2
-            let (util, cycles) = evaluate_point(model, &hw, Dataset::C4, tokens, iterations);
-            out.push(DsePoint {
-                weight_buffer_mb: buf,
-                ddr_gbps_per_die: ddr,
-                d2d_gbps: hw.d2d.gbps_per_link,
-                utilization: util,
-                cycles,
-                feasible: cost.feasible(&hw),
-            });
+    let grid: Vec<(f64, f64)> = buffers_mb
+        .iter()
+        .flat_map(|&buf| ddr_gbps.iter().map(move |&ddr| (buf, ddr)))
+        .collect();
+    parallel_map(grid, threads, |(buf, ddr)| {
+        let mut hw = base.clone();
+        hw.weight_buffer_bytes = (buf * 1024.0 * 1024.0) as u64;
+        hw.ddr.gbps_per_channel = ddr; // one channel per die in 2×2
+        let (util, cycles) = evaluate_point(model, &hw, Dataset::C4, tokens, iterations);
+        DsePoint {
+            weight_buffer_mb: buf,
+            ddr_gbps_per_die: ddr,
+            d2d_gbps: hw.d2d.gbps_per_link,
+            utilization: util,
+            cycles,
+            feasible: cost.feasible(&hw),
         }
-    }
-    out
+    })
 }
 
 /// Fig 16(b): fixed buffer, sweep (per-die DDR GB/s × D2D GB/s).
+#[allow(clippy::too_many_arguments)]
 pub fn sweep_ddr_vs_d2d(
     model: &MoeModelConfig,
     base: &HardwareConfig,
@@ -137,27 +142,28 @@ pub fn sweep_ddr_vs_d2d(
     d2d_gbps: &[f64],
     tokens: usize,
     iterations: usize,
+    threads: usize,
 ) -> Vec<DsePoint> {
     let cost = CostModel::default();
-    let mut out = Vec::new();
-    for &ddr in ddr_gbps {
-        for &d2d in d2d_gbps {
-            let mut hw = base.clone();
-            hw.weight_buffer_bytes = (buffer_mb * 1024.0 * 1024.0) as u64;
-            hw.ddr.gbps_per_channel = ddr;
-            hw.d2d.gbps_per_link = d2d;
-            let (util, cycles) = evaluate_point(model, &hw, Dataset::C4, tokens, iterations);
-            out.push(DsePoint {
-                weight_buffer_mb: buffer_mb,
-                ddr_gbps_per_die: ddr,
-                d2d_gbps: d2d,
-                utilization: util,
-                cycles,
-                feasible: cost.feasible(&hw),
-            });
+    let grid: Vec<(f64, f64)> = ddr_gbps
+        .iter()
+        .flat_map(|&ddr| d2d_gbps.iter().map(move |&d2d| (ddr, d2d)))
+        .collect();
+    parallel_map(grid, threads, |(ddr, d2d)| {
+        let mut hw = base.clone();
+        hw.weight_buffer_bytes = (buffer_mb * 1024.0 * 1024.0) as u64;
+        hw.ddr.gbps_per_channel = ddr;
+        hw.d2d.gbps_per_link = d2d;
+        let (util, cycles) = evaluate_point(model, &hw, Dataset::C4, tokens, iterations);
+        DsePoint {
+            weight_buffer_mb: buffer_mb,
+            ddr_gbps_per_die: ddr,
+            d2d_gbps: d2d,
+            utilization: util,
+            cycles,
+            feasible: cost.feasible(&hw),
         }
-    }
-    out
+    })
 }
 
 /// Fig 17: latency over (micro-slice count × weight-buffer size).
@@ -168,23 +174,24 @@ pub fn sweep_granularity(
     buffers_mb: &[f64],
     tokens: usize,
     iterations: usize,
+    threads: usize,
 ) -> Vec<(usize, f64, u64)> {
-    let mut out = Vec::new();
-    for &slices in slice_counts {
-        for &buf in buffers_mb {
-            let mut hw = base.clone();
-            hw.weight_buffer_bytes = (buf * 1024.0 * 1024.0) as u64;
-            let cfg = E2eConfig {
-                strategy: StrategyKind::FseDpPaired,
-                num_slices: slices,
-                ..Default::default()
-            };
-            let mut sim = E2eSimulator::new(model, &hw, Dataset::C4, cfg);
-            let r = sim.run(iterations, tokens);
-            out.push((slices, buf, r.moe_cycles));
-        }
-    }
-    out
+    let grid: Vec<(usize, f64)> = slice_counts
+        .iter()
+        .flat_map(|&slices| buffers_mb.iter().map(move |&buf| (slices, buf)))
+        .collect();
+    parallel_map(grid, threads, |(slices, buf)| {
+        let mut hw = base.clone();
+        hw.weight_buffer_bytes = (buf * 1024.0 * 1024.0) as u64;
+        let cfg = E2eConfig {
+            strategy: StrategyKind::FseDpPaired,
+            num_slices: slices,
+            ..Default::default()
+        };
+        let mut sim = E2eSimulator::new(model, &hw, Dataset::C4, cfg);
+        let r = sim.run(iterations, tokens);
+        (slices, buf, r.moe_cycles)
+    })
 }
 
 #[cfg(test)]

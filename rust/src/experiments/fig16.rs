@@ -23,7 +23,7 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         "Fig 16(a): utilization over buffer x DDR (D2D fixed 288 GB/s)",
         &["buffer MB", "DDR GB/s/die", "utilization", "feasible (Eq1-2)"],
     );
-    for p in dse::sweep_buffer_vs_ddr(&model, &base, buffers, ddrs, tokens, iterations) {
+    for p in dse::sweep_buffer_vs_ddr(&model, &base, buffers, ddrs, tokens, iterations, opts.threads) {
         ta.row(vec![
             format!("{:.0}", p.weight_buffer_mb),
             format!("{:.1}", p.ddr_gbps_per_die),
@@ -38,7 +38,7 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         "Fig 16(b): utilization over DDR x D2D (buffer fixed 14 MB)",
         &["DDR GB/s/die", "D2D GB/s", "utilization", "feasible (Eq1-2)"],
     );
-    for p in dse::sweep_ddr_vs_d2d(&model, &base, 14.0, ddrs_b, d2ds, tokens, iterations) {
+    for p in dse::sweep_ddr_vs_d2d(&model, &base, 14.0, ddrs_b, d2ds, tokens, iterations, opts.threads) {
         tb.row(vec![
             format!("{:.1}", p.ddr_gbps_per_die),
             format!("{:.0}", p.d2d_gbps),
@@ -63,7 +63,7 @@ mod tests {
         run(&opts);
         let model = presets::qwen3_a3b();
         let base = presets::mcm_2x2();
-        let pts = dse::sweep_buffer_vs_ddr(&model, &base, &[16.0], &[25.6, 48.0], 64, 1);
+        let pts = dse::sweep_buffer_vs_ddr(&model, &base, &[16.0], &[25.6, 48.0], 64, 1, 1);
         assert!(
             pts[1].cycles <= pts[0].cycles,
             "more DDR slowed the run: {} -> {}",

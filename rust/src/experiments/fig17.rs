@@ -22,9 +22,9 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             &format!("Fig 17: {} latency heatmap (MoE cycles)", model.name),
             &["slices", "buffer MB", "moe cycles"],
         );
-        for (slices, buf, cycles) in
-            dse::sweep_granularity(&model, &base, slice_counts, buffers, tokens, iterations)
-        {
+        for (slices, buf, cycles) in dse::sweep_granularity(
+            &model, &base, slice_counts, buffers, tokens, iterations, opts.threads,
+        ) {
             t.row(vec![slices.to_string(), format!("{buf:.0}"), cycles.to_string()]);
         }
         super::save(&t, opts, &format!("fig17_{}", model.name.to_lowercase().replace('.', "")));

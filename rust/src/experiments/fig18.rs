@@ -5,7 +5,7 @@
 
 use super::{run_one, sample_workloads, ExpOpts};
 use crate::config::{presets, Dataset, StrategyKind};
-use crate::util::{Summary, Table};
+use crate::util::{parallel_map, Summary, Table};
 
 pub fn run(opts: &ExpOpts) -> Vec<Table> {
     let model = presets::qwen3_a3b();
@@ -17,19 +17,29 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         &format!("Fig 18: utilization vs array size (Qwen3, C4, {tokens} tokens)"),
         &["array", "EP", "Hydra", "FSE-DP+paired", "FSE-DP retention vs 2x2"],
     );
+    const KINDS: [StrategyKind; 3] = [StrategyKind::Ep, StrategyKind::Hydra, StrategyKind::FseDpPaired];
     let mut fse_2x2 = 0.0;
     for &n in sizes {
         let hw = presets::mcm_nxn(n);
         let wls = sample_workloads(&model, Dataset::C4, tokens, layer_samples, hw.n_chiplets(), opts.seed);
-        let mut utils = Vec::new();
-        for kind in [StrategyKind::Ep, StrategyKind::Hydra, StrategyKind::FseDpPaired] {
-            let mut s = Summary::new();
-            for wl in &wls {
-                let r = run_one(kind, &model, &hw, wl, false);
-                s.push(r.utilization());
-            }
-            utils.push(s.mean());
-        }
+        // Every (strategy, layer-sample) pair is an independent run_one
+        // (fresh strategy per call), so fan the whole product across the
+        // pool; aggregation below walks the index-ordered results exactly
+        // like the old nested loop.
+        let runs: Vec<(usize, usize)> = (0..KINDS.len())
+            .flat_map(|ki| (0..wls.len()).map(move |wi| (ki, wi)))
+            .collect();
+        let measured = parallel_map(runs, opts.threads, |(ki, wi)| {
+            run_one(KINDS[ki], &model, &hw, &wls[wi], false).utilization()
+        });
+        let utils: Vec<f64> = measured
+            .chunks(wls.len())
+            .map(|per_kind| {
+                let mut s = Summary::new();
+                per_kind.iter().for_each(|&u| s.push(u));
+                s.mean()
+            })
+            .collect();
         if n == 2 {
             fse_2x2 = utils[2];
         }

@@ -48,11 +48,16 @@ pub struct ExpOpts {
     pub seed: u64,
     /// Directory for CSV outputs.
     pub out_dir: String,
+    /// Worker threads for independent sweep points; 0 = auto
+    /// (`util::pool_size`), 1 = serial. Results are identical for any
+    /// value — each point is a seeded, self-contained simulation and the
+    /// executor preserves input order.
+    pub threads: usize,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { quick: false, seed: 7, out_dir: "results".into() }
+        ExpOpts { quick: false, seed: 7, out_dir: "results".into(), threads: 0 }
     }
 }
 

@@ -14,11 +14,17 @@
 //!    pass/fail outcomes (extending geometrically where the grid was
 //!    one-sided) and bisect it, so the reported maximum sustained RPS
 //!    resolves finer than the grid spacing at few extra probes.
+//!
+//! Every grid point and every per-scheme bisection is an independent
+//! seeded `ServerSim`, so the sweep fans them across the worker pool
+//! (`util::parallel`): the whole grid in one batch, then the three
+//! adaptive saturation searches concurrently. Tables are assembled from
+//! the index-ordered results, so output is identical at any thread count.
 
 use super::ExpOpts;
 use crate::config::{presets, Dataset, MoeModelConfig, ServePreset, SloConfig, StrategyKind};
 use crate::server::{resolve_slo, LoadMode, ServeMetrics, ServerConfig, ServerSim};
-use crate::util::Table;
+use crate::util::{parallel_map, Table};
 
 /// Completion fraction below which a run counts as saturated regardless of
 /// the latency tails it managed to record before the cutoff.
@@ -35,6 +41,7 @@ struct Sweep {
     preset: ServePreset,
     seed: u64,
     requests_per_point: usize,
+    threads: usize,
 }
 
 impl Sweep {
@@ -119,6 +126,7 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         preset: presets::serve_chat(),
         seed: opts.seed,
         requests_per_point: if opts.quick { 16 } else { 24 },
+        threads: opts.threads,
     };
 
     // 1. Calibration on EP (the baseline every speedup is quoted against).
@@ -156,24 +164,29 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             "SLO",
         ],
     );
+    // All grid points are independent seeded runs: fan the whole
+    // (load × scheme) cross product across the pool in one batch, then
+    // assemble rows from the index-ordered results.
+    let points: Vec<(usize, f64)> = GRID
+        .iter()
+        .flat_map(|&mult| (0..SCHEMES.len()).map(move |si| (si, mult * base_rps)))
+        .collect();
+    let grid_metrics: Vec<ServeMetrics> =
+        parallel_map(points.clone(), sweep.threads, |(si, rps)| sweep.run_open(SCHEMES[si], rps));
     let mut grid_outcomes: Vec<Vec<(f64, bool)>> = vec![Vec::new(); SCHEMES.len()];
-    for &mult in &GRID {
-        let rps = mult * base_rps;
-        for (si, &scheme) in SCHEMES.iter().enumerate() {
-            let m = sweep.run_open(scheme, rps);
-            let ok = m.meets(&slo, MIN_COMPLETION_FRAC);
-            grid_outcomes[si].push((rps, ok));
-            load_t.row(vec![
-                format!("{rps:.2}"),
-                scheme.name().into(),
-                format!("{:.2}", m.p99_ttft_ms()),
-                format!("{:.2}", m.p99_tpot_ms()),
-                format!("{:.2}", m.e2e_us.median() / 1e3),
-                format!("{}/{}", m.completed, m.arrived),
-                format!("{:.1}", m.queue_depth.mean()),
-                if ok { "ok".into() } else { "VIOLATED".to_string() },
-            ]);
-        }
+    for (&(si, rps), m) in points.iter().zip(&grid_metrics) {
+        let ok = m.meets(&slo, MIN_COMPLETION_FRAC);
+        grid_outcomes[si].push((rps, ok));
+        load_t.row(vec![
+            format!("{rps:.2}"),
+            SCHEMES[si].name().into(),
+            format!("{:.2}", m.p99_ttft_ms()),
+            format!("{:.2}", m.p99_tpot_ms()),
+            format!("{:.2}", m.e2e_us.median() / 1e3),
+            format!("{}/{}", m.completed, m.arrived),
+            format!("{:.1}", m.queue_depth.mean()),
+            if ok { "ok".into() } else { "VIOLATED".to_string() },
+        ]);
     }
 
     // 3. Per-scheme saturation refinement.
@@ -181,11 +194,14 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         "serve_sweep summary: max sustained RPS under the shared SLO",
         &["scheme", "max sustained RPS", "vs EP"],
     );
-    let sustained: Vec<f64> = SCHEMES
-        .iter()
-        .enumerate()
-        .map(|(si, &s)| sweep.saturation_rps(s, &slo, &grid_outcomes[si]))
-        .collect();
+    // Each scheme's bisection is adaptive (probe N+1 depends on probe N)
+    // so probes within one scheme stay sequential; the three schemes'
+    // searches are independent and run concurrently.
+    let sustained: Vec<f64> = parallel_map(
+        (0..SCHEMES.len()).collect(),
+        sweep.threads,
+        |si| sweep.saturation_rps(SCHEMES[si], &slo, &grid_outcomes[si]),
+    );
     let ep_idx = SCHEMES.iter().position(|s| *s == StrategyKind::Ep).unwrap();
     for (si, &scheme) in SCHEMES.iter().enumerate() {
         let vs = if sustained[ep_idx] > 0.0 {
@@ -231,6 +247,24 @@ mod tests {
             fsedp > ep,
             "FSE-DP should sustain strictly more RPS than EP (got {fsedp} vs {ep})"
         );
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        // Thread count must never change results: identical load tables
+        // and identical max-sustained-RPS summaries.
+        let mk = |threads| ExpOpts {
+            quick: true,
+            out_dir: "/tmp/expstr-test-results".into(),
+            threads,
+            ..Default::default()
+        };
+        let serial = run(&mk(1));
+        let parallel = run(&mk(4));
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.to_csv(), b.to_csv());
+        }
     }
 
     #[test]

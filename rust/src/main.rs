@@ -30,7 +30,7 @@ use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR]"
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value."
     );
     ExitCode::FAILURE
 }
@@ -49,6 +49,10 @@ fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
             "--out" => {
                 i += 1;
                 opts.out_dir = args.get(i).cloned().unwrap_or_else(|| "results".into());
+            }
+            "--threads" => {
+                i += 1;
+                opts.threads = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(0);
             }
             other => rest.push(other.to_string()),
         }

@@ -1,0 +1,192 @@
+//! Deterministic layer-memo cache for the serving hot path.
+//!
+//! Low-batch decode repeats near-identical tiny MoE workloads for tens of
+//! thousands of layers per run, and the flow engine is a pure function of
+//! the sharded layer workload once the hardware, geometry, micro-slice
+//! count, and strategy are fixed. `LayerMemo` exploits that: an **exact**
+//! bounded map from the layer's canonical workload signature to the
+//! engine's timing/traffic outcome.
+//!
+//! ## Cache-key invariants
+//!
+//! * The key encodes the *entire* input the strategy sees that can vary
+//!   between layers of one `ServerSim`: the chiplet count plus, per
+//!   activated expert in ascending id order (`shard_layer` emits them
+//!   sorted), the expert id and its exact per-chiplet token counts. Token
+//!   totals alone would be wrong — trajectories depend on *which* chiplets
+//!   hold tokens.
+//! * Everything else the result depends on (hardware config, expert
+//!   geometry / slice count, strategy kind and its knobs) is fixed at
+//!   `ServerSim` construction, so one memo must never be shared across
+//!   simulators. The memo lives inside a single `ServerSim` and dies with
+//!   it.
+//! * Only stateless strategies may be memoized (`Strategy::is_stateless`);
+//!   Hydra's cross-layer popularity EMA both reads state and must observe
+//!   every layer, so the serving loop disables the memo for it.
+//!
+//! Because keys are exact and values are copies of the engine's own
+//! output, results are bit-identical with the cache on or off (asserted by
+//! `tests/perf_fastpath.rs`). Eviction is deterministic FIFO on insertion
+//! order, so the hit/miss sequence is reproducible run-to-run as well.
+
+use crate::workload::LayerWorkload;
+use std::collections::{HashMap, VecDeque};
+
+/// Timing/traffic outcome of one memoized MoE layer — exactly the fields
+/// the serving loop consumes from `LayerResult`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerOutcome {
+    pub makespan: u64,
+    pub ddr_bytes: u64,
+    pub d2d_bytes: u64,
+}
+
+/// Bounded exact-key memo with FIFO eviction and hit/miss accounting.
+pub struct LayerMemo {
+    map: HashMap<Vec<u32>, LayerOutcome>,
+    order: VecDeque<Vec<u32>>,
+    cap: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LayerMemo {
+    /// Default capacity: generous for the low-batch regime (distinct tiny
+    /// workloads number in the hundreds) while bounding memory for heavy
+    /// prefill mixes to a few MB of keys.
+    pub const DEFAULT_CAP: usize = 8192;
+
+    pub fn new(cap: usize) -> LayerMemo {
+        assert!(cap > 0, "memo capacity must be positive");
+        LayerMemo {
+            map: HashMap::with_capacity(cap.min(1024)),
+            order: VecDeque::new(),
+            cap,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Build the canonical signature of a sharded layer workload into a
+    /// reusable buffer — the serving hot path, where memo *hits* must be
+    /// allocation-free (the caller owns `key` across layers and clones it
+    /// only on the rare insert). `shard_layer` yields experts in ascending
+    /// id order, so no extra sort is needed; the layout
+    /// `[n_chiplets, (expert, counts...)*]` is unambiguous because every
+    /// expert contributes exactly `n_chiplets` counts.
+    pub fn key_into(wl: &LayerWorkload, key: &mut Vec<u32>) {
+        key.clear();
+        key.reserve(1 + wl.experts.len() * (wl.n_chiplets + 1));
+        key.push(wl.n_chiplets as u32);
+        for e in &wl.experts {
+            debug_assert_eq!(e.tokens_per_chiplet.len(), wl.n_chiplets);
+            key.push(e.expert as u32);
+            key.extend_from_slice(&e.tokens_per_chiplet);
+        }
+    }
+
+    /// Owned-key convenience wrapper around [`LayerMemo::key_into`].
+    pub fn key_of(wl: &LayerWorkload) -> Vec<u32> {
+        let mut key = Vec::new();
+        Self::key_into(wl, &mut key);
+        key
+    }
+
+    pub fn get(&mut self, key: &[u32]) -> Option<LayerOutcome> {
+        match self.map.get(key) {
+            Some(&v) => {
+                self.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: Vec<u32>, v: LayerOutcome) {
+        if self.map.len() >= self.cap {
+            if let Some(oldest) = self.order.pop_front() {
+                self.map.remove(&oldest);
+            }
+        }
+        if self.map.insert(key.clone(), v).is_none() {
+            self.order.push_back(key);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ExpertLoad;
+
+    fn wl(counts: &[&[u32]]) -> LayerWorkload {
+        let n_chiplets = counts[0].len();
+        let experts = counts
+            .iter()
+            .enumerate()
+            .map(|(e, c)| ExpertLoad {
+                expert: e as u16,
+                tokens_per_chiplet: c.to_vec(),
+                total: c.iter().sum(),
+            })
+            .collect();
+        LayerWorkload { experts, n_chiplets, total_tokens: 0 }
+    }
+
+    #[test]
+    fn key_distinguishes_chiplet_placement() {
+        // Same totals, different placement ⇒ different trajectories ⇒
+        // different keys.
+        let a = LayerMemo::key_of(&wl(&[&[4, 0, 0, 0]]));
+        let b = LayerMemo::key_of(&wl(&[&[0, 4, 0, 0]]));
+        assert_ne!(a, b);
+        assert_eq!(a, LayerMemo::key_of(&wl(&[&[4, 0, 0, 0]])));
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut m = LayerMemo::new(8);
+        let k = LayerMemo::key_of(&wl(&[&[1, 2]]));
+        assert_eq!(m.get(&k), None);
+        m.insert(k.clone(), LayerOutcome { makespan: 10, ddr_bytes: 20, d2d_bytes: 30 });
+        assert_eq!(
+            m.get(&k),
+            Some(LayerOutcome { makespan: 10, ddr_bytes: 20, d2d_bytes: 30 })
+        );
+        assert_eq!((m.hits, m.misses), (1, 1));
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_size() {
+        let mut m = LayerMemo::new(2);
+        for i in 0..5u32 {
+            m.insert(vec![i], LayerOutcome { makespan: i as u64, ddr_bytes: 0, d2d_bytes: 0 });
+        }
+        assert_eq!(m.len(), 2);
+        // Oldest evicted, newest present.
+        assert_eq!(m.get(&[0]), None);
+        assert!(m.get(&[4]).is_some());
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate_order() {
+        let mut m = LayerMemo::new(2);
+        m.insert(vec![1], LayerOutcome { makespan: 1, ddr_bytes: 0, d2d_bytes: 0 });
+        m.insert(vec![1], LayerOutcome { makespan: 1, ddr_bytes: 0, d2d_bytes: 0 });
+        m.insert(vec![2], LayerOutcome { makespan: 2, ddr_bytes: 0, d2d_bytes: 0 });
+        m.insert(vec![3], LayerOutcome { makespan: 3, ddr_bytes: 0, d2d_bytes: 0 });
+        assert_eq!(m.len(), 2);
+        assert!(m.get(&[3]).is_some());
+    }
+}

@@ -29,6 +29,16 @@ pub struct ServeMetrics {
     pub busy_cycles: u64,
     /// Simulated clock at the end of the run.
     pub end_cycles: u64,
+    /// DDR weight-stream bytes across all simulated MoE layers.
+    pub moe_ddr_bytes: u64,
+    /// D2D micro-slice bytes across all simulated MoE layers.
+    pub moe_d2d_bytes: u64,
+    /// Layer-memo cache hits (0 when the cache is disabled). The memo
+    /// affects only simulator wall-clock, never results — see
+    /// `server::memo` for the key invariants.
+    pub memo_hits: u64,
+    /// Layer-memo cache misses (every layer simulated live counts once).
+    pub memo_misses: u64,
 }
 
 impl ServeMetrics {
@@ -69,6 +79,15 @@ impl ServeMetrics {
             return 0.0;
         }
         self.completed as f64 / (self.busy_cycles as f64 / freq_hz)
+    }
+
+    /// Fraction of MoE layer simulations served from the layer memo.
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.memo_hits as f64 / total as f64
     }
 
     pub fn p99_ttft_ms(&self) -> f64 {

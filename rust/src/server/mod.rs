@@ -16,21 +16,27 @@
 //!   and a low-batch concurrency cap.
 //! * [`metrics`] — TTFT/TPOT/e2e/queue-depth summaries (p50/p95/p99) and
 //!   the SLO predicate, with auto-calibration against unloaded baselines.
+//! * [`memo`] — the deterministic layer-memo cache: identical sharded
+//!   layer workloads are costed once and replayed from a bounded
+//!   exact-key table (bit-identical results, large wall-clock win on
+//!   repetitive low-batch decode).
 //! * [`sim`] — the loop tying it together: batches are bridged into
-//!   `workload::IterationWorkload`s and costed with the same per-layer
-//!   arithmetic as `engine::timing`.
+//!   per-layer gating via `TraceGenerator::layer_gatings` and costed with
+//!   the same per-layer arithmetic as `engine::timing`.
 //!
 //! The RPS sweep (`experiments::serve_sweep`, `repro serve-sweep`) ramps
 //! offered load until SLO violation and reports each strategy's maximum
 //! sustained RPS.
 
 pub mod arrival;
+pub mod memo;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod sim;
 
 pub use arrival::RequestGenerator;
+pub use memo::{LayerMemo, LayerOutcome};
 pub use metrics::{mean_iteration_us, resolve_slo, ServeMetrics};
 pub use request::{Request, RequestState};
 pub use scheduler::ContinuousBatcher;

@@ -1,22 +1,30 @@
 //! The serving simulation loop: open-loop arrivals → admission queue →
 //! continuous batches → simulated iterations on the package.
 //!
-//! Each scheduling iteration the batcher's chunk plan is bridged into an
-//! `IterationWorkload` (the trace generator samples where those tokens
+//! Each scheduling iteration the batcher's chunk plan is bridged into
+//! per-layer gating (the trace generator samples where those tokens
 //! route), every layer is costed exactly like the offline evaluator —
 //! attention + the strategy's MoE makespan — and the simulated clock
 //! advances by the iteration's cycles. Requests complete against that
 //! clock, which is what makes TTFT/TPOT meaningful under load.
+//!
+//! Fast path (§Perf iteration 4): per-layer MoE results are served from a
+//! bounded exact-key memo (`super::memo`) when the strategy is stateless —
+//! low-batch decode repeats near-identical tiny workloads, so hit rates
+//! climb quickly. Results are bit-identical with the memo on or off; only
+//! wall-clock changes. Hit/miss counters surface in `ServeMetrics`.
 
 use super::arrival::RequestGenerator;
+use super::memo::{LayerMemo, LayerOutcome};
 use super::metrics::ServeMetrics;
 use super::scheduler::ContinuousBatcher;
 use crate::config::{Dataset, HardwareConfig, MoeModelConfig, ServePreset, StrategyKind};
 use crate::coordinator::{make_strategy, LayerCtx, Strategy};
 use crate::engine::timing::attention_cycles;
 use crate::moe::{default_num_slices, ExpertGeometry};
-use crate::workload::{shard_layer, TraceGenerator};
+use crate::workload::{shard_layer, RequestChunk, TraceGenerator};
 use std::collections::HashSet;
+use std::time::{Duration, Instant};
 
 /// How load is offered to the server.
 #[derive(Clone, Copy, Debug)]
@@ -42,6 +50,10 @@ pub struct ServerConfig {
     /// `drain_factor ×` the offered-load horizon (open loop only); still-
     /// unfinished requests count against the completion fraction.
     pub drain_factor: f64,
+    /// Layer-memo cache switch. On by default; results are bit-identical
+    /// either way (the memo only skips re-simulating identical layers).
+    /// Automatically disabled for stateful strategies (Hydra).
+    pub memo: bool,
 }
 
 impl Default for ServerConfig {
@@ -53,31 +65,44 @@ impl Default for ServerConfig {
             seed: 7,
             mode: LoadMode::Burst { n_requests: 8 },
             drain_factor: 4.0,
+            memo: true,
         }
     }
 }
 
+/// One iteration's simulated cost.
+struct IterCost {
+    cycles: u64,
+    ddr_bytes: u64,
+    d2d_bytes: u64,
+}
+
 /// The serving simulator: one strategy serving one request stream on one
-/// package. Deterministic for a given (config, preset, seed).
-pub struct ServerSim {
-    model: MoeModelConfig,
-    hw: HardwareConfig,
-    preset: ServePreset,
+/// package. Deterministic for a given (config, preset, seed). Borrows the
+/// model/hardware/preset configs so sweep loops can fan hundreds of
+/// simulators out of one set of configs without cloning them per run.
+pub struct ServerSim<'a> {
+    model: &'a MoeModelConfig,
+    hw: &'a HardwareConfig,
+    preset: &'a ServePreset,
     cfg: ServerConfig,
     geom: ExpertGeometry,
     strategy: Box<dyn Strategy>,
     gen: TraceGenerator,
     arrivals: RequestGenerator,
+    memo: Option<LayerMemo>,
+    /// Reusable memo-key buffer (see `LayerMemo::key_into`).
+    key_scratch: Vec<u32>,
 }
 
-impl ServerSim {
+impl<'a> ServerSim<'a> {
     pub fn new(
-        model: &MoeModelConfig,
-        hw: &HardwareConfig,
+        model: &'a MoeModelConfig,
+        hw: &'a HardwareConfig,
         dataset: Dataset,
-        preset: &ServePreset,
+        preset: &'a ServePreset,
         cfg: ServerConfig,
-    ) -> ServerSim {
+    ) -> ServerSim<'a> {
         preset.validate();
         let slices = if cfg.num_slices == 0 {
             default_num_slices(model, hw)
@@ -89,45 +114,97 @@ impl ServerSim {
             // Burst mode never samples gaps; any positive rate works.
             LoadMode::Burst { .. } => 1.0,
         };
+        let strategy = make_strategy(cfg.strategy, slices);
+        // The memo is only sound for strategies whose layer results are a
+        // pure function of the workload (see `server::memo`).
+        let memo = (cfg.memo && strategy.is_stateless())
+            .then(|| LayerMemo::new(LayerMemo::DEFAULT_CAP));
         ServerSim {
-            model: model.clone(),
-            hw: hw.clone(),
-            preset: preset.clone(),
-            cfg: cfg.clone(),
             geom: ExpertGeometry::new(model, hw, slices),
-            strategy: make_strategy(cfg.strategy, slices),
+            strategy,
             gen: TraceGenerator::new(model, dataset, cfg.seed),
             arrivals: RequestGenerator::new(preset, rate, hw.freq_hz, cfg.seed),
+            memo,
+            key_scratch: Vec::new(),
+            model,
+            hw,
+            preset,
+            cfg,
         }
     }
 
     /// Cost one scheduling iteration: attention + MoE per layer, exactly
-    /// the offline evaluator's per-iteration arithmetic.
-    fn iteration_cycles(&mut self, iter_idx: usize, plan: Vec<crate::workload::RequestChunk>) -> u64 {
-        let it = self.gen.iteration_for_chunks(iter_idx, plan);
+    /// the offline evaluator's per-iteration arithmetic. MoE layers go
+    /// through the memo when enabled.
+    fn iteration_cycles(&mut self, iter_idx: usize, plan: &[RequestChunk]) -> IterCost {
+        let layers = self.gen.layer_gatings(iter_idx, plan);
         let n_experts_total = self.model.n_experts + self.model.n_shared;
         let none = HashSet::new();
-        let mut cycles = 0u64;
-        for gating in &it.layers {
+        let mut cost = IterCost { cycles: 0, ddr_bytes: 0, d2d_bytes: 0 };
+        for gating in &layers {
             let wl = shard_layer(gating, n_experts_total, self.hw.n_chiplets(), &none);
-            cycles +=
-                attention_cycles(&self.model, &self.hw, self.cfg.avg_context, wl.total_tokens as usize);
-            if !wl.experts.is_empty() {
-                let ctx = LayerCtx {
-                    hw: &self.hw,
-                    geom: &self.geom,
-                    workload: &wl,
-                    record_spans: false,
-                };
-                cycles += self.strategy.run_layer(&ctx).makespan;
+            cost.cycles += attention_cycles(
+                self.model,
+                self.hw,
+                self.cfg.avg_context,
+                wl.total_tokens as usize,
+            );
+            if wl.experts.is_empty() {
+                continue;
             }
+            // Memo lookup builds the key into a sim-owned scratch buffer,
+            // so hits are allocation-free; the key is cloned only on the
+            // rare miss that inserts.
+            let cached = match self.memo.as_mut() {
+                Some(memo) => {
+                    LayerMemo::key_into(&wl, &mut self.key_scratch);
+                    memo.get(&self.key_scratch)
+                }
+                None => None,
+            };
+            let outcome = match cached {
+                Some(hit) => hit,
+                None => {
+                    let ctx = LayerCtx {
+                        hw: self.hw,
+                        geom: &self.geom,
+                        workload: &wl,
+                        record_spans: false,
+                    };
+                    let r = self.strategy.run_layer(&ctx);
+                    let fresh = LayerOutcome {
+                        makespan: r.makespan,
+                        ddr_bytes: r.ddr_bytes,
+                        d2d_bytes: r.d2d_bytes,
+                    };
+                    if let Some(memo) = self.memo.as_mut() {
+                        memo.insert(self.key_scratch.clone(), fresh);
+                    }
+                    fresh
+                }
+            };
+            cost.cycles += outcome.makespan;
+            cost.ddr_bytes += outcome.ddr_bytes;
+            cost.d2d_bytes += outcome.d2d_bytes;
         }
-        cycles
+        cost
     }
 
     /// Run the configured load to completion (or to the overload cutoff)
     /// and return the metrics.
     pub fn run(&mut self) -> ServeMetrics {
+        self.run_with_timer(&mut |_| {})
+    }
+
+    /// Like [`ServerSim::run`], additionally reporting each scheduling
+    /// iteration's *wall-clock* simulation cost to `on_iter_wall` — the
+    /// honest way to measure a per-iteration latency tail (the perf bench
+    /// used to divide the whole-run tail by the mean iteration count,
+    /// which is not a tail).
+    pub fn run_with_timer(
+        &mut self,
+        on_iter_wall: &mut dyn FnMut(Duration),
+    ) -> ServeMetrics {
         let mut pending = match self.cfg.mode {
             LoadMode::Open { duration_s, .. } => {
                 let horizon = (duration_s * self.hw.freq_hz) as u64;
@@ -143,7 +220,7 @@ impl ServerSim {
         };
 
         let mut metrics = ServeMetrics { arrived: pending.len(), ..Default::default() };
-        let mut batcher = ContinuousBatcher::new(&self.preset);
+        let mut batcher = ContinuousBatcher::new(self.preset);
         let mut clock = 0u64;
         let mut iter_idx = 0usize;
         // Reverse so pop() walks arrivals in order without shifting.
@@ -174,9 +251,13 @@ impl ServerSim {
                 .push(plan.iter().map(|c| c.tokens).sum::<usize>() as f64);
             metrics.queue_depth.push(batcher.queue_depth() as f64);
 
-            let cycles = self.iteration_cycles(iter_idx, plan.clone());
-            clock += cycles;
-            metrics.busy_cycles += cycles;
+            let t_wall = Instant::now();
+            let cost = self.iteration_cycles(iter_idx, &plan);
+            on_iter_wall(t_wall.elapsed());
+            clock += cost.cycles;
+            metrics.busy_cycles += cost.cycles;
+            metrics.moe_ddr_bytes += cost.ddr_bytes;
+            metrics.moe_d2d_bytes += cost.d2d_bytes;
             metrics.iterations += 1;
             iter_idx += 1;
 
@@ -192,6 +273,10 @@ impl ServerSim {
             }
         }
         metrics.end_cycles = clock;
+        if let Some(memo) = &self.memo {
+            metrics.memo_hits = memo.hits;
+            metrics.memo_misses = memo.misses;
+        }
         metrics
     }
 
@@ -210,17 +295,16 @@ mod tests {
         ServerConfig { strategy, mode, seed: 7, ..Default::default() }
     }
 
-    fn sim(mode: LoadMode, strategy: StrategyKind) -> ServerSim {
+    fn run_sim(mode: LoadMode, strategy: StrategyKind) -> ServeMetrics {
         let hw = presets::mcm_2x2();
         let model = presets::tiny_moe();
         let preset = presets::serve_chat();
-        ServerSim::new(&model, &hw, Dataset::C4, &preset, quick_cfg(mode, strategy))
+        ServerSim::new(&model, &hw, Dataset::C4, &preset, quick_cfg(mode, strategy)).run()
     }
 
     #[test]
     fn burst_completes_all_requests() {
-        let mut s = sim(LoadMode::Burst { n_requests: 6 }, StrategyKind::FseDpPaired);
-        let m = s.run();
+        let m = run_sim(LoadMode::Burst { n_requests: 6 }, StrategyKind::FseDpPaired);
         assert_eq!(m.arrived, 6);
         assert_eq!(m.completed, 6);
         assert!(m.iterations > 0);
@@ -229,6 +313,7 @@ mod tests {
         assert_eq!(m.ttft_us.len(), 6);
         assert!(m.ttft_us.min() > 0.0);
         assert!((m.completion_frac() - 1.0).abs() < 1e-12);
+        assert!(m.moe_ddr_bytes > 0);
     }
 
     #[test]
@@ -236,8 +321,7 @@ mod tests {
         // ~20 requests at a rate well under service capacity: the server
         // should finish them all and spend time idle (end >= busy).
         let mode = LoadMode::Open { rate_rps: 20.0, duration_s: 1.0 };
-        let mut s = sim(mode, StrategyKind::FseDpPaired);
-        let m = s.run();
+        let m = run_sim(mode, StrategyKind::FseDpPaired);
         assert!(m.arrived > 0);
         assert_eq!(m.completed, m.arrived);
         assert!(m.end_cycles >= m.busy_cycles);
@@ -247,8 +331,7 @@ mod tests {
     fn overload_hits_cutoff_and_reports_incompletes() {
         // Offered load far beyond anything the package can serve.
         let mode = LoadMode::Open { rate_rps: 50_000.0, duration_s: 0.02 };
-        let mut s = sim(mode, StrategyKind::Ep);
-        let m = s.run();
+        let m = run_sim(mode, StrategyKind::Ep);
         assert!(m.arrived > 100);
         assert!(m.completion_frac() < 0.9, "frac {}", m.completion_frac());
         // Queue visibly backed up.
@@ -258,21 +341,56 @@ mod tests {
     #[test]
     fn deterministic_for_seed() {
         let mode = LoadMode::Open { rate_rps: 400.0, duration_s: 0.05 };
-        let a = sim(mode, StrategyKind::FseDpPaired).run();
-        let b = sim(mode, StrategyKind::FseDpPaired).run();
+        let a = run_sim(mode, StrategyKind::FseDpPaired);
+        let b = run_sim(mode, StrategyKind::FseDpPaired);
         assert_eq!(a.arrived, b.arrived);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.end_cycles, b.end_cycles);
         assert_eq!(a.iterations, b.iterations);
         assert!((a.ttft_us.mean() - b.ttft_us.mean()).abs() < 1e-12);
+        // Deterministic memo: identical hit/miss sequences too.
+        assert_eq!((a.memo_hits, a.memo_misses), (b.memo_hits, b.memo_misses));
+    }
+
+    #[test]
+    fn memo_on_off_bit_identical() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let mode = LoadMode::Open { rate_rps: 300.0, duration_s: 0.05 };
+        let mut on_cfg = quick_cfg(mode, StrategyKind::FseDpPaired);
+        on_cfg.memo = true;
+        let mut off_cfg = quick_cfg(mode, StrategyKind::FseDpPaired);
+        off_cfg.memo = false;
+        let on = ServerSim::new(&model, &hw, Dataset::C4, &preset, on_cfg).run();
+        let off = ServerSim::new(&model, &hw, Dataset::C4, &preset, off_cfg).run();
+        assert_eq!(on.end_cycles, off.end_cycles);
+        assert_eq!(on.busy_cycles, off.busy_cycles);
+        assert_eq!(on.iterations, off.iterations);
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.moe_ddr_bytes, off.moe_ddr_bytes);
+        assert_eq!(on.moe_d2d_bytes, off.moe_d2d_bytes);
+        assert!((on.ttft_us.mean() - off.ttft_us.mean()).abs() < 1e-12);
+        assert!((on.tpot_us.mean() - off.tpot_us.mean()).abs() < 1e-12);
+        // The cache actually engaged on the repetitive decode workload...
+        assert!(on.memo_hits > 0, "memo never hit");
+        // ...and the disabled path reports no counters.
+        assert_eq!((off.memo_hits, off.memo_misses), (0, 0));
+    }
+
+    #[test]
+    fn memo_disabled_for_stateful_hydra() {
+        let m = run_sim(LoadMode::Burst { n_requests: 4 }, StrategyKind::Hydra);
+        assert_eq!((m.memo_hits, m.memo_misses), (0, 0));
+        assert!(m.busy_cycles > 0);
     }
 
     #[test]
     fn fsedp_serves_no_slower_than_ep_on_burst() {
         // Same burst, same seed: FSE-DP's makespan advantage shows up as
         // less busy time to serve identical work.
-        let a = sim(LoadMode::Burst { n_requests: 6 }, StrategyKind::FseDpPaired).run();
-        let b = sim(LoadMode::Burst { n_requests: 6 }, StrategyKind::Ep).run();
+        let a = run_sim(LoadMode::Burst { n_requests: 6 }, StrategyKind::FseDpPaired);
+        let b = run_sim(LoadMode::Burst { n_requests: 6 }, StrategyKind::Ep);
         // Identical token streams (same seed), so busy time compares the
         // schedulers directly; small tolerance keeps this off a knife edge.
         assert!(

@@ -28,6 +28,18 @@ impl BufferTracker {
         self.capacity
     }
 
+    /// Reset for reuse across layers; `n_chiplets` and `capacity` may
+    /// differ between calls (the arena path never reallocates when the
+    /// chiplet count is unchanged).
+    pub fn reset(&mut self, n_chiplets: usize, capacity: u64) {
+        self.capacity = capacity;
+        self.current.clear();
+        self.current.resize(n_chiplets, 0);
+        self.peak.clear();
+        self.peak.resize(n_chiplets, 0);
+        self.overcommits = 0;
+    }
+
     pub fn occupied(&self, c: ChipletId) -> u64 {
         self.current[c]
     }

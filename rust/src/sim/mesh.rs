@@ -30,6 +30,14 @@ pub struct Mesh {
     bytes_per_cycle: f64,
 }
 
+impl Default for Mesh {
+    /// Degenerate 0×0 mesh: a placeholder until `reinit` sees real
+    /// hardware (used by arena construction before the first layer).
+    fn default() -> Self {
+        Mesh { rows: 0, cols: 0, links: Vec::new(), hop_cycles: 0, bytes_per_cycle: 1.0 }
+    }
+}
+
 impl Mesh {
     pub fn new(hw: &HardwareConfig) -> Self {
         let rows = hw.mesh_rows;
@@ -47,6 +55,20 @@ impl Mesh {
 
     pub fn n_chiplets(&self) -> usize {
         self.rows * self.cols
+    }
+
+    /// Reset for a fresh layer, rebuilding only when the hardware shape
+    /// changed (arena reuse: link-state vectors keep their allocation).
+    pub fn reinit(&mut self, hw: &HardwareConfig) {
+        if self.rows == hw.mesh_rows && self.cols == hw.mesh_cols {
+            self.hop_cycles = hw.d2d_hop_cycles();
+            self.bytes_per_cycle = hw.d2d_bytes_per_cycle();
+            for l in &mut self.links {
+                l.reset();
+            }
+        } else {
+            *self = Mesh::new(hw);
+        }
     }
 
     fn coords(&self, c: ChipletId) -> (usize, usize) {

@@ -36,6 +36,13 @@ impl SerialResource {
         self.busy_until
     }
 
+    /// Return to the initial idle state (arena reuse across layers).
+    pub fn reset(&mut self) {
+        self.busy_until = 0;
+        self.busy_cycles = 0;
+        self.requests = 0;
+    }
+
     pub fn busy_cycles(&self) -> u64 {
         self.busy_cycles
     }

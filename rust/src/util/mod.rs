@@ -1,16 +1,19 @@
 //! Small self-contained utilities.
 //!
 //! The build environment is fully offline with a fixed vendored crate set
-//! (no `rand`, `serde`, `clap`, `criterion`), so the crate carries its own
-//! deterministic PRNG, a minimal JSON reader for the artifact manifest, a
-//! fixed-width table printer for experiment output, and summary statistics.
+//! (no `rand`, `serde`, `clap`, `criterion`, `rayon`), so the crate
+//! carries its own deterministic PRNG, a minimal JSON reader for the
+//! artifact manifest, a fixed-width table printer for experiment output,
+//! summary statistics, and a scoped worker pool for parallel sweeps.
 
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
 pub use json::Json;
+pub use parallel::{parallel_map, pool_size};
 pub use rng::Rng;
 pub use stats::Summary;
 pub use table::Table;

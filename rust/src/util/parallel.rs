@@ -1,0 +1,100 @@
+//! Hand-rolled scoped worker pool for embarrassingly parallel sweeps.
+//!
+//! The offline crate set has no `rayon`, so this is a minimal
+//! `std::thread::scope`-based fan-out: a shared FIFO of indexed work items
+//! drained by N workers, with results written back by index so the output
+//! order is **always** identical to the input order regardless of thread
+//! count or scheduling. Determinism therefore reduces to the closure being
+//! a pure function of its item — which every sweep point satisfies by
+//! constructing its own seeded `ServerSim`/`E2eSimulator`.
+//!
+//! `REPRO_THREADS` overrides the pool size globally (`1` forces the serial
+//! path, useful for A/B-ing determinism and measuring parallel speedup).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default pool size: `REPRO_THREADS` if set to a positive integer, else
+/// the machine's available parallelism (1 when unknown).
+pub fn pool_size() -> usize {
+    match std::env::var("REPRO_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n > 0 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Map `f` over `items` on up to `threads` worker threads (`0` = auto via
+/// [`pool_size`]), returning results in input order. Falls back to a plain
+/// serial loop for `threads <= 1` or fewer than two items. A panicking
+/// worker propagates its panic to the caller when the scope joins.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = if threads == 0 { pool_size() } else { threads };
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let work: Mutex<VecDeque<(usize, T)>> = Mutex::new(items.into_iter().enumerate().collect());
+    let mut slots: Vec<Option<R>> = Vec::new();
+    slots.resize_with(n, || None);
+    let results = Mutex::new(slots);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                // Take the next item under the lock, then compute outside it.
+                let next = work.lock().unwrap().pop_front();
+                let Some((i, item)) = next else { break };
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker dropped a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let want: Vec<i64> = (0..100).map(|x| x * x).collect();
+        let got = parallel_map((0..100i64).collect(), 4, |x| x * x);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..57).collect();
+        let serial = parallel_map(items.clone(), 1, |x| x.wrapping_mul(0x9E37_79B9).rotate_left(13));
+        let parallel = parallel_map(items, 8, |x| x.wrapping_mul(0x9E37_79B9).rotate_left(13));
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_edge_sizes() {
+        assert_eq!(parallel_map(Vec::<u32>::new(), 4, |x| x), Vec::<u32>::new());
+        assert_eq!(parallel_map(vec![7], 4, |x| x + 1), vec![8]);
+        // threads=0 resolves to the auto pool size and still completes.
+        assert_eq!(parallel_map(vec![1, 2, 3], 0, |x| x * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        assert_eq!(parallel_map(vec![1, 2], 64, |x| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn pool_size_is_positive() {
+        assert!(pool_size() >= 1);
+    }
+}

@@ -265,6 +265,15 @@ impl TraceGenerator {
         iter_idx: usize,
         chunks: Vec<RequestChunk>,
     ) -> IterationWorkload {
+        let layers = self.layer_gatings(iter_idx, &chunks);
+        IterationWorkload { chunks, layers }
+    }
+
+    /// Per-layer gating only, borrowing the chunk plan — the serving hot
+    /// path, which owns its plan and must not clone it per iteration.
+    /// `iteration_for_chunks` is this plus the plan bundled into an
+    /// `IterationWorkload` for callers that want the composed view.
+    pub fn layer_gatings(&mut self, iter_idx: usize, chunks: &[RequestChunk]) -> Vec<LayerGating> {
         let k = self.model.top_k;
         let e = self.model.n_experts;
         let shared: Vec<ExpertId> =
@@ -281,7 +290,7 @@ impl TraceGenerator {
                 .collect();
 
             let mut gates = Vec::with_capacity(chunks.iter().map(|c| c.tokens).sum());
-            for chunk in &chunks {
+            for chunk in chunks {
                 for _ in 0..chunk.tokens {
                     let experts = sample_topk(&mut jitter_rng, &weights, k);
                     let mut all = experts;
@@ -291,7 +300,7 @@ impl TraceGenerator {
             }
             layers.push(LayerGating { tokens: gates });
         }
-        IterationWorkload { chunks, layers }
+        layers
     }
 }
 

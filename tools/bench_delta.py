@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Compare two perf_hotpath BENCH_serve.json snapshots and print a delta
+table. Warn-only: regressions emit GitHub `::warning::` annotations but the
+exit code is always 0, so perf noise never blocks CI — the table is for
+humans tracking the perf trajectory across PRs.
+
+Usage: bench_delta.py PREVIOUS.json CURRENT.json
+"""
+
+import json
+import sys
+
+# ops_per_s drop beyond this fraction is annotated as a regression.
+REGRESSION_FRAC = 0.10
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    return data
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return 0
+    try:
+        prev, cur = load(sys.argv[1]), load(sys.argv[2])
+    except (OSError, ValueError) as e:
+        print(f"::notice::bench delta skipped: {e}")
+        return 0
+
+    prev_by_name = {r["name"]: r for r in prev.get("results", [])}
+    rows = []
+    warnings = []
+    for r in cur.get("results", []):
+        name = r["name"]
+        p = prev_by_name.get(name)
+        if p is None or not p.get("ops_per_s"):
+            rows.append((name, p, r, None))
+            continue
+        ratio = r["ops_per_s"] / p["ops_per_s"]
+        rows.append((name, p, r, ratio))
+        if ratio < 1.0 - REGRESSION_FRAC:
+            warnings.append(
+                f"perf regression: {name} ops/s {p['ops_per_s']:.1f} -> "
+                f"{r['ops_per_s']:.1f} ({(1 - ratio) * 100:.1f}% slower)"
+            )
+
+    w = max([len(n) for n, *_ in rows] + [12])
+    print(f"{'bench':<{w}}  {'prev ops/s':>12}  {'cur ops/s':>12}  {'delta':>8}  {'cur p99 us':>10}")
+    for name, p, r, ratio in rows:
+        prev_ops = f"{p['ops_per_s']:.1f}" if p else "-"
+        delta = f"{(ratio - 1) * 100:+.1f}%" if ratio else "new"
+        print(f"{name:<{w}}  {prev_ops:>12}  {r['ops_per_s']:>12.1f}  {delta:>8}  {r['p99_us']:>10.1f}")
+    for key in ("pool_size", "memo_hit_rate"):
+        if key in cur:
+            print(f"{key}: {cur[key]}" + (f" (prev {prev[key]})" if key in prev else ""))
+
+    for msg in warnings:
+        print(f"::warning::{msg}")
+    if not warnings:
+        print("no regressions beyond the {:.0f}% noise floor".format(REGRESSION_FRAC * 100))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,10 @@
 //!     tail, not the run tail divided by the mean iteration count);
 //!  4. the parallel sweep executor: independent seeded burst serves fanned
 //!     across the worker pool vs. the serial loop;
-//!  5. numeric serving latency through PJRT (when artifacts exist).
+//!  5. the L5 cluster hot paths: per-arrival router decision throughput
+//!     (`router_route/*`) and cluster stepping (`cluster_step/*` — the
+//!     candidate-selection + delivery + package-step loop over 4 packages);
+//!  6. numeric serving latency through PJRT (when artifacts exist).
 //!
 //! Besides the human-readable output, results are written to
 //! `BENCH_serve.json` (in the cargo working directory) as
@@ -21,12 +24,13 @@
 //! `cargo bench --bench perf_hotpath`; set `REPRO_QUICK=1` (CI) for
 //! reduced reps.
 
-use expert_streaming::config::{presets, Dataset, StrategyKind};
+use expert_streaming::cluster::{make_router, ClusterSim, RouterPolicy};
+use expert_streaming::config::{presets, ClusterConfig, Dataset, RouterKind, StrategyKind};
 use expert_streaming::coordinator::{make_strategy, LayerCtx};
 use expert_streaming::engine::serve::NumericEngine;
 use expert_streaming::moe::{default_num_slices, ExpertGeometry};
 use expert_streaming::runtime::artifacts::Manifest;
-use expert_streaming::server::{LoadMode, ServerConfig, ServerSim};
+use expert_streaming::server::{LoadMode, Request, ServerConfig, ServerSim};
 use expert_streaming::util::{parallel_map, pool_size, Summary};
 use expert_streaming::workload::{shard_layer, TraceGenerator};
 use std::collections::HashSet;
@@ -233,6 +237,81 @@ fn bench_parallel_sweep(records: &mut Vec<BenchRecord>) {
     }
 }
 
+/// Router decision throughput: the per-arrival cost of each policy on an
+/// 8-package view. Routed in batches of 256 per timed op so the measured
+/// op is not dominated by the timer itself.
+fn bench_router_decisions(records: &mut Vec<BenchRecord>) {
+    const BATCH: usize = 256;
+    let model = presets::tiny_moe();
+    let cluster = ClusterConfig { n_packages: 8, ..presets::cluster_pod() };
+    let req = Request::new(1, 0, 96, 24);
+    for kind in [RouterKind::Jsq, RouterKind::PowerOfTwo, RouterKind::ExpertAffinity] {
+        let mut router =
+            make_router(&ClusterConfig { router: kind, ..cluster.clone() }, &model, 7);
+        // Uneven synthetic loads so policies take their interesting paths.
+        let loads: Vec<usize> = (0..8).map(|i| (i * 37) % 11).collect();
+        let (batches_per_s, p99_batch_us) = measure(reps(2000), || {
+            for _ in 0..BATCH {
+                std::hint::black_box(router.route(&req, &loads));
+            }
+        });
+        let decisions_per_s = batches_per_s * BATCH as f64;
+        // Per-decision share of the batch tail, so the JSON's p99_us is on
+        // the same per-op scale as every other record (a single decision
+        // is too fast to time individually without the timer dominating).
+        let p99_us = p99_batch_us / BATCH as f64;
+        println!(
+            "[perf] router {:<12} {:>10.0} decisions/s (p99-batch/{BATCH} {:>7.3} us)",
+            kind.name(),
+            decisions_per_s,
+            p99_us
+        );
+        records.push(BenchRecord {
+            name: format!("router_route/{}", kind.name()),
+            ops_per_s: decisions_per_s,
+            p99_us,
+        });
+    }
+}
+
+/// Cluster stepping throughput: a 4-package JSQ burst, counting scheduling
+/// iterations across all packages — the L5 hot loop (candidate selection +
+/// delivery + package step).
+fn bench_cluster_step(records: &mut Vec<BenchRecord>) {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let cluster = ClusterConfig {
+        n_packages: 4,
+        router: RouterKind::Jsq,
+        ..presets::cluster_pod()
+    };
+    let n = reps(10);
+    let mut iterations = 0usize;
+    let mut seed = 0u64;
+    let (runs_per_s, p99_run_us) = measure(n, || {
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Burst { n_requests: 32 },
+            seed,
+            ..Default::default()
+        };
+        let mut sim = ClusterSim::new(&model, &hw, Dataset::C4, &preset, cfg, cluster.clone());
+        let m = sim.run();
+        iterations += m.iterations;
+        seed += 1;
+    });
+    let iters_per_s = runs_per_s * iterations as f64 / n as f64;
+    println!(
+        "[perf] cluster step (4 pkg, JSQ): {iters_per_s:.0} sched-iters/s ({runs_per_s:.1} burst-serves/s)"
+    );
+    records.push(BenchRecord {
+        name: "cluster_step/jsq4".into(),
+        ops_per_s: iters_per_s,
+        p99_us: p99_run_us,
+    });
+}
+
 fn bench_numeric_serving(records: &mut Vec<BenchRecord>) {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
@@ -291,6 +370,8 @@ fn main() {
     bench_trace_generation(&mut records);
     let memo_hit_rate = bench_serve_iteration(&mut records);
     bench_parallel_sweep(&mut records);
+    bench_router_decisions(&mut records);
+    bench_cluster_step(&mut records);
     bench_numeric_serving(&mut records);
     write_json(&records, memo_hit_rate);
 }

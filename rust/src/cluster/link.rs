@@ -1,0 +1,85 @@
+//! Inter-package link model: the serdes-class interconnect joining
+//! packages into a cluster, plus the byte-count formulas for what actually
+//! crosses it.
+//!
+//! Two payload classes exist at this tier:
+//! * **Hand-off** — delivering a routed request to its package means
+//!   shipping the prompt's token embeddings (`prompt_len × d_model`
+//!   activations). Charged on every delivery except the pass-through
+//!   router's (which models the front-end living on the package itself).
+//! * **KV migration** — moving a partially prefilled request between
+//!   packages drags its per-layer K/V prefix along
+//!   (`prefilled × n_layers × 2 × d_model` activations). This is the
+//!   expensive case and the reason the rebalancer prefers donors that are
+//!   still queued (zero KV).
+//!
+//! All conversions to cycles happen once at construction, mirroring
+//! `HardwareConfig`'s bandwidth precomputation.
+
+use crate::config::{ClusterConfig, HardwareConfig, MoeModelConfig};
+
+/// Cycle-domain view of the cluster interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterLink {
+    bytes_per_cycle: f64,
+    latency_cycles: u64,
+}
+
+impl ClusterLink {
+    pub fn new(cluster: &ClusterConfig, hw: &HardwareConfig) -> ClusterLink {
+        cluster.validate();
+        ClusterLink {
+            bytes_per_cycle: cluster.serdes_gbps * 1e9 / hw.freq_hz,
+            latency_cycles: (cluster.serdes_lat_us * 1e-6 * hw.freq_hz).ceil() as u64,
+        }
+    }
+
+    /// Cycles to move `bytes` over the link (latency + serialization).
+    pub fn transfer_cycles(&self, bytes: u64) -> u64 {
+        self.latency_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+
+    pub fn latency_cycles(&self) -> u64 {
+        self.latency_cycles
+    }
+}
+
+/// Bytes shipped to hand a routed request off to a package: the prompt's
+/// token embeddings.
+pub fn handoff_bytes(model: &MoeModelConfig, act_bytes: u64, prompt_tokens: usize) -> u64 {
+    prompt_tokens as u64 * model.token_bytes(act_bytes)
+}
+
+/// Bytes dragged along when a request with `prefilled` tokens of built KV
+/// migrates: K and V per layer for every prefilled position.
+pub fn kv_bytes(model: &MoeModelConfig, act_bytes: u64, prefilled_tokens: usize) -> u64 {
+    prefilled_tokens as u64 * model.n_layers as u64 * 2 * model.token_bytes(act_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn link_cycle_arithmetic() {
+        let hw = presets::mcm_2x2();
+        let cluster = presets::cluster_pod();
+        let link = ClusterLink::new(&cluster, &hw);
+        // 64 GB/s @ 800 MHz = 80 B/cycle; 1.5 us = 1200 cycles latency.
+        assert_eq!(link.latency_cycles(), 1200);
+        assert_eq!(link.transfer_cycles(8000), 1200 + 100);
+        assert_eq!(link.transfer_cycles(0), 1200);
+    }
+
+    #[test]
+    fn kv_dwarfs_handoff() {
+        // The whole point of preferring queued donors: migrating built KV
+        // costs n_layers * 2 more than re-shipping the prompt.
+        let model = presets::tiny_moe();
+        let h = handoff_bytes(&model, 2, 96);
+        let kv = kv_bytes(&model, 2, 96);
+        assert_eq!(h, 96 * 512 * 2);
+        assert_eq!(kv, h * model.n_layers as u64 * 2);
+    }
+}

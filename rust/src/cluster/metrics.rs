@@ -1,0 +1,225 @@
+//! Cluster-level metrics: per-package `ServeMetrics` plus the aggregated
+//! view the sweep reports — latency tails over the union of completions,
+//! goodput, link traffic, and load-imbalance statistics.
+//!
+//! Aggregation is **canonical**: per-request latency samples from all
+//! packages are merged and sorted (total order) before the summary is
+//! built, and imbalance statistics sort their per-package inputs, so the
+//! aggregate is bit-identical under any permutation of the package list —
+//! one of the determinism properties `tests/cluster_determinism.rs` pins.
+
+use crate::config::SloConfig;
+use crate::server::ServeMetrics;
+use crate::util::Summary;
+
+/// Aggregated outcome of one cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    /// Merged time-to-first-token distribution (µs, simulated).
+    pub ttft_us: Summary,
+    /// Merged time-per-output-token distribution.
+    pub tpot_us: Summary,
+    /// Merged end-to-end latency distribution.
+    pub e2e_us: Summary,
+    /// Requests offered to the cluster front-end.
+    pub arrived: usize,
+    /// Requests completed across all packages.
+    pub completed: usize,
+    /// Scheduling iterations summed over packages.
+    pub iterations: usize,
+    /// Latest package clock — the cluster's end-of-run time.
+    pub end_cycles: u64,
+    /// Requests the router placed on each package (after migration).
+    pub routed: Vec<usize>,
+    /// Prompt-activation bytes shipped over the inter-package link for
+    /// deliveries and migrations.
+    pub handoff_bytes: u64,
+    /// KV-prefix bytes dragged along by migrated in-flight prefills.
+    pub kv_migration_bytes: u64,
+    /// Requests moved between packages by the rebalancer.
+    pub migrations: usize,
+    /// Untouched per-package metrics, package order.
+    pub per_package: Vec<ServeMetrics>,
+}
+
+impl ClusterMetrics {
+    /// Merge per-package results into the cluster view. `arrived` is the
+    /// front-end's own count (it includes requests generated but never
+    /// deliverable before the cutoff).
+    pub fn aggregate(
+        per_package: Vec<ServeMetrics>,
+        routed: Vec<usize>,
+        arrived: usize,
+        handoff_bytes: u64,
+        kv_migration_bytes: u64,
+        migrations: usize,
+    ) -> ClusterMetrics {
+        assert_eq!(per_package.len(), routed.len());
+        let merge = |pick: &dyn Fn(&ServeMetrics) -> &Summary| -> Summary {
+            let mut all: Vec<f64> = per_package
+                .iter()
+                .flat_map(|m| pick(m).samples().iter().copied())
+                .collect();
+            all.sort_unstable_by(f64::total_cmp);
+            let mut s = Summary::new();
+            s.extend(&all);
+            s
+        };
+        ClusterMetrics {
+            ttft_us: merge(&|m| &m.ttft_us),
+            tpot_us: merge(&|m| &m.tpot_us),
+            e2e_us: merge(&|m| &m.e2e_us),
+            arrived,
+            completed: per_package.iter().map(|m| m.completed).sum(),
+            iterations: per_package.iter().map(|m| m.iterations).sum(),
+            end_cycles: per_package.iter().map(|m| m.end_cycles).max().unwrap_or(0),
+            routed,
+            handoff_bytes,
+            kv_migration_bytes,
+            migrations,
+            per_package,
+        }
+    }
+
+    pub fn n_packages(&self) -> usize {
+        self.per_package.len()
+    }
+
+    pub fn completion_frac(&self) -> f64 {
+        if self.arrived == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.arrived as f64
+    }
+
+    /// Completed requests per simulated second, against the slowest
+    /// package's clock.
+    pub fn goodput_rps(&self, freq_hz: f64) -> f64 {
+        if self.end_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.end_cycles as f64 / freq_hz)
+    }
+
+    pub fn p99_ttft_ms(&self) -> f64 {
+        self.ttft_us.p99() / 1e3
+    }
+
+    pub fn p99_tpot_ms(&self) -> f64 {
+        self.tpot_us.p99() / 1e3
+    }
+
+    /// The single-package SLO predicate lifted to the cluster: the tails
+    /// are taken over the union of completions, so one overloaded package
+    /// fails the whole cluster — which is the operator's view.
+    pub fn meets(&self, slo: &SloConfig, min_completion_frac: f64) -> bool {
+        debug_assert!(slo.ttft_p99_ms > 0.0 && slo.tpot_p99_ms > 0.0);
+        self.completion_frac() >= min_completion_frac
+            && self.p99_ttft_ms() <= slo.ttft_p99_ms
+            && self.p99_tpot_ms() <= slo.tpot_p99_ms
+    }
+
+    /// Busy-time imbalance: max over mean of per-package busy cycles
+    /// (1.0 = perfectly even, n = everything on one of n packages).
+    /// Inputs are sorted first so the statistic is bit-identical under
+    /// package permutation.
+    pub fn busy_imbalance(&self) -> f64 {
+        imbalance(self.per_package.iter().map(|m| m.busy_cycles as f64))
+    }
+
+    /// Coefficient of variation of the router's placement counts —
+    /// the placement-side twin of `busy_imbalance` (a router can place
+    /// evenly yet load unevenly when request sizes skew).
+    pub fn routed_cv(&self) -> f64 {
+        let mut xs: Vec<f64> = self.routed.iter().map(|&c| c as f64).collect();
+        xs.sort_unstable_by(f64::total_cmp);
+        let n = xs.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        var.sqrt() / mean
+    }
+}
+
+/// max/mean of a sequence (sorted internally for permutation stability).
+fn imbalance(xs: impl Iterator<Item = f64>) -> f64 {
+    let mut v: Vec<f64> = xs.collect();
+    v.sort_unstable_by(f64::total_cmp);
+    if v.is_empty() {
+        return 1.0;
+    }
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    v.last().unwrap() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkg(busy: u64, end: u64, completed: usize, ttft: &[f64]) -> ServeMetrics {
+        let mut m = ServeMetrics {
+            busy_cycles: busy,
+            end_cycles: end,
+            completed,
+            arrived: completed,
+            iterations: completed,
+            ..Default::default()
+        };
+        m.ttft_us.extend(ttft);
+        m
+    }
+
+    #[test]
+    fn aggregate_merges_and_sums() {
+        let a = pkg(100, 200, 2, &[3.0, 1.0]);
+        let b = pkg(300, 150, 1, &[2.0]);
+        let m = ClusterMetrics::aggregate(vec![a, b], vec![2, 1], 4, 10, 20, 1);
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.arrived, 4);
+        assert_eq!(m.end_cycles, 200);
+        assert_eq!(m.ttft_us.samples(), &[1.0, 2.0, 3.0]);
+        assert!((m.completion_frac() - 0.75).abs() < 1e-12);
+        // 100 vs 300 busy: max/mean = 300/200.
+        assert!((m.busy_imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregation_is_package_order_invariant() {
+        let a = pkg(123, 999, 3, &[5.0, 0.25, 7.5]);
+        let b = pkg(456, 400, 2, &[1.0, 9.0]);
+        let c = pkg(789, 650, 1, &[4.0]);
+        let fwd = ClusterMetrics::aggregate(
+            vec![a.clone(), b.clone(), c.clone()],
+            vec![3, 2, 1],
+            6,
+            5,
+            7,
+            0,
+        );
+        let rev = ClusterMetrics::aggregate(vec![c, b, a], vec![1, 2, 3], 6, 5, 7, 0);
+        assert_eq!(fwd.ttft_us.samples(), rev.ttft_us.samples());
+        assert_eq!(fwd.end_cycles, rev.end_cycles);
+        assert_eq!(fwd.completed, rev.completed);
+        assert!((fwd.busy_imbalance() - rev.busy_imbalance()).abs() == 0.0);
+        assert!((fwd.routed_cv() - rev.routed_cv()).abs() == 0.0);
+    }
+
+    #[test]
+    fn routed_cv_zero_when_even() {
+        let m = ClusterMetrics {
+            routed: vec![5, 5, 5, 5],
+            ..Default::default()
+        };
+        assert_eq!(m.routed_cv(), 0.0);
+        let skew = ClusterMetrics { routed: vec![10, 0], ..Default::default() };
+        assert!(skew.routed_cv() > 0.9);
+    }
+}

@@ -1,0 +1,46 @@
+//! L5 — the cluster subsystem: many packages behind one front-end, not
+//! one package behind an arrival stream.
+//!
+//! Everything below this layer answers "what does one package deliver
+//! under load?"; this layer answers the questions fleet serving asks:
+//! *how does sustained throughput scale with package count, how much does
+//! the routing policy matter, and where does load imbalance or
+//! inter-package traffic eat the scaling?*
+//!
+//! * [`router`] — pluggable request-routing policies
+//!   (`config::RouterKind`): pass-through (the degenerate single-package
+//!   wiring), round-robin, join-shortest-queue, power-of-two-choices, and
+//!   an expert-affinity policy that steers requests toward packages whose
+//!   recently served expert shards match the request's gating histogram.
+//!   All policies are seeded-deterministic with lowest-index tie-breaks.
+//! * [`link`] — the inter-package serdes model (`config::ClusterConfig`
+//!   bandwidth + latency) and the payload formulas: prompt-activation
+//!   hand-off on every delivery, KV-prefix migration when an in-flight
+//!   prefill is rebalanced.
+//! * [`metrics`] — per-package `ServeMetrics` merged into cluster-level
+//!   TTFT/TPOT/e2e tails, goodput, link-traffic counters, and
+//!   load-imbalance statistics (busy max/mean, placement CV), aggregated
+//!   canonically so the result is identical under any package ordering.
+//! * [`sim`] — the loop tying it together: one seeded arrival stream is
+//!   routed on delivery, every package is a stepwise `server::ServerSim`
+//!   advanced furthest-behind-first on a shared event clock, and a
+//!   delivery-time rebalancer migrates at most one request per arrival.
+//!
+//! The cluster sweep (`experiments::cluster_sweep`, `repro
+//! cluster-sweep`) ramps offered load per (package count × router ×
+//! strategy) cell to the shared SLO and reports cluster-level max
+//! sustained RPS plus imbalance — the scaling yardstick above
+//! `serve-sweep`'s single-package one.
+
+pub mod link;
+pub mod metrics;
+pub mod router;
+pub mod sim;
+
+pub use link::{handoff_bytes, kv_bytes, ClusterLink};
+pub use metrics::ClusterMetrics;
+pub use router::{
+    make_router, AffinityRouter, JsqRouter, PassThroughRouter, PowerOfTwoRouter,
+    RoundRobinRouter, RouterPolicy,
+};
+pub use sim::ClusterSim;

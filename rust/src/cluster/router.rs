@@ -1,0 +1,287 @@
+//! Pluggable request-routing policies for the cluster front-end.
+//!
+//! A policy sees the request being delivered and every package's current
+//! load (undelivered + queued + in flight, `ServerSim::load`) and picks a
+//! package index. Policies are deterministic: any randomness comes from a
+//! policy-owned seeded `Rng`, and every tie breaks toward the lowest
+//! package index, so a cluster run is a pure function of (configs, seed)
+//! no matter how sweep cells are scheduled across threads.
+//!
+//! Invariants pinned by `tests/cluster_determinism.rs`:
+//! * JSQ never picks a package with a strictly longer queue than another.
+//! * Power-of-two picks one of exactly two seeded samples — the shorter.
+//! * Round-robin cycles; pass-through is constantly package 0.
+
+use crate::config::{ClusterConfig, MoeModelConfig, RouterKind};
+use crate::server::Request;
+use crate::util::Rng;
+use crate::workload::sample_topk;
+
+/// A request-routing policy. `route` may mutate policy state (cursors,
+/// RNG draws, affinity histograms), so repeated calls with the same
+/// arguments need not repeat the answer — but the *sequence* of answers
+/// is deterministic for a seed.
+pub trait RouterPolicy {
+    fn kind(&self) -> RouterKind;
+    /// Pick a package for `req`; `loads[p]` is package p's outstanding
+    /// request count. `loads` is never empty.
+    fn route(&mut self, req: &Request, loads: &[usize]) -> usize;
+}
+
+/// Build the policy a `ClusterConfig` names. `model` parameterizes the
+/// affinity router's gating-hint distribution; `seed` all policy
+/// randomness.
+pub fn make_router(
+    cluster: &ClusterConfig,
+    model: &MoeModelConfig,
+    seed: u64,
+) -> Box<dyn RouterPolicy> {
+    match cluster.router {
+        RouterKind::PassThrough => Box::new(PassThroughRouter),
+        RouterKind::RoundRobin => Box::new(RoundRobinRouter::new()),
+        RouterKind::Jsq => Box::new(JsqRouter),
+        RouterKind::PowerOfTwo => Box::new(PowerOfTwoRouter::new(seed)),
+        RouterKind::ExpertAffinity => Box::new(AffinityRouter::new(cluster, model, seed)),
+    }
+}
+
+/// Everything to package 0 (the front-end *is* the package).
+pub struct PassThroughRouter;
+
+impl RouterPolicy for PassThroughRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::PassThrough
+    }
+
+    fn route(&mut self, _req: &Request, _loads: &[usize]) -> usize {
+        0
+    }
+}
+
+/// Cyclic assignment.
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl RoundRobinRouter {
+    pub fn new() -> RoundRobinRouter {
+        RoundRobinRouter { next: 0 }
+    }
+}
+
+impl Default for RoundRobinRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RouterPolicy for RoundRobinRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::RoundRobin
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[usize]) -> usize {
+        let p = self.next % loads.len();
+        self.next = (p + 1) % loads.len();
+        p
+    }
+}
+
+/// Join-shortest-queue: global argmin, lowest index on ties.
+pub struct JsqRouter;
+
+impl RouterPolicy for JsqRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::Jsq
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[usize]) -> usize {
+        argmin(loads)
+    }
+}
+
+/// Power-of-two-choices: two seeded distinct samples, join the shorter.
+pub struct PowerOfTwoRouter {
+    rng: Rng,
+    /// The two packages sampled by the most recent `route` call (equal
+    /// when only one package exists) — exposed so property tests can
+    /// verify the choice really was confined to the samples.
+    pub last_pair: Option<(usize, usize)>,
+}
+
+impl PowerOfTwoRouter {
+    pub fn new(seed: u64) -> PowerOfTwoRouter {
+        PowerOfTwoRouter { rng: Rng::new(seed ^ 0x9020_9020_70F2_70F2), last_pair: None }
+    }
+}
+
+impl RouterPolicy for PowerOfTwoRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::PowerOfTwo
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[usize]) -> usize {
+        let n = loads.len();
+        if n == 1 {
+            self.last_pair = Some((0, 0));
+            return 0;
+        }
+        let a = self.rng.below(n as u64) as usize;
+        // Second sample from the remaining n-1, shifted past `a`.
+        let mut b = self.rng.below(n as u64 - 1) as usize;
+        if b >= a {
+            b += 1;
+        }
+        self.last_pair = Some((a, b));
+        match loads[a].cmp(&loads[b]) {
+            std::cmp::Ordering::Less => a,
+            std::cmp::Ordering::Greater => b,
+            std::cmp::Ordering::Equal => a.min(b),
+        }
+    }
+}
+
+/// Expert-affinity-aware routing.
+///
+/// Each package carries an exponentially decayed histogram of the expert
+/// hints of requests previously routed to it. A new request samples its
+/// own hint (top-k experts from a long-tail popularity model — the
+/// simulator's stand-in for the session's recent gating histogram, which
+/// a real front-end observes directly) and scores every package by
+/// normalized histogram overlap minus a load penalty. Similar requests
+/// therefore pile onto the same package, keeping that package's expert
+/// weight streams and layer memo hot, while the load term stops the
+/// cluster from collapsing onto one package.
+pub struct AffinityRouter {
+    rng: Rng,
+    /// Zipf weights the hints are drawn from.
+    hint_weights: Vec<f64>,
+    hint_k: usize,
+    /// Per-package decayed expert histograms.
+    ema: Vec<Vec<f64>>,
+    decay: f64,
+    load_weight: f64,
+}
+
+impl AffinityRouter {
+    pub fn new(cluster: &ClusterConfig, model: &MoeModelConfig, seed: u64) -> AffinityRouter {
+        let hint_weights =
+            (0..model.n_experts).map(|e| 1.0 / (e + 1) as f64).collect();
+        AffinityRouter {
+            rng: Rng::new(seed ^ 0xAFF1_AFF1_AFF1_AFF1),
+            hint_weights,
+            hint_k: model.top_k.max(1),
+            ema: Vec::new(),
+            decay: cluster.affinity_decay,
+            load_weight: cluster.affinity_load_weight,
+        }
+    }
+}
+
+impl RouterPolicy for AffinityRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::ExpertAffinity
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[usize]) -> usize {
+        let n = loads.len();
+        if self.ema.len() != n {
+            self.ema = vec![vec![0.0; self.hint_weights.len()]; n];
+        }
+        let hint = sample_topk(&mut self.rng, &self.hint_weights, self.hint_k);
+        let mean_load = loads.iter().sum::<usize>() as f64 / n as f64;
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..n {
+            let total: f64 = self.ema[p].iter().sum();
+            let overlap: f64 =
+                hint.iter().map(|&e| self.ema[p][e as usize]).sum::<f64>() / (1e-9 + total);
+            let score =
+                overlap - self.load_weight * loads[p] as f64 / (1.0 + mean_load);
+            // Strict `>` keeps the lowest index on exact ties.
+            if score > best_score {
+                best_score = score;
+                best = p;
+            }
+        }
+        for w in self.ema[best].iter_mut() {
+            *w *= self.decay;
+        }
+        for &e in &hint {
+            self.ema[best][e as usize] += 1.0;
+        }
+        best
+    }
+}
+
+/// Lowest index of the minimum load.
+fn argmin(loads: &[usize]) -> usize {
+    let mut best = 0usize;
+    for (i, &l) in loads.iter().enumerate().skip(1) {
+        if l < loads[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn req() -> Request {
+        Request::new(1, 0, 64, 8)
+    }
+
+    #[test]
+    fn round_robin_cycles_and_passthrough_pins() {
+        let loads = [5usize, 0, 0];
+        let mut rr = RoundRobinRouter::new();
+        let picks: Vec<usize> = (0..6).map(|_| rr.route(&req(), &loads)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        let mut pt = PassThroughRouter;
+        assert_eq!(pt.route(&req(), &loads), 0);
+    }
+
+    #[test]
+    fn jsq_picks_global_min_lowest_index() {
+        let mut jsq = JsqRouter;
+        assert_eq!(jsq.route(&req(), &[3, 1, 1, 2]), 1);
+        assert_eq!(jsq.route(&req(), &[0, 0]), 0);
+        assert_eq!(jsq.route(&req(), &[7]), 0);
+    }
+
+    #[test]
+    fn p2c_deterministic_for_seed() {
+        let loads = [4usize, 1, 9, 2, 0, 6, 3, 5];
+        let run = |seed| {
+            let mut r = PowerOfTwoRouter::new(seed);
+            (0..64).map(|_| r.route(&req(), &loads)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn affinity_clusters_but_respects_load() {
+        let model = presets::tiny_moe();
+        let cluster = presets::cluster_pod();
+        let mut r = AffinityRouter::new(&cluster, &model, 7);
+        // Balanced loads: all picks valid, and after warm-up the EMA pulls
+        // same-hint traffic together rather than spraying uniformly.
+        let mut counts = [0usize; 4];
+        for _ in 0..200 {
+            counts[r.route(&req(), &[2, 2, 2, 2])] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 200);
+        let max = *counts.iter().max().unwrap();
+        assert!(max > 50, "affinity never specialized: {counts:?}");
+        // A hugely overloaded favourite must be dodged.
+        let favourite = counts.iter().position(|&c| c == max).unwrap();
+        let mut loads = [0usize; 4];
+        loads[favourite] = 1000;
+        let p = r.route(&req(), &loads);
+        assert_ne!(p, favourite, "load term ignored");
+    }
+}

@@ -1,0 +1,333 @@
+//! The cluster simulation loop: one seeded arrival stream split across N
+//! packages by a routing policy, with every package advanced on a shared
+//! event clock.
+//!
+//! The front-end interleaves two event sources in simulated-time order:
+//! request deliveries (the arrival stream, routed on delivery) and package
+//! progress (each [`ServerSim::step`] simulates one scheduling iteration
+//! on that package). The scheduler always advances the package that is
+//! furthest behind — `min (next_ready, package index)` — so deliveries
+//! observe every package simulated up to (at least) the arrival time, and
+//! the whole run is a pure function of the configs and the seed: no wall
+//! clock, no thread scheduling, no map iteration order anywhere.
+//!
+//! Delivery charges the inter-package hand-off (prompt activations over
+//! the serdes link) by pushing the request's `ready_cycles` past its
+//! arrival; the pass-through router charges nothing, which is what makes
+//! a 1-package pass-through cluster reproduce the standalone `ServerSim`
+//! bit for bit (pinned by `tests/cluster_determinism.rs`). After each
+//! delivery the rebalancer may migrate one request from the most- to the
+//! least-loaded package — at most one migration per delivery, so
+//! migration traffic is bounded by the arrival count and ping-pong is
+//! structurally impossible. Migrating a still-queued request re-ships its
+//! prompt; migrating an in-flight prefill additionally drags its built KV
+//! prefix ([`link::kv_bytes`]), the expensive case the donor preference
+//! avoids when it can.
+
+use super::link::{handoff_bytes, kv_bytes, ClusterLink};
+use super::metrics::ClusterMetrics;
+use super::router::{make_router, RouterPolicy};
+use crate::config::{
+    ClusterConfig, Dataset, HardwareConfig, MoeModelConfig, RouterKind, ServePreset,
+};
+use crate::server::{LoadMode, Request, RequestGenerator, ServerConfig, ServerSim};
+
+/// N packages behind a router. Deterministic for a given
+/// (model, hw, preset, server cfg, cluster cfg) — see module docs.
+pub struct ClusterSim<'a> {
+    model: &'a MoeModelConfig,
+    hw: &'a HardwareConfig,
+    preset: &'a ServePreset,
+    cfg: ServerConfig,
+    cluster: ClusterConfig,
+    packages: Vec<ServerSim<'a>>,
+    router: Box<dyn RouterPolicy>,
+    link: ClusterLink,
+    // ---- per-run accounting ----
+    routed: Vec<usize>,
+    handoff_bytes: u64,
+    kv_migration_bytes: u64,
+    migrations: usize,
+}
+
+impl<'a> ClusterSim<'a> {
+    pub fn new(
+        model: &'a MoeModelConfig,
+        hw: &'a HardwareConfig,
+        dataset: Dataset,
+        preset: &'a ServePreset,
+        cfg: ServerConfig,
+        cluster: ClusterConfig,
+    ) -> ClusterSim<'a> {
+        cluster.validate();
+        let packages = (0..cluster.n_packages)
+            .map(|p| {
+                let mut pkg_cfg = cfg.clone();
+                // Distinct gating streams per package; package 0 keeps the
+                // exact seed so the 1-package cluster mirrors ServerSim.
+                pkg_cfg.seed = cfg.seed ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ServerSim::new(model, hw, dataset, preset, pkg_cfg)
+            })
+            .collect();
+        ClusterSim {
+            router: make_router(&cluster, model, cfg.seed),
+            link: ClusterLink::new(&cluster, hw),
+            routed: vec![0; cluster.n_packages],
+            handoff_bytes: 0,
+            kv_migration_bytes: 0,
+            migrations: 0,
+            packages,
+            model,
+            hw,
+            preset,
+            cfg,
+            cluster,
+        }
+    }
+
+    /// Run the configured load (the same `LoadMode` vocabulary as
+    /// `ServerSim`, applied cluster-wide) and aggregate the result.
+    pub fn run(&mut self) -> ClusterMetrics {
+        let rate = match self.cfg.mode {
+            LoadMode::Open { rate_rps, .. } => rate_rps,
+            LoadMode::Burst { .. } => 1.0,
+        };
+        let mut gen =
+            RequestGenerator::new(self.preset, rate, self.hw.freq_hz, self.cfg.seed);
+        let mut arrivals = match self.cfg.mode {
+            LoadMode::Open { duration_s, .. } => {
+                gen.stream_until((duration_s * self.hw.freq_hz) as u64)
+            }
+            LoadMode::Burst { n_requests } => gen.burst(n_requests),
+        };
+        let arrived = arrivals.len();
+        arrivals.reverse(); // pop() walks arrivals in order
+
+        for p in &mut self.packages {
+            p.begin();
+        }
+        // Fresh router too: its RNG position and affinity histograms are
+        // run state, so a second run() replays the same decisions.
+        self.router = make_router(&self.cluster, self.model, self.cfg.seed);
+        self.routed = vec![0; self.cluster.n_packages];
+        self.handoff_bytes = 0;
+        self.kv_migration_bytes = 0;
+        self.migrations = 0;
+
+        // Shared overload cutoff (open loop): a package whose clock has
+        // crossed it is done, exactly like the standalone run's break.
+        let deadline = self.packages[0].deadline_cycles();
+        loop {
+            let live = |p: &ServerSim| deadline.map_or(true, |d| p.clock() <= d);
+            let candidate = self
+                .packages
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| live(p))
+                .filter_map(|(i, p)| p.next_ready_cycles().map(|t| (t, i)))
+                .min();
+            match (candidate, arrivals.last().map(|r| r.arrival_cycles)) {
+                // Deliveries strictly precede any step at the same cycle,
+                // mirroring the standalone admit-before-batch ordering.
+                (Some((t, _)), Some(a)) if a <= t => {
+                    let r = arrivals.pop().unwrap();
+                    self.deliver(r);
+                }
+                (None, Some(_)) => {
+                    // Every live package is drained (or dead): deliveries
+                    // still count as offered load, like the standalone
+                    // run's pre-seeded pending list.
+                    let r = arrivals.pop().unwrap();
+                    self.deliver(r);
+                }
+                (Some((_, i)), _) => {
+                    self.packages[i].step();
+                }
+                (None, None) => break,
+            }
+        }
+
+        let per_package: Vec<_> = self.packages.iter_mut().map(|p| p.finish()).collect();
+        ClusterMetrics::aggregate(
+            per_package,
+            self.routed.clone(),
+            arrived,
+            self.handoff_bytes,
+            self.kv_migration_bytes,
+            self.migrations,
+        )
+    }
+
+    /// Route one arrival, charge its hand-off, and give the rebalancer a
+    /// chance to move one request.
+    fn deliver(&mut self, mut r: Request) {
+        let loads: Vec<usize> = self.packages.iter().map(|p| p.load()).collect();
+        let p = self.router.route(&r, &loads).min(self.packages.len() - 1);
+        self.routed[p] += 1;
+        if self.router.kind() != RouterKind::PassThrough {
+            let bytes = handoff_bytes(self.model, self.hw.act_bytes, r.prompt_len);
+            self.handoff_bytes += bytes;
+            r.ready_cycles = r.arrival_cycles + self.link.transfer_cycles(bytes);
+        }
+        let now = r.arrival_cycles;
+        self.packages[p].inject(r);
+        self.maybe_rebalance(now);
+    }
+
+    /// Migrate one request from the most- to the least-loaded package when
+    /// their load gap exceeds the configured delta.
+    fn maybe_rebalance(&mut self, now: u64) {
+        if self.cluster.rebalance_delta == 0 || self.packages.len() < 2 {
+            return;
+        }
+        let loads: Vec<usize> = self.packages.iter().map(|p| p.load()).collect();
+        let from = argmax(&loads);
+        let to = argmin(&loads);
+        if loads[from] - loads[to] <= self.cluster.rebalance_delta {
+            return;
+        }
+        let Some(mut r) = self.packages[from].donate_for_migration() else {
+            // The donor's load may be all in-delivery or all decoding.
+            return;
+        };
+        let hand = handoff_bytes(self.model, self.hw.act_bytes, r.prompt_len);
+        let kv = kv_bytes(self.model, self.hw.act_bytes, r.prefilled);
+        self.handoff_bytes += hand;
+        self.kv_migration_bytes += kv;
+        self.migrations += 1;
+        // The donor package may have simulated ahead of the front-end;
+        // the request physically leaves no earlier than either clock.
+        let depart = now.max(self.packages[from].clock());
+        r.ready_cycles = depart + self.link.transfer_cycles(hand + kv);
+        self.routed[from] -= 1;
+        self.routed[to] += 1;
+        self.packages[to].inject(r);
+    }
+}
+
+/// Lowest index of the maximum.
+fn argmax(xs: &[usize]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Lowest index of the minimum.
+fn argmin(xs: &[usize]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, StrategyKind};
+
+    fn cluster_cfg(n: usize, router: RouterKind) -> ClusterConfig {
+        ClusterConfig { n_packages: n, router, ..presets::cluster_pod() }
+    }
+
+    fn run_cluster(
+        n: usize,
+        router: RouterKind,
+        mode: LoadMode,
+        rebalance_delta: usize,
+    ) -> ClusterMetrics {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut cluster = cluster_cfg(n, router);
+        cluster.rebalance_delta = rebalance_delta;
+        ClusterSim::new(&model, &hw, Dataset::C4, &preset, cfg, cluster).run()
+    }
+
+    #[test]
+    fn burst_drains_on_every_package_count() {
+        for n in [1usize, 2, 4] {
+            let m = run_cluster(n, RouterKind::Jsq, LoadMode::Burst { n_requests: 24 }, 0);
+            assert_eq!(m.arrived, 24, "n={n}");
+            assert_eq!(m.completed, 24, "n={n}");
+            assert_eq!(m.n_packages(), n);
+            assert_eq!(m.routed.iter().sum::<usize>(), 24);
+            // More packages should not serve the same burst slower.
+            assert!(m.end_cycles > 0);
+        }
+    }
+
+    #[test]
+    fn more_packages_finish_the_burst_sooner() {
+        let one = run_cluster(1, RouterKind::Jsq, LoadMode::Burst { n_requests: 32 }, 0);
+        let four = run_cluster(4, RouterKind::Jsq, LoadMode::Burst { n_requests: 32 }, 0);
+        assert!(
+            four.end_cycles < one.end_cycles,
+            "4 packages {} vs 1 package {}",
+            four.end_cycles,
+            one.end_cycles
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed_and_config() {
+        let mode = LoadMode::Open { rate_rps: 600.0, duration_s: 0.05 };
+        let a = run_cluster(4, RouterKind::ExpertAffinity, mode, 4);
+        let b = run_cluster(4, RouterKind::ExpertAffinity, mode, 4);
+        assert_eq!(a.end_cycles, b.end_cycles);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.ttft_us.samples(), b.ttft_us.samples());
+    }
+
+    #[test]
+    fn handoff_charged_except_passthrough() {
+        let burst = LoadMode::Burst { n_requests: 8 };
+        let pt = run_cluster(1, RouterKind::PassThrough, burst, 0);
+        assert_eq!(pt.handoff_bytes, 0);
+        let rr = run_cluster(2, RouterKind::RoundRobin, burst, 0);
+        assert!(rr.handoff_bytes > 0);
+        assert_eq!(rr.kv_migration_bytes, 0); // no rebalancing requested
+    }
+
+    #[test]
+    fn rebalancer_migrates_under_skew_and_conserves_requests() {
+        // Pass-through piles everything on package 0, so a tight delta
+        // turns the rebalancer into work stealing; burst mode has no
+        // cutoff, so everything still completes exactly once.
+        let m =
+            run_cluster(2, RouterKind::PassThrough, LoadMode::Burst { n_requests: 48 }, 2);
+        assert!(m.migrations > 0, "rebalancer never fired");
+        // Pass-through deliveries are free; the hand-off traffic here is
+        // purely migration re-shipping.
+        assert!(m.handoff_bytes > 0);
+        assert_eq!(m.completed, 48);
+        assert_eq!(m.routed.iter().sum::<usize>(), 48);
+        // Stealing spread real work onto package 1.
+        assert!(m.routed[1] > 0);
+        assert!(m.per_package[1].completed > 0);
+    }
+
+    #[test]
+    fn imbalance_visible_to_bad_router_hidden_by_jsq() {
+        // Affinity with zero load weight is free to pile on; JSQ levels.
+        let mode = LoadMode::Burst { n_requests: 40 };
+        let jsq = run_cluster(4, RouterKind::Jsq, mode, 0);
+        assert!(jsq.busy_imbalance() >= 1.0);
+        assert!(jsq.routed_cv() < 0.5, "JSQ cv {}", jsq.routed_cv());
+    }
+}

@@ -1,0 +1,134 @@
+//! Cluster-layer configuration: how many packages sit behind the L5
+//! front-end, which routing policy splits the arrival stream across them,
+//! and the inter-package serdes link model.
+//!
+//! Pure data, like `config::serve` — the routing and simulation logic
+//! lives in `crate::cluster` (L5). Keeping the knobs here lets presets,
+//! the override parser, and the sweep drivers share one vocabulary
+//! without a layering cycle.
+
+/// Which request-routing policy the cluster front-end runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RouterKind {
+    /// Everything to package 0, zero hand-off cost — the degenerate
+    /// configuration under which a 1-package cluster reproduces the
+    /// single-package `ServerSim` bit for bit (pinned by tests).
+    PassThrough,
+    /// Cyclic assignment, ignoring load.
+    RoundRobin,
+    /// Join-shortest-queue: the package with the least outstanding work.
+    Jsq,
+    /// Power-of-two-choices: seeded sample of two distinct packages, join
+    /// the shorter of the two (Mitzenmacher's classic trade of global
+    /// state for two probes).
+    PowerOfTwo,
+    /// Expert-affinity-aware: steer requests whose (predicted) gating
+    /// histogram matches the expert shards a package has recently been
+    /// serving, so packages specialize and their weight streams / layer
+    /// memos stay hot; a load term keeps the specialization from
+    /// collapsing onto one package.
+    ExpertAffinity,
+}
+
+impl RouterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::PassThrough => "pass-through",
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::Jsq => "JSQ",
+            RouterKind::PowerOfTwo => "p2c",
+            RouterKind::ExpertAffinity => "affinity",
+        }
+    }
+
+    pub fn all() -> &'static [RouterKind] {
+        &[
+            RouterKind::PassThrough,
+            RouterKind::RoundRobin,
+            RouterKind::Jsq,
+            RouterKind::PowerOfTwo,
+            RouterKind::ExpertAffinity,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "passthrough" | "pass-through" | "pass" => Some(RouterKind::PassThrough),
+            "rr" | "round-robin" | "roundrobin" => Some(RouterKind::RoundRobin),
+            "jsq" | "shortest" => Some(RouterKind::Jsq),
+            "p2c" | "power-of-two" | "po2" => Some(RouterKind::PowerOfTwo),
+            "affinity" | "expert-affinity" => Some(RouterKind::ExpertAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// One cluster: N identical packages behind a front-end router, joined by
+/// a serdes-class interconnect (think retimed PCIe/UCIe-over-cable or a
+/// NIC hop — orders of magnitude below on-package D2D bandwidth, which is
+/// exactly why routing and migration volume matter at this tier).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Packages in the cluster (each is a full `HardwareConfig` mesh).
+    pub n_packages: usize,
+    pub router: RouterKind,
+    /// Inter-package link bandwidth in GB/s (per transfer, no sharing
+    /// model — hand-offs are small next to the link's capacity).
+    pub serdes_gbps: f64,
+    /// One-way link latency in microseconds (serialization + switch).
+    pub serdes_lat_us: f64,
+    /// Queue-imbalance threshold that triggers migrating one request from
+    /// the most- to the least-loaded package at delivery time
+    /// (`max_load - min_load > rebalance_delta`); 0 disables rebalancing.
+    /// At most one migration per delivery, so migration volume is bounded
+    /// by the arrival count — no ping-pong is possible.
+    pub rebalance_delta: usize,
+    /// EMA decay of the affinity router's per-package expert histograms.
+    pub affinity_decay: f64,
+    /// Weight of the load-balance term in the affinity router's score
+    /// (0 = pure affinity, larger = closer to JSQ).
+    pub affinity_load_weight: f64,
+}
+
+impl ClusterConfig {
+    /// Sanity bounds every cluster entry point asserts once.
+    pub fn validate(&self) {
+        assert!(self.n_packages >= 1, "cluster needs at least one package");
+        assert!(self.serdes_gbps > 0.0, "serdes bandwidth must be positive");
+        assert!(self.serdes_lat_us >= 0.0, "serdes latency must be non-negative");
+        assert!(
+            (0.0..1.0).contains(&self.affinity_decay),
+            "affinity decay must be in [0, 1)"
+        );
+        assert!(self.affinity_load_weight >= 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_parse_roundtrip() {
+        assert_eq!(RouterKind::parse("jsq"), Some(RouterKind::Jsq));
+        assert_eq!(RouterKind::parse("P2C"), Some(RouterKind::PowerOfTwo));
+        assert_eq!(RouterKind::parse("round-robin"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::parse("affinity"), Some(RouterKind::ExpertAffinity));
+        assert_eq!(RouterKind::parse("pass"), Some(RouterKind::PassThrough));
+        assert_eq!(RouterKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_routers_have_distinct_names() {
+        let names: Vec<_> = RouterKind::all().iter().map(|r| r.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn preset_validates() {
+        crate::config::presets::cluster_pod().validate();
+    }
+}

@@ -2,12 +2,14 @@
 //! (Table I bottom half), and experiment settings, with a `key=value`
 //! override parser so the CLI and experiment drivers can sweep any knob.
 
+pub mod cluster;
 pub mod hardware;
 pub mod model;
 pub mod parse;
 pub mod presets;
 pub mod serve;
 
+pub use cluster::{ClusterConfig, RouterKind};
 pub use hardware::{DdrConfig, D2dConfig, HardwareConfig, SchedulerCost};
 pub use model::{Dataset, MoeModelConfig};
 pub use parse::Overrides;

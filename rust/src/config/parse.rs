@@ -3,8 +3,33 @@
 //!
 //! Accepted forms: `weight_buffer_mb=16 ddr_gbps=25.6 mesh=3x3 slices=8`.
 
+use super::cluster::{ClusterConfig, RouterKind};
 use super::hardware::HardwareConfig;
 use std::collections::BTreeMap;
+
+/// Keys `apply_hardware` callers understand (hardware knobs, run-shape
+/// keys read directly by drivers, and the selection keys `repro run`
+/// consumes before the applier runs). Cluster keys are deliberately NOT
+/// here: no hardware-consuming command reads them, so accepting them
+/// would turn typos and misplaced knobs into silent no-ops.
+fn known_hardware_key(key: &str) -> bool {
+    matches!(
+        key,
+        "weight_buffer_mb" | "token_buffer_mb" | "ddr_gbps" | "ddr_channels" | "d2d_gbps"
+        | "hop_ns" | "mesh" | "macs" | "freq_mhz" | "overhead_cycles"
+        | "slices" | "tokens" | "seed" | "iters" | "slack"
+        | "model" | "dataset" | "strategy"
+    )
+}
+
+/// Keys `apply_cluster` owns (`repro cluster-sweep`). Disjoint from the
+/// hardware allowlist for the same loud-typo reason.
+fn known_cluster_key(key: &str) -> bool {
+    matches!(
+        key,
+        "packages" | "router" | "serdes_gbps" | "serdes_lat_us" | "rebalance_delta"
+    )
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct Overrides {
@@ -56,14 +81,8 @@ impl Overrides {
     /// typos do not silently run the default config.
     pub fn apply_hardware(&self, hw: &mut HardwareConfig) -> Result<(), String> {
         for key in self.map.keys() {
-            match key.as_str() {
-                "weight_buffer_mb" | "token_buffer_mb" | "ddr_gbps" | "ddr_channels"
-                | "d2d_gbps" | "hop_ns" | "mesh" | "macs" | "freq_mhz" | "overhead_cycles"
-                | "slices" | "tokens" | "seed" | "iters" | "slack" => {}
-                // Selection keys read by `repro run` before this is called
-                // (not hardware knobs, but they share the override string).
-                "model" | "dataset" | "strategy" => {}
-                other => return Err(format!("unknown override key '{other}'")),
+            if !known_hardware_key(key) {
+                return Err(format!("unknown override key '{key}'"));
             }
         }
         if let Some(v) = self.get_f64("weight_buffer_mb")? {
@@ -103,6 +122,39 @@ impl Overrides {
                 return Err("mesh dimensions must be positive".into());
             }
         }
+        Ok(())
+    }
+
+    /// Apply cluster overrides in place (`repro cluster-sweep key=value`).
+    /// Only cluster keys are accepted — a hardware knob here would be a
+    /// silent no-op (cluster-sweep fixes the package hardware), so it
+    /// errors instead.
+    pub fn apply_cluster(&self, cluster: &mut ClusterConfig) -> Result<(), String> {
+        for key in self.map.keys() {
+            if !known_cluster_key(key) {
+                return Err(format!("unknown cluster override key '{key}'"));
+            }
+        }
+        if let Some(v) = self.get_usize("packages")? {
+            if v == 0 {
+                return Err("packages must be positive".into());
+            }
+            cluster.n_packages = v;
+        }
+        if let Some(v) = self.get("router") {
+            cluster.router = RouterKind::parse(v)
+                .ok_or_else(|| format!("unknown router '{v}' (pass/rr/jsq/p2c/affinity)"))?;
+        }
+        if let Some(v) = self.get_f64("serdes_gbps")? {
+            cluster.serdes_gbps = v;
+        }
+        if let Some(v) = self.get_f64("serdes_lat_us")? {
+            cluster.serdes_lat_us = v;
+        }
+        if let Some(v) = self.get_usize("rebalance_delta")? {
+            cluster.rebalance_delta = v;
+        }
+        cluster.validate();
         Ok(())
     }
 }
@@ -148,5 +200,26 @@ mod tests {
         let mut hw = presets::mcm_2x2();
         o.apply_hardware(&mut hw).unwrap();
         assert_eq!(o.get_usize("tokens").unwrap(), Some(64));
+    }
+
+    #[test]
+    fn cluster_overrides_apply() {
+        let o = ov(&["packages=4", "router=p2c", "serdes_gbps=32", "rebalance_delta=0"]);
+        let mut c = presets::cluster_pod();
+        o.apply_cluster(&mut c).unwrap();
+        assert_eq!(c.n_packages, 4);
+        assert_eq!(c.router, crate::config::RouterKind::PowerOfTwo);
+        assert!((c.serdes_gbps - 32.0).abs() < 1e-9);
+        assert_eq!(c.rebalance_delta, 0);
+        // Out-of-domain keys fail loudly in both appliers (no silent
+        // no-ops: nothing consumes a hardware knob in a cluster sweep or
+        // a cluster knob in `repro run`).
+        assert!(ov(&["mesh=3x3"]).apply_cluster(&mut c).is_err());
+        let mut hw = presets::mcm_2x2();
+        assert!(ov(&["packages=2"]).apply_hardware(&mut hw).is_err());
+        // Bad values and typos fail too.
+        assert!(ov(&["packages=nope"]).apply_cluster(&mut c).is_err());
+        assert!(ov(&["routr=jsq"]).apply_cluster(&mut c).is_err());
+        assert!(ov(&["router=warp"]).apply_cluster(&mut c).is_err());
     }
 }

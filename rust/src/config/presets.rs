@@ -1,6 +1,7 @@
 //! Table I presets: the 2×2 MCM test chip and the four evaluated models,
 //! plus serving scenarios for the L4 open-loop subsystem.
 
+use super::cluster::{ClusterConfig, RouterKind};
 use super::hardware::{D2dConfig, DdrConfig, HardwareConfig, SchedulerCost};
 use super::model::MoeModelConfig;
 use super::serve::{ArrivalKind, ServePreset, SloConfig};
@@ -163,6 +164,22 @@ pub fn serve_bursty() -> ServePreset {
         max_batch: 8,
         prefill_chunk: 32,
         slo: SloConfig::default(),
+    }
+}
+
+/// Default L5 cluster pod: JSQ routing over a 64 GB/s, 1.5 µs serdes-class
+/// inter-package link (NIC/retimer territory — ~4.5× below one on-package
+/// D2D link), with delivery-time rebalancing once queues diverge by more
+/// than 6 requests. `n_packages` is 1 here; sweeps override it per cell.
+pub fn cluster_pod() -> ClusterConfig {
+    ClusterConfig {
+        n_packages: 1,
+        router: RouterKind::Jsq,
+        serdes_gbps: 64.0,
+        serdes_lat_us: 1.5,
+        rebalance_delta: 6,
+        affinity_decay: 0.9,
+        affinity_load_weight: 0.5,
     }
 }
 

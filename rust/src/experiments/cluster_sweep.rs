@@ -1,0 +1,329 @@
+//! `cluster_sweep`: the L5 scaling yardstick (`repro cluster-sweep`) —
+//! packages × router policy × offered RPS, to SLO violation.
+//!
+//! Method:
+//! 1. **Calibrate** once on a single-package EP burst, exactly like
+//!    `serve_sweep`: unloaded tails set the shared SLO, closed-loop
+//!    service capacity anchors the per-package RPS grid. Every cell is
+//!    judged against the same SLO, so "max sustained RPS" compares
+//!    routers and package counts directly.
+//! 2. **Sweep cells**: for each (strategy × package count × router), ramp
+//!    cluster-level offered load on a grid of multiples of
+//!    `n_packages × per-package capacity`, then bisect the SLO knee from
+//!    the grid's own pass/fail bracket. The knee run's metrics supply the
+//!    reported load-imbalance and link-traffic figures.
+//! 3. Cells are independent seeded `ClusterSim` runs, so the whole grid
+//!    fans across the worker pool (`util::parallel`); tables are
+//!    assembled from index-ordered results — identical at any thread
+//!    count.
+//!
+//! The sweep keeps the `tiny_moe` smoke model at every depth: cluster
+//! scaling is a routing/queueing question, the per-layer engine is
+//! already exercised by `serve_sweep`, and the 8-package cells would
+//! otherwise dominate `repro all`.
+
+use super::ExpOpts;
+use crate::cluster::{ClusterMetrics, ClusterSim};
+use crate::config::{
+    presets, ClusterConfig, Dataset, MoeModelConfig, RouterKind, ServePreset, SloConfig,
+    StrategyKind,
+};
+use crate::server::{resolve_slo, LoadMode, ServerConfig, ServerSim};
+use crate::util::{parallel_map, Table};
+
+/// Completion fraction below which a run counts as saturated (shared with
+/// `serve_sweep`).
+const MIN_COMPLETION_FRAC: f64 = 0.95;
+
+const SCHEMES: [StrategyKind; 2] = [StrategyKind::FseDpPaired, StrategyKind::Ep];
+const PACKAGES: [usize; 4] = [1, 2, 4, 8];
+const ROUTERS: [RouterKind; 4] = [
+    RouterKind::RoundRobin,
+    RouterKind::Jsq,
+    RouterKind::PowerOfTwo,
+    RouterKind::ExpertAffinity,
+];
+
+struct Sweep {
+    model: MoeModelConfig,
+    preset: ServePreset,
+    base: ClusterConfig,
+    seed: u64,
+    /// Open-loop requests offered per package at each probe.
+    requests_per_package: usize,
+    grid: &'static [f64],
+    bisections: usize,
+}
+
+/// One cell's outcome: the refined knee and the metrics observed there.
+struct Cell {
+    sustained_rps: f64,
+    knee: Option<ClusterMetrics>,
+}
+
+impl Sweep {
+    fn run_cluster(
+        &self,
+        scheme: StrategyKind,
+        n_packages: usize,
+        router: RouterKind,
+        rate_rps: f64,
+    ) -> ClusterMetrics {
+        let hw = presets::mcm_2x2();
+        let total_requests = self.requests_per_package * n_packages;
+        let mode = LoadMode::Open { rate_rps, duration_s: total_requests as f64 / rate_rps };
+        let cfg = ServerConfig { strategy: scheme, mode, seed: self.seed, ..Default::default() };
+        let cluster = ClusterConfig { n_packages, router, ..self.base.clone() };
+        ClusterSim::new(&self.model, &hw, Dataset::C4, &self.preset, cfg, cluster).run()
+    }
+
+    /// Grid-then-bisect saturation search for one cell. Deterministic; the
+    /// returned metrics are from the highest passing probe.
+    fn saturate(
+        &self,
+        scheme: StrategyKind,
+        n_packages: usize,
+        router: RouterKind,
+        slo: &SloConfig,
+        base_rps: f64,
+    ) -> Cell {
+        let mut knee: Option<ClusterMetrics> = None;
+        let mut lo = 0.0f64;
+        let mut hi = f64::INFINITY;
+        let probe = |rps: f64, knee: &mut Option<ClusterMetrics>| -> bool {
+            let m = self.run_cluster(scheme, n_packages, router, rps);
+            let ok = m.meets(slo, MIN_COMPLETION_FRAC);
+            if ok {
+                *knee = Some(m);
+            }
+            ok
+        };
+        for &mult in self.grid {
+            let rps = mult * base_rps * n_packages as f64;
+            if probe(rps, &mut knee) {
+                lo = rps;
+            } else {
+                hi = rps;
+                break; // offered load only grows along the grid
+            }
+        }
+        if lo == 0.0 {
+            // Even the lightest grid point violated: ramp down below it.
+            let mut r = hi / 1.5;
+            for _ in 0..4 {
+                if probe(r, &mut knee) {
+                    lo = r;
+                    break;
+                }
+                hi = r;
+                r /= 1.5;
+            }
+            if lo == 0.0 {
+                return Cell { sustained_rps: 0.0, knee };
+            }
+        }
+        if !hi.is_finite() {
+            // The whole grid passed: ramp up to the first violation.
+            let mut r = lo * 1.5;
+            for _ in 0..4 {
+                if probe(r, &mut knee) {
+                    lo = r;
+                    r *= 1.5;
+                } else {
+                    hi = r;
+                    break;
+                }
+            }
+            if !hi.is_finite() {
+                return Cell { sustained_rps: lo, knee };
+            }
+        }
+        for _ in 0..self.bisections {
+            let mid = 0.5 * (lo + hi);
+            if probe(mid, &mut knee) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Cell { sustained_rps: lo, knee }
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let hw = presets::mcm_2x2();
+    let sweep = Sweep {
+        model: presets::tiny_moe(),
+        preset: presets::serve_chat(),
+        base: opts.cluster.clone().unwrap_or_else(presets::cluster_pod),
+        seed: opts.seed,
+        requests_per_package: if opts.quick { 10 } else { 24 },
+        grid: if opts.quick { &[0.5, 1.0] } else { &[0.45, 0.7, 1.0] },
+        bisections: if opts.quick { 2 } else { 3 },
+    };
+
+    // 1. Single-package EP calibration (the same anchors as serve_sweep).
+    let calib = |n_requests: usize| {
+        let cfg = ServerConfig {
+            strategy: StrategyKind::Ep,
+            mode: LoadMode::Burst { n_requests },
+            seed: sweep.seed,
+            ..Default::default()
+        };
+        ServerSim::new(&sweep.model, &hw, Dataset::C4, &sweep.preset, cfg).run()
+    };
+    let unloaded = calib(sweep.preset.max_batch);
+    let capacity = calib(4 * sweep.preset.max_batch);
+    let slo = resolve_slo(&sweep.preset.slo, &unloaded);
+    let base_rps = capacity.service_rps(hw.freq_hz);
+    assert!(base_rps > 0.0, "calibration produced no completions");
+
+    // 2. Every (scheme × packages × router) cell across the pool.
+    let cells: Vec<(usize, usize, usize)> = SCHEMES
+        .iter()
+        .enumerate()
+        .flat_map(|(si, _)| {
+            PACKAGES.iter().enumerate().flat_map(move |(ni, _)| {
+                (0..ROUTERS.len()).map(move |ri| (si, ni, ri))
+            })
+        })
+        .collect();
+    let results: Vec<Cell> = parallel_map(cells.clone(), opts.threads, |(si, ni, ri)| {
+        sweep.saturate(SCHEMES[si], PACKAGES[ni], ROUTERS[ri], &slo, base_rps)
+    });
+
+    let mut detail = Table::new(
+        &format!(
+            "cluster_sweep: {} / preset '{}' / serdes {:.0} GB/s {:.1} us / \
+             SLO p99 TTFT <= {:.2} ms, p99 TPOT <= {:.2} ms (from unloaded 1-pkg EP)",
+            sweep.model.name,
+            sweep.preset.name,
+            sweep.base.serdes_gbps,
+            sweep.base.serdes_lat_us,
+            slo.ttft_p99_ms,
+            slo.tpot_p99_ms
+        ),
+        &[
+            "scheme",
+            "packages",
+            "router",
+            "max RPS",
+            "RPS/pkg",
+            "busy imbalance",
+            "placement CV",
+            "handoff MiB",
+            "KV-mig MiB",
+            "migrations",
+        ],
+    );
+    let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
+    for (&(si, ni, ri), cell) in cells.iter().zip(&results) {
+        let (imb, cv, hand, kv, mig) = match &cell.knee {
+            Some(m) => (
+                format!("{:.3}", m.busy_imbalance()),
+                format!("{:.3}", m.routed_cv()),
+                format!("{:.2}", mib(m.handoff_bytes)),
+                format!("{:.2}", mib(m.kv_migration_bytes)),
+                format!("{}", m.migrations),
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        detail.row(vec![
+            SCHEMES[si].name().into(),
+            format!("{}", PACKAGES[ni]),
+            ROUTERS[ri].name().into(),
+            format!("{:.2}", cell.sustained_rps),
+            format!("{:.2}", cell.sustained_rps / PACKAGES[ni] as f64),
+            imb,
+            cv,
+            hand,
+            kv,
+            mig,
+        ]);
+    }
+
+    // 3. Per (scheme × packages) summary: best router + scaling efficiency
+    //    against the same scheme's best 1-package cell.
+    let mut summary = Table::new(
+        "cluster_sweep summary: best router per cell, scaling vs 1 package",
+        &["scheme", "packages", "best router", "max RPS", "scaling efficiency"],
+    );
+    for (si, scheme) in SCHEMES.iter().enumerate() {
+        let best_at = |ni: usize| -> (usize, f64) {
+            (0..ROUTERS.len())
+                .map(|ri| {
+                    let idx = cells
+                        .iter()
+                        .position(|&c| c == (si, ni, ri))
+                        .expect("cell missing");
+                    (ri, results[idx].sustained_rps)
+                })
+                // f64 from the same deterministic runs: plain comparison,
+                // first (lowest router index) wins ties.
+                .fold(
+                    (0, f64::NEG_INFINITY),
+                    |acc, (ri, r)| if r > acc.1 { (ri, r) } else { acc },
+                )
+        };
+        let (_, one_pkg_best) = best_at(0);
+        for (ni, &n) in PACKAGES.iter().enumerate() {
+            let (ri, rps) = best_at(ni);
+            let eff = if one_pkg_best > 0.0 {
+                format!("{:.1}%", 100.0 * rps / (n as f64 * one_pkg_best))
+            } else {
+                "n/a".into()
+            };
+            summary.row(vec![
+                scheme.name().into(),
+                format!("{n}"),
+                ROUTERS[ri].name().into(),
+                format!("{rps:.2}"),
+                eff,
+            ]);
+        }
+    }
+
+    super::save(&detail, opts, "cluster_sweep");
+    super::save(&summary, opts, "cluster_sweep_summary");
+    vec![detail, summary]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(threads: usize) -> ExpOpts {
+        ExpOpts {
+            quick: true,
+            out_dir: "/tmp/expstr-test-results".into(),
+            threads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn quick_sweep_covers_grid_and_scales() {
+        let tables = run(&opts(0));
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), SCHEMES.len() * PACKAGES.len() * ROUTERS.len());
+        assert_eq!(tables[1].n_rows(), SCHEMES.len() * PACKAGES.len());
+        // Scaling sanity from the summary: for FSE-DP, 4 packages must
+        // sustain strictly more than 1 package.
+        let csv = tables[1].to_csv();
+        let rps_at = |scheme: &str, pkgs: &str| -> f64 {
+            csv.lines()
+                .find(|l| l.starts_with(&format!("{scheme},{pkgs},")))
+                .and_then(|l| l.split(',').nth(3))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(-1.0)
+        };
+        let one = rps_at("FSE-DP+paired", "1");
+        let four = rps_at("FSE-DP+paired", "4");
+        assert!(one > 0.0 && four > 0.0, "summary rows missing:\n{csv}");
+        assert!(four > one, "no cluster scaling: 1pkg {one} vs 4pkg {four}");
+    }
+
+    // Thread-count invariance for the sweep lives in
+    // `tests/cluster_determinism.rs` (it runs the sweep twice; keeping it
+    // in one place keeps the suite's cost bounded).
+}

@@ -17,9 +17,12 @@
 //! | fig18  | scalability 2×2 → 4×4                            |
 //!
 //! Beyond the paper's figures, `serve_sweep` is the serving-level
-//! yardstick: an open-loop RPS ramp to SLO violation over the L4 server
-//! subsystem (see `crate::server`).
+//! yardstick — an open-loop RPS ramp to SLO violation over the L4 server
+//! subsystem (see `crate::server`) — and `cluster_sweep` is the scaling
+//! yardstick above it: packages × router policy × offered RPS over the L5
+//! cluster subsystem (see `crate::cluster`).
 
+pub mod cluster_sweep;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
@@ -33,7 +36,7 @@ pub mod fig9;
 pub mod serve_sweep;
 pub mod table1;
 
-use crate::config::{Dataset, HardwareConfig, MoeModelConfig, StrategyKind};
+use crate::config::{ClusterConfig, Dataset, HardwareConfig, MoeModelConfig, StrategyKind};
 use crate::coordinator::{make_strategy, LayerCtx, LayerResult};
 use crate::moe::{default_num_slices, ExpertGeometry};
 use crate::util::Table;
@@ -53,17 +56,21 @@ pub struct ExpOpts {
     /// value — each point is a seeded, self-contained simulation and the
     /// executor preserves input order.
     pub threads: usize,
+    /// Base cluster configuration for `cluster_sweep` (link model,
+    /// rebalancing, affinity knobs). `None` = `presets::cluster_pod()`;
+    /// the sweep overrides `n_packages`/`router` per grid cell either way.
+    pub cluster: Option<ClusterConfig>,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { quick: false, seed: 7, out_dir: "results".into(), threads: 0 }
+        ExpOpts { quick: false, seed: 7, out_dir: "results".into(), threads: 0, cluster: None }
     }
 }
 
-pub const ALL_IDS: [&str; 12] = [
+pub const ALL_IDS: [&str; 13] = [
     "table1", "fig2", "fig9", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "serve_sweep",
+    "fig18", "serve_sweep", "cluster_sweep",
 ];
 
 /// Run one experiment by id; returns the rendered tables.
@@ -81,6 +88,7 @@ pub fn run_by_id(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
         "fig17" => fig17::run(opts),
         "fig18" => fig18::run(opts),
         "serve_sweep" | "serve-sweep" => serve_sweep::run(opts),
+        "cluster_sweep" | "cluster-sweep" => cluster_sweep::run(opts),
         other => return Err(format!("unknown experiment '{other}' (see `repro list`)")),
     };
     for t in &tables {
@@ -148,6 +156,6 @@ mod tests {
         let tables = run_by_id("table1", &opts).unwrap();
         assert!(!tables.is_empty());
         assert!(run_by_id("fig99", &opts).is_err());
-        assert_eq!(ALL_IDS.len(), 12);
+        assert_eq!(ALL_IDS.len(), 13);
     }
 }

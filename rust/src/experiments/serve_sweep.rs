@@ -14,6 +14,9 @@
 //!    pass/fail outcomes (extending geometrically where the grid was
 //!    one-sided) and bisect it, so the reported maximum sustained RPS
 //!    resolves finer than the grid spacing at few extra probes.
+//! 4. **Arrival scenarios**: re-run two shared load points under the
+//!    on-off `bursty` preset next to Poisson `chat`, so the tail cost of
+//!    flash-crowd arrivals is a standing column in the output.
 //!
 //! Every grid point and every per-scheme bisection is an independent
 //! seeded `ServerSim`, so the sweep fans them across the worker pool
@@ -45,15 +48,33 @@ struct Sweep {
 }
 
 impl Sweep {
-    fn run_mode(&self, strategy: StrategyKind, mode: LoadMode) -> ServeMetrics {
+    fn run_mode_with(
+        &self,
+        preset: &ServePreset,
+        strategy: StrategyKind,
+        mode: LoadMode,
+    ) -> ServeMetrics {
         let hw = presets::mcm_2x2();
         let cfg = ServerConfig { strategy, mode, seed: self.seed, ..Default::default() };
-        ServerSim::new(&self.model, &hw, Dataset::C4, &self.preset, cfg).run()
+        ServerSim::new(&self.model, &hw, Dataset::C4, preset, cfg).run()
+    }
+
+    fn run_mode(&self, strategy: StrategyKind, mode: LoadMode) -> ServeMetrics {
+        self.run_mode_with(&self.preset, strategy, mode)
+    }
+
+    fn run_open_with(
+        &self,
+        preset: &ServePreset,
+        strategy: StrategyKind,
+        rate_rps: f64,
+    ) -> ServeMetrics {
+        let duration_s = self.requests_per_point as f64 / rate_rps;
+        self.run_mode_with(preset, strategy, LoadMode::Open { rate_rps, duration_s })
     }
 
     fn run_open(&self, strategy: StrategyKind, rate_rps: f64) -> ServeMetrics {
-        let duration_s = self.requests_per_point as f64 / rate_rps;
-        self.run_mode(strategy, LoadMode::Open { rate_rps, duration_s })
+        self.run_open_with(&self.preset, strategy, rate_rps)
     }
 
     /// Largest offered load (RPS) meeting the SLO, refined from the shared
@@ -212,9 +233,78 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         sum_t.row(vec![scheme.name().into(), format!("{:.2}", sustained[si]), vs]);
     }
 
+    // 4. Arrival-scenario comparison: the same schemes and loads under
+    //    on-off arrivals next to steady Poisson. Only the arrival process
+    //    changes — lengths and batcher knobs stay at the chat preset's
+    //    values, so the tail difference is attributable to burstiness
+    //    alone (the full `serve_bursty` preset also fattens prompts,
+    //    which would confound this comparison). Bursts pack the same
+    //    long-run offered rate into ON windows, so the TTFT tail inflates
+    //    at loads the steady scenario absorbs — the admission queue's
+    //    view of flash crowds. (Closes the ROADMAP item wiring
+    //    `serve_bursty` + Gamma arrivals into a figure: Gamma cv=1 is
+    //    Poisson, the on-off process is the burstier extreme.)
+    let bursty_preset = ServePreset {
+        name: "chat+on-off",
+        arrival: presets::serve_bursty().arrival,
+        ..sweep.preset.clone()
+    };
+    let scenario_mults = [0.45, 0.80];
+    let mut burst_t = Table::new(
+        &format!(
+            "serve_sweep arrivals: '{}' (Poisson) vs '{}' (on-off {}x, identical lengths) \
+             at shared offered loads",
+            sweep.preset.name,
+            bursty_preset.name,
+            match bursty_preset.arrival {
+                crate::config::ArrivalKind::OnOff { burst_factor, .. } => burst_factor,
+                _ => 0.0,
+            }
+        ),
+        &[
+            "offered RPS",
+            "scheme",
+            "arrival",
+            "p99 TTFT (ms)",
+            "p99 TPOT (ms)",
+            "completed",
+            "mean queue",
+            "max queue",
+            "SLO",
+        ],
+    );
+    let scenario_points: Vec<(usize, usize, f64)> = scenario_mults
+        .iter()
+        .flat_map(|&mult| {
+            (0..SCHEMES.len())
+                .flat_map(move |si| (0..2usize).map(move |pi| (si, pi, mult * base_rps)))
+        })
+        .collect();
+    let scenario_metrics: Vec<ServeMetrics> =
+        parallel_map(scenario_points.clone(), sweep.threads, |(si, pi, rps)| {
+            let preset = if pi == 0 { &sweep.preset } else { &bursty_preset };
+            sweep.run_open_with(preset, SCHEMES[si], rps)
+        });
+    for (&(si, pi, rps), m) in scenario_points.iter().zip(&scenario_metrics) {
+        let ok = m.meets(&slo, MIN_COMPLETION_FRAC);
+        burst_t.row(vec![
+            format!("{rps:.2}"),
+            SCHEMES[si].name().into(),
+            if pi == 0 { sweep.preset.arrival.name() } else { bursty_preset.arrival.name() }
+                .into(),
+            format!("{:.2}", m.p99_ttft_ms()),
+            format!("{:.2}", m.p99_tpot_ms()),
+            format!("{}/{}", m.completed, m.arrived),
+            format!("{:.1}", m.queue_depth.mean()),
+            format!("{:.0}", m.queue_depth.max()),
+            if ok { "ok".into() } else { "VIOLATED".to_string() },
+        ]);
+    }
+
     super::save(&load_t, opts, "serve_sweep_load");
     super::save(&sum_t, opts, "serve_sweep_summary");
-    vec![load_t, sum_t]
+    super::save(&burst_t, opts, "serve_sweep_bursty");
+    vec![load_t, sum_t, burst_t]
 }
 
 #[cfg(test)]
@@ -229,9 +319,13 @@ mod tests {
             ..Default::default()
         };
         let tables = run(&opts);
-        assert_eq!(tables.len(), 2);
+        assert_eq!(tables.len(), 3);
         assert_eq!(tables[0].n_rows(), GRID.len() * SCHEMES.len());
         assert_eq!(tables[1].n_rows(), SCHEMES.len());
+        // Arrival-scenario table: 2 loads x schemes x {poisson, on-off}.
+        assert_eq!(tables[2].n_rows(), 2 * SCHEMES.len() * 2);
+        let csv = tables[2].to_csv();
+        assert!(csv.contains("poisson") && csv.contains("on-off"), "{csv}");
         let csv = tables[1].to_csv();
         let max_of = |scheme: &str| -> f64 {
             csv.lines()

@@ -20,8 +20,13 @@
 //!   chunked prefill, and TTFT/TPOT/e2e SLO metrics — which turns the
 //!   per-iteration simulator into a servable system and gives every
 //!   strategy a throughput/latency yardstick (`repro serve-sweep`).
+//! * L5 (`cluster`): multi-package (mesh-of-meshes) serving — N packages
+//!   behind a pluggable request router over a serdes-class inter-package
+//!   link, with cluster-level SLO metrics, load-imbalance statistics, and
+//!   the `repro cluster-sweep` scaling yardstick.
 
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dse;

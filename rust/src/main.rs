@@ -7,6 +7,8 @@
 //!   repro run [key=value ...]          one simulated layer with overrides
 //!   repro serve [tokens=N] [layers=N]  numeric serving path (PJRT)
 //!   repro serve-sweep [--quick]        open-loop RPS sweep to SLO violation
+//!   repro cluster-sweep [--quick] [key=value ...]
+//!                                      L5 scaling sweep: packages x router x RPS
 //!
 //! `serve-sweep` drives the L4 serving subsystem (`server::ServerSim`):
 //! seeded Poisson arrivals are continuous-batched onto the simulated
@@ -14,6 +16,14 @@
 //! prints a load-vs-p99-TTFT/TPOT table, and reports each strategy's
 //! maximum sustained RPS under a shared SLO calibrated from unloaded EP
 //! (alias of `repro experiment serve_sweep`; accepts --quick/--seed/--out).
+//!
+//! `cluster-sweep` drives the L5 cluster subsystem (`cluster::ClusterSim`):
+//! {1,2,4,8} packages behind each router policy, ramped to the shared SLO
+//! knee. The sweep spans `packages` and `router` itself; the link and
+//! rebalancer knobs override via `serdes_gbps=`/`serdes_lat_us=`/
+//! `rebalance_delta=` (alias of `repro experiment cluster_sweep`).
+//! `REPRO_QUICK=1` implies `--quick` for every experiment command (the CI
+//! smoke path).
 //!
 //! Hand-rolled argument handling (the offline crate set has no clap).
 
@@ -30,13 +40,17 @@ use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value."
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. REPRO_QUICK=1 implies\n--quick."
     );
     ExitCode::FAILURE
 }
 
 fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
     let mut opts = ExpOpts::default();
+    // CI smoke runs set REPRO_QUICK=1 (the same switch the benches honor).
+    if std::env::var("REPRO_QUICK").is_ok() {
+        opts.quick = true;
+    }
     let mut rest = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -182,6 +196,32 @@ fn main() -> ExitCode {
                 Err(format!("serve-sweep takes no positional args (got '{stray}')"))
             } else {
                 experiments::run_by_id("serve_sweep", &opts).map(|_| ())
+            }
+        }
+        "cluster-sweep" => {
+            let (mut opts, rest) = parse_opts(&args[1..]);
+            let parsed = Overrides::parse(&rest).and_then(|ov| {
+                for key in ["packages", "router"] {
+                    if ov.get(key).is_some() {
+                        return Err(format!(
+                            "'{key}' is swept by cluster-sweep itself; only link/\
+                             rebalancer overrides apply here"
+                        ));
+                    }
+                }
+                if ov.is_empty() {
+                    return Ok(None);
+                }
+                let mut cluster = presets::cluster_pod();
+                ov.apply_cluster(&mut cluster)?;
+                Ok(Some(cluster))
+            });
+            match parsed {
+                Ok(cluster) => {
+                    opts.cluster = cluster;
+                    experiments::run_by_id("cluster_sweep", &opts).map(|_| ())
+                }
+                Err(e) => Err(e),
             }
         }
         _ => return usage(),

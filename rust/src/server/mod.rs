@@ -22,11 +22,17 @@
 //!   repetitive low-batch decode).
 //! * [`sim`] — the loop tying it together: batches are bridged into
 //!   per-layer gating via `TraceGenerator::layer_gatings` and costed with
-//!   the same per-layer arithmetic as `engine::timing`.
+//!   the same per-layer arithmetic as `engine::timing`. Besides the
+//!   self-contained `run()`, `ServerSim` exposes stepwise advancement
+//!   (`begin`/`inject`/`step`/`finish`) so the L5 cluster layer
+//!   (`crate::cluster`) can drive many packages on one shared clock;
+//!   `run()` is implemented over `step()`, so both modes are identical by
+//!   construction.
 //!
 //! The RPS sweep (`experiments::serve_sweep`, `repro serve-sweep`) ramps
 //! offered load until SLO violation and reports each strategy's maximum
-//! sustained RPS.
+//! sustained RPS under both the `chat` (Poisson) and `bursty` (on-off)
+//! arrival scenarios.
 
 pub mod arrival;
 pub mod memo;

@@ -26,6 +26,12 @@ pub struct Request {
     pub id: u32,
     /// Arrival time on the simulated clock.
     pub arrival_cycles: u64,
+    /// Earliest cycle the serving package may admit this request. Equals
+    /// `arrival_cycles` for requests born on the package; the L5 cluster
+    /// front-end pushes it later to charge inter-package hand-off (serdes
+    /// transfer + latency) without disturbing the TTFT reference, which
+    /// stays anchored at the original arrival.
+    pub ready_cycles: u64,
     /// Prompt length in tokens (>= 1).
     pub prompt_len: usize,
     /// Output length in tokens (>= 1), counting the prefill-produced one.
@@ -47,6 +53,7 @@ impl Request {
         Request {
             id,
             arrival_cycles,
+            ready_cycles: arrival_cycles,
             prompt_len,
             output_len,
             state: RequestState::Queued,

@@ -57,6 +57,25 @@ impl ContinuousBatcher {
         self.queued.len() + self.running.len()
     }
 
+    /// Remove and return the most recently queued request — the cluster
+    /// rebalancer's preferred migration donor (it has no KV state yet, so
+    /// moving it costs only the prompt hand-off).
+    pub fn steal_newest_queued(&mut self) -> Option<Request> {
+        self.queued.pop_back()
+    }
+
+    /// Evict the most recently admitted in-flight prefill, reverting it to
+    /// `Queued`. Its `prefilled` prefix is kept — the KV built so far
+    /// travels with the request, which is exactly what the cluster's
+    /// KV-migration byte accounting charges for. Decoding requests are
+    /// never evicted (they pace TPOT and are nearly done).
+    pub fn evict_newest_prefill(&mut self) -> Option<Request> {
+        let idx = self.running.iter().rposition(|r| r.state == RequestState::Prefill)?;
+        let mut r = self.running.remove(idx);
+        r.state = RequestState::Queued;
+        Some(r)
+    }
+
     /// Form the next iteration's batch. Returns the per-request chunks in
     /// scheduling order; empty only when there is no work at all.
     pub fn next_batch(&mut self) -> Vec<RequestChunk> {
@@ -207,6 +226,43 @@ mod tests {
         assert_eq!(p.len(), 8);
         assert_eq!(b.in_flight(), 8);
         assert_eq!(b.queue_depth(), 12);
+    }
+
+    #[test]
+    fn steal_takes_newest_queued() {
+        let mut b = batcher();
+        b.enqueue(Request::new(1, 0, 4, 2));
+        b.enqueue(Request::new(2, 10, 4, 2));
+        let stolen = b.steal_newest_queued().unwrap();
+        assert_eq!(stolen.id, 2); // LIFO: the newest waits longest anyway
+        assert_eq!(b.queue_depth(), 1);
+        assert!(b.steal_newest_queued().is_some());
+        assert!(b.steal_newest_queued().is_none());
+    }
+
+    #[test]
+    fn evict_reverts_prefill_and_keeps_progress() {
+        let mut b = batcher();
+        b.enqueue(Request::new(1, 0, 100, 4));
+        let p = b.next_batch(); // 32-token first chunk
+        b.complete_iteration(&p, 500);
+        let r = b.evict_newest_prefill().unwrap();
+        assert_eq!(r.state, RequestState::Queued);
+        assert_eq!(r.prefilled, 32); // KV prefix travels with the request
+        assert_eq!(b.in_flight(), 0);
+        // Re-admission resumes from the kept prefix.
+        let mut b2 = batcher();
+        b2.enqueue(r);
+        let p2 = b2.next_batch();
+        assert_eq!((p2[0].tokens, p2[0].is_prefill), (32, true));
+        b2.complete_iteration(&p2, 1000);
+        assert_eq!(b2.evict_newest_prefill().unwrap().prefilled, 64);
+        // Decode-state requests are never evicted.
+        let mut b3 = batcher();
+        b3.enqueue(Request::new(9, 0, 1, 5));
+        let p3 = b3.next_batch();
+        b3.complete_iteration(&p3, 10); // prefill done -> Decode
+        assert!(b3.evict_newest_prefill().is_none());
     }
 
     #[test]

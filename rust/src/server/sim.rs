@@ -81,6 +81,17 @@ struct IterCost {
 /// package. Deterministic for a given (config, preset, seed). Borrows the
 /// model/hardware/preset configs so sweep loops can fan hundreds of
 /// simulators out of one set of configs without cloning them per run.
+///
+/// Two driving modes share one engine:
+/// * [`ServerSim::run`] — the self-contained loop: seed the configured
+///   arrival stream, iterate to completion, return metrics.
+/// * Stepwise — [`ServerSim::begin`], [`ServerSim::inject`],
+///   [`ServerSim::step`], [`ServerSim::finish`] — the L5 cluster layer's
+///   interface: the front-end owns the arrival stream and the shared
+///   clock, delivers requests to packages as they are routed, and advances
+///   whichever package is furthest behind. `run` is implemented on top of
+///   `step`, so a one-package cluster behind a pass-through router
+///   reproduces `run` bit for bit.
 pub struct ServerSim<'a> {
     model: &'a MoeModelConfig,
     hw: &'a HardwareConfig,
@@ -93,6 +104,14 @@ pub struct ServerSim<'a> {
     memo: Option<LayerMemo>,
     /// Reusable memo-key buffer (see `LayerMemo::key_into`).
     key_scratch: Vec<u32>,
+    // ---- stepwise run state (reset by `begin`) ----
+    batcher: ContinuousBatcher,
+    /// Undelivered requests, sorted by `ready_cycles` *descending* so
+    /// `pop()` yields the earliest; FIFO among equal ready times.
+    pending: Vec<Request>,
+    clock: u64,
+    iter_idx: usize,
+    metrics: ServeMetrics,
 }
 
 impl<'a> ServerSim<'a> {
@@ -126,6 +145,11 @@ impl<'a> ServerSim<'a> {
             arrivals: RequestGenerator::new(preset, rate, hw.freq_hz, cfg.seed),
             memo,
             key_scratch: Vec::new(),
+            batcher: ContinuousBatcher::new(preset),
+            pending: Vec::new(),
+            clock: 0,
+            iter_idx: 0,
+            metrics: ServeMetrics::default(),
             model,
             hw,
             preset,
@@ -205,6 +229,7 @@ impl<'a> ServerSim<'a> {
         &mut self,
         on_iter_wall: &mut dyn FnMut(Duration),
     ) -> ServeMetrics {
+        self.begin();
         let mut pending = match self.cfg.mode {
             LoadMode::Open { duration_s, .. } => {
                 let horizon = (duration_s * self.hw.freq_hz) as u64;
@@ -212,72 +237,182 @@ impl<'a> ServerSim<'a> {
             }
             LoadMode::Burst { n_requests } => self.arrivals.burst(n_requests),
         };
-        let deadline = match self.cfg.mode {
-            LoadMode::Open { duration_s, .. } => {
-                Some((duration_s * self.cfg.drain_factor * self.hw.freq_hz) as u64)
-            }
-            LoadMode::Burst { .. } => None,
-        };
-
-        let mut metrics = ServeMetrics { arrived: pending.len(), ..Default::default() };
-        let mut batcher = ContinuousBatcher::new(self.preset);
-        let mut clock = 0u64;
-        let mut iter_idx = 0usize;
-        // Reverse so pop() walks arrivals in order without shifting.
+        let deadline = self.deadline_cycles();
+        self.metrics.arrived = pending.len();
+        // Reverse so pop() walks arrivals in order without shifting (the
+        // generator emits them sorted ascending).
         pending.reverse();
+        self.pending = pending;
 
-        loop {
-            // Admit everything that has arrived by now.
-            while pending
-                .last()
-                .is_some_and(|r| r.arrival_cycles <= clock)
-            {
-                batcher.enqueue(pending.pop().unwrap());
-            }
-            if !batcher.has_work() {
-                // Idle: jump to the next arrival, or finish.
-                match pending.last() {
-                    Some(r) => {
-                        clock = r.arrival_cycles;
-                        continue;
-                    }
-                    None => break,
-                }
-            }
-            let plan = batcher.next_batch();
-            debug_assert!(!plan.is_empty(), "batcher has work but scheduled nothing");
-            metrics
-                .batch_tokens
-                .push(plan.iter().map(|c| c.tokens).sum::<usize>() as f64);
-            metrics.queue_depth.push(batcher.queue_depth() as f64);
-
-            let t_wall = Instant::now();
-            let cost = self.iteration_cycles(iter_idx, &plan);
-            on_iter_wall(t_wall.elapsed());
-            clock += cost.cycles;
-            metrics.busy_cycles += cost.cycles;
-            metrics.moe_ddr_bytes += cost.ddr_bytes;
-            metrics.moe_d2d_bytes += cost.d2d_bytes;
-            metrics.iterations += 1;
-            iter_idx += 1;
-
-            for r in batcher.complete_iteration(&plan, clock) {
-                metrics.record_completion(&r, self.hw.freq_hz);
-            }
+        while self.next_ready_cycles().is_some() {
+            self.step_with_timer(on_iter_wall);
             if let Some(d) = deadline {
-                if clock > d {
+                if self.clock > d {
                     // Overload cutoff: whatever is still queued, running,
                     // or unadmitted stays uncompleted.
                     break;
                 }
             }
         }
-        metrics.end_cycles = clock;
-        if let Some(memo) = &self.memo {
-            metrics.memo_hits = memo.hits;
-            metrics.memo_misses = memo.misses;
+        self.finish()
+    }
+
+    /// Overload cutoff for the configured mode (open loop only); the
+    /// cluster applies the same formula cluster-wide.
+    pub fn deadline_cycles(&self) -> Option<u64> {
+        match self.cfg.mode {
+            LoadMode::Open { duration_s, .. } => {
+                Some((duration_s * self.cfg.drain_factor * self.hw.freq_hz) as u64)
+            }
+            LoadMode::Burst { .. } => None,
         }
-        metrics
+    }
+
+    // ---- stepwise interface (the L5 cluster layer's driving mode) ----
+
+    /// Reset the run state (clock, batcher, metrics, undelivered requests)
+    /// for a fresh run. The layer memo and the strategy's scratch arena
+    /// are allocation caches and deliberately survive (results are
+    /// identical either way); cross-run *semantic* strategy state is reset
+    /// explicitly via [`ServerSim::reset`].
+    pub fn begin(&mut self) {
+        self.batcher = ContinuousBatcher::new(self.preset);
+        self.pending.clear();
+        self.clock = 0;
+        self.iter_idx = 0;
+        self.metrics = ServeMetrics::default();
+    }
+
+    /// Deliver one externally routed request. Admission happens once the
+    /// package clock reaches `r.ready_cycles`; among equal ready times,
+    /// delivery order is preserved (FIFO).
+    pub fn inject(&mut self, r: Request) {
+        self.metrics.arrived += 1;
+        // `pending` is sorted descending; place the newcomer *before* any
+        // equal keys so existing ones keep popping first.
+        let idx = self
+            .pending
+            .partition_point(|q| q.ready_cycles > r.ready_cycles);
+        self.pending.insert(idx, r);
+    }
+
+    /// Simulated package clock.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Requests on the package in any state short of done: undelivered-
+    /// but-routed, queued, and in flight. The load signal router policies
+    /// compare across packages.
+    pub fn load(&self) -> usize {
+        self.pending.len() + self.batcher.queue_depth() + self.batcher.in_flight()
+    }
+
+    /// Admission-queue depth (excludes in-flight and undelivered).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.queue_depth()
+    }
+
+    /// Earliest cycle at which [`ServerSim::step`] can make progress:
+    /// `Some(clock)` when batched work exists, the next request's ready
+    /// time when idle, `None` when fully drained.
+    pub fn next_ready_cycles(&self) -> Option<u64> {
+        if self.batcher.has_work() {
+            return Some(self.clock);
+        }
+        self.pending.last().map(|r| r.ready_cycles)
+    }
+
+    /// Advance the package by one scheduling iteration: admit everything
+    /// ready (jumping the clock over idle gaps first if necessary), form a
+    /// batch, cost it, and complete requests against the advanced clock.
+    /// Returns the requests completed this step; no-op (empty) when fully
+    /// drained. One call always simulates exactly one iteration unless
+    /// drained — which is what lets the cluster interleave packages
+    /// fairly on a shared clock.
+    pub fn step(&mut self) -> Vec<Request> {
+        self.step_with_timer(&mut |_| {})
+    }
+
+    /// [`ServerSim::step`] with a per-iteration wall-clock callback.
+    pub fn step_with_timer(
+        &mut self,
+        on_iter_wall: &mut dyn FnMut(Duration),
+    ) -> Vec<Request> {
+        self.admit_ready();
+        if !self.batcher.has_work() {
+            // Idle: jump to the next delivery, or report drained.
+            match self.pending.last() {
+                Some(r) => {
+                    self.clock = r.ready_cycles;
+                    self.admit_ready();
+                }
+                None => return Vec::new(),
+            }
+        }
+        let plan = self.batcher.next_batch();
+        debug_assert!(!plan.is_empty(), "batcher has work but scheduled nothing");
+        self.metrics
+            .batch_tokens
+            .push(plan.iter().map(|c| c.tokens).sum::<usize>() as f64);
+        self.metrics.queue_depth.push(self.batcher.queue_depth() as f64);
+
+        let t_wall = Instant::now();
+        let cost = self.iteration_cycles(self.iter_idx, &plan);
+        on_iter_wall(t_wall.elapsed());
+        self.clock += cost.cycles;
+        self.metrics.busy_cycles += cost.cycles;
+        self.metrics.moe_ddr_bytes += cost.ddr_bytes;
+        self.metrics.moe_d2d_bytes += cost.d2d_bytes;
+        self.metrics.iterations += 1;
+        self.iter_idx += 1;
+
+        let done = self.batcher.complete_iteration(&plan, self.clock);
+        for r in &done {
+            self.metrics.record_completion(r, self.hw.freq_hz);
+        }
+        done
+    }
+
+    /// Give up one not-yet-started request for migration to another
+    /// package (rebalancing). Donor preference is cheapest-first: the
+    /// newest undelivered request (still in flight to this package — no
+    /// KV, nothing admitted), then the newest queued request (admitted
+    /// but no KV yet), and only then an evicted in-flight prefill, whose
+    /// built KV prefix has to migrate with it.
+    pub fn donate_for_migration(&mut self) -> Option<Request> {
+        // `pending` is ready-descending, so index 0 is the newest.
+        let r = if self.pending.is_empty() {
+            self.batcher
+                .steal_newest_queued()
+                .or_else(|| self.batcher.evict_newest_prefill())?
+        } else {
+            self.pending.remove(0)
+        };
+        // The receiving package's `inject` re-counts it.
+        self.metrics.arrived -= 1;
+        Some(r)
+    }
+
+    /// Seal the run: stamp end-of-run fields and hand the metrics out.
+    pub fn finish(&mut self) -> ServeMetrics {
+        self.metrics.end_cycles = self.clock;
+        if let Some(memo) = &self.memo {
+            self.metrics.memo_hits = memo.hits;
+            self.metrics.memo_misses = memo.misses;
+        }
+        std::mem::take(&mut self.metrics)
+    }
+
+    /// Admit every pending request whose ready time has passed.
+    fn admit_ready(&mut self) {
+        while self
+            .pending
+            .last()
+            .is_some_and(|r| r.ready_cycles <= self.clock)
+        {
+            self.batcher.enqueue(self.pending.pop().unwrap());
+        }
     }
 
     /// Reset cross-run strategy state (Hydra's EMA etc.).
@@ -383,6 +518,52 @@ mod tests {
         let m = run_sim(LoadMode::Burst { n_requests: 4 }, StrategyKind::Hydra);
         assert_eq!((m.memo_hits, m.memo_misses), (0, 0));
         assert!(m.busy_cycles > 0);
+    }
+
+    #[test]
+    fn stepwise_drive_matches_run() {
+        // Drive a sim via begin/inject/step/finish exactly as the cluster
+        // front-end does (zero hand-off) and compare against the
+        // self-contained run() on an identical twin.
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let mode = LoadMode::Open { rate_rps: 400.0, duration_s: 0.05 };
+        let cfg = quick_cfg(mode, StrategyKind::FseDpPaired);
+        let reference =
+            ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg.clone()).run();
+
+        let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+        sim.begin();
+        let mut gen = RequestGenerator::new(&preset, 400.0, hw.freq_hz, 7);
+        let mut arrivals = gen.stream_until((0.05 * hw.freq_hz) as u64);
+        let deadline = sim.deadline_cycles();
+        arrivals.reverse();
+        loop {
+            let next_arrival = arrivals.last().map(|r| r.ready_cycles);
+            match (sim.next_ready_cycles(), next_arrival) {
+                // Deliveries strictly precede any step at the same cycle,
+                // mirroring run()'s admit-before-batch ordering.
+                (Some(t), Some(a)) if a <= t => sim.inject(arrivals.pop().unwrap()),
+                (None, Some(_)) => sim.inject(arrivals.pop().unwrap()),
+                (Some(_), _) => {
+                    sim.step();
+                    if deadline.is_some_and(|d| sim.clock() > d) {
+                        break;
+                    }
+                }
+                (None, None) => break,
+            }
+        }
+        let m = sim.finish();
+        assert_eq!(m.arrived, reference.arrived);
+        assert_eq!(m.completed, reference.completed);
+        assert_eq!(m.iterations, reference.iterations);
+        assert_eq!(m.end_cycles, reference.end_cycles);
+        assert_eq!(m.busy_cycles, reference.busy_cycles);
+        assert_eq!(m.ttft_us.samples(), reference.ttft_us.samples());
+        assert_eq!(m.tpot_us.samples(), reference.tpot_us.samples());
+        assert_eq!((m.memo_hits, m.memo_misses), (reference.memo_hits, reference.memo_misses));
     }
 
     #[test]

@@ -23,6 +23,12 @@ impl Summary {
         self.samples.len()
     }
 
+    /// Raw samples in insertion order — used by the cluster layer to merge
+    /// per-package summaries into one canonical (sorted) distribution.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }

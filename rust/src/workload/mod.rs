@@ -305,8 +305,9 @@ impl TraceGenerator {
 }
 
 /// Sample `k` distinct experts proportional to `weights` (sequential
-/// weighted sampling without replacement).
-fn sample_topk(rng: &mut Rng, weights: &[f64], k: usize) -> Vec<ExpertId> {
+/// weighted sampling without replacement). Shared with the cluster
+/// front-end's affinity router, which draws gating *hints* the same way.
+pub(crate) fn sample_topk(rng: &mut Rng, weights: &[f64], k: usize) -> Vec<ExpertId> {
     debug_assert!(k <= weights.len());
     let mut w = weights.to_vec();
     let mut picked = Vec::with_capacity(k);

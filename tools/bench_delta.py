@@ -8,6 +8,7 @@ Usage: bench_delta.py PREVIOUS.json CURRENT.json
 """
 
 import json
+import os
 import sys
 
 # ops_per_s drop beyond this fraction is annotated as a regression.
@@ -24,11 +25,25 @@ def main():
     if len(sys.argv) != 3:
         print(__doc__.strip())
         return 0
+    if not os.path.exists(sys.argv[1]):
+        print(
+            "::notice::no BENCH_serve.json snapshot committed yet — run "
+            "`cargo bench --bench perf_hotpath` and commit rust/BENCH_serve.json "
+            "to start the perf trajectory"
+        )
+        return 0
     try:
         prev, cur = load(sys.argv[1]), load(sys.argv[2])
     except (OSError, ValueError) as e:
         print(f"::notice::bench delta skipped: {e}")
         return 0
+    prev_results = prev.get("results", [])
+    if prev_results and all(not r.get("ops_per_s") for r in prev_results):
+        print(
+            "::notice::committed BENCH_serve.json is a structural placeholder "
+            "(all-zero ops) — commit a real `cargo bench --bench perf_hotpath` "
+            "run to anchor deltas"
+        )
 
     prev_by_name = {r["name"]: r for r in prev.get("results", [])}
     rows = []

@@ -13,7 +13,10 @@
 //!  5. the L5 cluster hot paths: per-arrival router decision throughput
 //!     (`router_route/*`) and cluster stepping (`cluster_step/*` — the
 //!     candidate-selection + delivery + package-step loop over 4 packages);
-//!  6. numeric serving latency through PJRT (when artifacts exist).
+//!  6. the streaming-telemetry hot paths (`sketch_push`, `sketch_merge`,
+//!     `summary_quantile`) — ingestion, canonical merging, and the
+//!     dirty-bit quantile cache;
+//!  7. numeric serving latency through PJRT (when artifacts exist).
 //!
 //! Besides the human-readable output, results are written to
 //! `BENCH_serve.json` (in the cargo working directory) as
@@ -31,7 +34,7 @@ use expert_streaming::engine::serve::NumericEngine;
 use expert_streaming::moe::{default_num_slices, ExpertGeometry};
 use expert_streaming::runtime::artifacts::Manifest;
 use expert_streaming::server::{LoadMode, Request, ServerConfig, ServerSim};
-use expert_streaming::util::{parallel_map, pool_size, Summary};
+use expert_streaming::util::{parallel_map, pool_size, QuantileSketch, Rng, Summary};
 use expert_streaming::workload::{shard_layer, TraceGenerator};
 use std::collections::HashSet;
 use std::time::Instant;
@@ -312,6 +315,81 @@ fn bench_cluster_step(records: &mut Vec<BenchRecord>) {
     });
 }
 
+/// Streaming-telemetry hot paths: sketch ingestion, canonical sketch
+/// merging (the cluster aggregation path), and cached Summary quantiles
+/// (the SLO-probe path — repeated `p99()` must not re-sort). Batched per
+/// timed op like `router_route`, with `p99_us` reported per single op.
+fn bench_telemetry(records: &mut Vec<BenchRecord>) {
+    const BATCH: usize = 4096;
+    let push_record = |name: &str, batches_per_s: f64, p99_batch_us: f64,
+                       records: &mut Vec<BenchRecord>| {
+        let ops_per_s = batches_per_s * BATCH as f64;
+        let p99_us = p99_batch_us / BATCH as f64;
+        println!(
+            "[perf] telemetry {:<18} {:>12.0} ops/s (p99-batch/{BATCH} {:>9.5} us)",
+            name, ops_per_s, p99_us
+        );
+        records.push(BenchRecord { name: name.into(), ops_per_s, p99_us });
+    };
+
+    // Seeded lognormal latencies, the sketch's target distribution.
+    let mut rng = Rng::new(7);
+    let values: Vec<f64> = (0..BATCH).map(|_| 1e3 * rng.normal().exp()).collect();
+
+    // 1. sketch_push: ingestion cost per sample.
+    let mut sketch = QuantileSketch::default();
+    let (b, p) = measure(reps(500), || {
+        for &v in &values {
+            sketch.push(v);
+        }
+    });
+    std::hint::black_box(sketch.quantile(0.99));
+    push_record("sketch_push", b, p, records);
+
+    // 2. sketch_merge: canonical 8-way merges (one merge = one op; the
+    //    batch is BATCH/8 merges so the timer does not dominate).
+    let parts: Vec<QuantileSketch> = (0..8)
+        .map(|i| {
+            let mut s = QuantileSketch::default();
+            let mut r = Rng::new(11 + i);
+            for _ in 0..1024 {
+                s.push(1e3 * r.normal().exp());
+            }
+            s
+        })
+        .collect();
+    let refs: Vec<&QuantileSketch> = parts.iter().collect();
+    const MERGES: usize = 512;
+    let (b, p) = measure(reps(50), || {
+        for _ in 0..MERGES {
+            std::hint::black_box(QuantileSketch::merge_canonical(&refs));
+        }
+    });
+    let merges_per_s = b * MERGES as f64;
+    let p99_us = p / MERGES as f64;
+    println!(
+        "[perf] telemetry {:<18} {:>12.0} ops/s (8-way, p99-batch/{MERGES} {:>9.5} us)",
+        "sketch_merge", merges_per_s, p99_us
+    );
+    records.push(BenchRecord { name: "sketch_merge".into(), ops_per_s: merges_per_s, p99_us });
+
+    // 3. summary_quantile: repeated quantiles on a populated Summary —
+    //    the dirty-bit cache path `ServeMetrics::meets` hits twice per
+    //    bisection probe (one sort total, not one per call).
+    let mut summary = Summary::new();
+    summary.extend(&values);
+    let mut qi = 0usize;
+    let (b, p) = measure(reps(500), || {
+        for _ in 0..BATCH {
+            let q = [0.5, 0.9, 0.99][qi % 3];
+            std::hint::black_box(summary.quantile(q));
+            qi += 1;
+        }
+    });
+    push_record("summary_quantile", b, p, records);
+    assert_eq!(summary.sort_count(), 1, "repeated quantiles re-sorted");
+}
+
 fn bench_numeric_serving(records: &mut Vec<BenchRecord>) {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
@@ -372,6 +450,7 @@ fn main() {
     bench_parallel_sweep(&mut records);
     bench_router_decisions(&mut records);
     bench_cluster_step(&mut records);
+    bench_telemetry(&mut records);
     bench_numeric_serving(&mut records);
     write_json(&records, memo_hit_rate);
 }

@@ -2,25 +2,31 @@
 //! view the sweep reports — latency tails over the union of completions,
 //! goodput, link traffic, and load-imbalance statistics.
 //!
-//! Aggregation is **canonical**: per-request latency samples from all
-//! packages are merged and sorted (total order) before the summary is
-//! built, and imbalance statistics sort their per-package inputs, so the
-//! aggregate is bit-identical under any permutation of the package list —
-//! one of the determinism properties `tests/cluster_determinism.rs` pins.
+//! Aggregation is **canonical** in both telemetry modes, so the aggregate
+//! is bit-identical under any permutation of the package list — one of
+//! the determinism properties `tests/cluster_determinism.rs` pins. In
+//! exact mode, per-request latency samples from all packages are
+//! concatenated and sorted (total order) before the merged summary is
+//! built. In sketch mode (the sweeps' default), per-package
+//! `QuantileSketch`es are folded in a canonical content order — sketch
+//! bins are integer counters, and the one f64 accumulator (`sum`) is
+//! added in the sorted order, so the fold commutes bit-for-bit (see
+//! `util::sketch::QuantileSketch::merge_canonical`). Imbalance statistics
+//! sort their per-package inputs for the same reason.
 
 use crate::config::SloConfig;
 use crate::server::ServeMetrics;
-use crate::util::Summary;
+use crate::util::Dist;
 
 /// Aggregated outcome of one cluster run.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterMetrics {
     /// Merged time-to-first-token distribution (µs, simulated).
-    pub ttft_us: Summary,
+    pub ttft_us: Dist,
     /// Merged time-per-output-token distribution.
-    pub tpot_us: Summary,
+    pub tpot_us: Dist,
     /// Merged end-to-end latency distribution.
-    pub e2e_us: Summary,
+    pub e2e_us: Dist,
     /// Requests offered to the cluster front-end.
     pub arrived: usize,
     /// Requests completed across all packages.
@@ -55,15 +61,9 @@ impl ClusterMetrics {
         migrations: usize,
     ) -> ClusterMetrics {
         assert_eq!(per_package.len(), routed.len());
-        let merge = |pick: &dyn Fn(&ServeMetrics) -> &Summary| -> Summary {
-            let mut all: Vec<f64> = per_package
-                .iter()
-                .flat_map(|m| pick(m).samples().iter().copied())
-                .collect();
-            all.sort_unstable_by(f64::total_cmp);
-            let mut s = Summary::new();
-            s.extend(&all);
-            s
+        let merge = |pick: &dyn Fn(&ServeMetrics) -> &Dist| -> Dist {
+            let parts: Vec<&Dist> = per_package.iter().map(|m| pick(m)).collect();
+            Dist::merge_canonical(&parts)
         };
         ClusterMetrics {
             ttft_us: merge(&|m| &m.ttft_us),

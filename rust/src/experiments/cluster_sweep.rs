@@ -29,7 +29,7 @@ use crate::config::{
     StrategyKind,
 };
 use crate::server::{resolve_slo, LoadMode, ServerConfig, ServerSim};
-use crate::util::{parallel_map, Table};
+use crate::util::{parallel_map, Table, TelemetryMode};
 
 /// Completion fraction below which a run counts as saturated (shared with
 /// `serve_sweep`).
@@ -53,6 +53,9 @@ struct Sweep {
     requests_per_package: usize,
     grid: &'static [f64],
     bisections: usize,
+    /// `Sketch` (default; O(1) memory per cell) or `Exact` via
+    /// `--exact-tails` (bit-identical pre-sketch outputs).
+    telemetry: TelemetryMode,
 }
 
 /// One cell's outcome: the refined knee and the metrics observed there.
@@ -72,7 +75,13 @@ impl Sweep {
         let hw = presets::mcm_2x2();
         let total_requests = self.requests_per_package * n_packages;
         let mode = LoadMode::Open { rate_rps, duration_s: total_requests as f64 / rate_rps };
-        let cfg = ServerConfig { strategy: scheme, mode, seed: self.seed, ..Default::default() };
+        let cfg = ServerConfig {
+            strategy: scheme,
+            mode,
+            seed: self.seed,
+            telemetry: self.telemetry,
+            ..Default::default()
+        };
         let cluster = ClusterConfig { n_packages, router, ..self.base.clone() };
         ClusterSim::new(&self.model, &hw, Dataset::C4, &self.preset, cfg, cluster).run()
     }
@@ -157,9 +166,10 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         preset: presets::serve_chat(),
         base: opts.cluster.clone().unwrap_or_else(presets::cluster_pod),
         seed: opts.seed,
-        requests_per_package: if opts.quick { 10 } else { 24 },
+        requests_per_package: opts.requests.unwrap_or(if opts.quick { 10 } else { 24 }),
         grid: if opts.quick { &[0.5, 1.0] } else { &[0.45, 0.7, 1.0] },
         bisections: if opts.quick { 2 } else { 3 },
+        telemetry: if opts.exact_tails { TelemetryMode::Exact } else { TelemetryMode::Sketch },
     };
 
     // 1. Single-package EP calibration (the same anchors as serve_sweep).
@@ -282,6 +292,35 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             ]);
         }
     }
+
+    // 4. Bounded time-series export: per-package traces from the knee of
+    //    one representative cell (FSE-DP+paired, widest package count,
+    //    JSQ). Reuses the knee run's metrics — no extra simulation.
+    let mut ts_t = Table::new(
+        "cluster_sweep timeseries: per-package traces at the knee \
+         (FSE-DP+paired, max packages, JSQ)",
+        &["package", "channel", "t_us", "value"],
+    );
+    let rep_si = 0; // FseDpPaired
+    let rep_ni = PACKAGES.len() - 1;
+    let rep_ri = ROUTERS.iter().position(|r| matches!(r, RouterKind::Jsq)).unwrap();
+    let rep_idx = cells
+        .iter()
+        .position(|&c| c == (rep_si, rep_ni, rep_ri))
+        .expect("representative cell missing");
+    if let Some(knee) = &results[rep_idx].knee {
+        for (pkg, m) in knee.per_package.iter().enumerate() {
+            for (channel, t, v) in m.series.rows() {
+                ts_t.row(vec![
+                    format!("{pkg}"),
+                    channel.into(),
+                    format!("{t:.1}"),
+                    format!("{v:.4}"),
+                ]);
+            }
+        }
+    }
+    super::save(&ts_t, opts, "cluster_sweep_timeseries");
 
     super::save(&detail, opts, "cluster_sweep");
     super::save(&summary, opts, "cluster_sweep_summary");

@@ -60,11 +60,26 @@ pub struct ExpOpts {
     /// rebalancing, affinity knobs). `None` = `presets::cluster_pod()`;
     /// the sweep overrides `n_packages`/`router` per grid cell either way.
     pub cluster: Option<ClusterConfig>,
+    /// Request horizon per sweep point (`serve_sweep`) or per package
+    /// (`cluster_sweep`); `None` = the preset default. Telemetry is O(1)
+    /// memory per cell in sketch mode, so this can be raised freely.
+    pub requests: Option<usize>,
+    /// Record exact sample vectors in the sweeps instead of fixed-memory
+    /// sketches — restores pre-sketch outputs bit for bit (small runs).
+    pub exact_tails: bool,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { quick: false, seed: 7, out_dir: "results".into(), threads: 0, cluster: None }
+        ExpOpts {
+            quick: false,
+            seed: 7,
+            out_dir: "results".into(),
+            threads: 0,
+            cluster: None,
+            requests: None,
+            exact_tails: false,
+        }
     }
 }
 

@@ -27,7 +27,7 @@
 use super::ExpOpts;
 use crate::config::{presets, Dataset, MoeModelConfig, ServePreset, SloConfig, StrategyKind};
 use crate::server::{resolve_slo, LoadMode, ServeMetrics, ServerConfig, ServerSim};
-use crate::util::{parallel_map, Table};
+use crate::util::{parallel_map, Table, TelemetryMode};
 
 /// Completion fraction below which a run counts as saturated regardless of
 /// the latency tails it managed to record before the cutoff.
@@ -45,6 +45,9 @@ struct Sweep {
     seed: u64,
     requests_per_point: usize,
     threads: usize,
+    /// `Sketch` (the default — O(1) memory per point, long horizons) or
+    /// `Exact` via `--exact-tails` (bit-identical pre-sketch outputs).
+    telemetry: TelemetryMode,
 }
 
 impl Sweep {
@@ -55,7 +58,13 @@ impl Sweep {
         mode: LoadMode,
     ) -> ServeMetrics {
         let hw = presets::mcm_2x2();
-        let cfg = ServerConfig { strategy, mode, seed: self.seed, ..Default::default() };
+        let cfg = ServerConfig {
+            strategy,
+            mode,
+            seed: self.seed,
+            telemetry: self.telemetry,
+            ..Default::default()
+        };
         ServerSim::new(&self.model, &hw, Dataset::C4, preset, cfg).run()
     }
 
@@ -146,8 +155,9 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         model: if opts.quick { presets::tiny_moe() } else { presets::deepseek_moe() },
         preset: presets::serve_chat(),
         seed: opts.seed,
-        requests_per_point: if opts.quick { 16 } else { 24 },
+        requests_per_point: opts.requests.unwrap_or(if opts.quick { 16 } else { 24 }),
         threads: opts.threads,
+        telemetry: if opts.exact_tails { TelemetryMode::Exact } else { TelemetryMode::Sketch },
     };
 
     // 1. Calibration on EP (the baseline every speedup is quoted against).
@@ -300,6 +310,28 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             if ok { "ok".into() } else { "VIOLATED".to_string() },
         ]);
     }
+
+    // 5. Bounded time-series export: per-iteration traces from the 0.80x
+    //    grid point of every scheme (reuses the already-simulated grid
+    //    runs — no extra simulation). Long format; see `util::timeseries`
+    //    for how the stride-doubling retention works.
+    let mut ts_t = Table::new(
+        "serve_sweep timeseries: bounded per-iteration traces at 0.80x EP capacity",
+        &["scheme", "channel", "t_us", "value"],
+    );
+    let gi = GRID.iter().position(|&m| m == 0.80).unwrap();
+    for (si, scheme) in SCHEMES.iter().enumerate() {
+        let m = &grid_metrics[gi * SCHEMES.len() + si];
+        for (channel, t, v) in m.series.rows() {
+            ts_t.row(vec![
+                scheme.name().into(),
+                channel.into(),
+                format!("{t:.1}"),
+                format!("{v:.4}"),
+            ]);
+        }
+    }
+    super::save(&ts_t, opts, "serve_sweep_timeseries");
 
     super::save(&load_t, opts, "serve_sweep_load");
     super::save(&sum_t, opts, "serve_sweep_summary");

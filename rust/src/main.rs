@@ -40,7 +40,7 @@ use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. REPRO_QUICK=1 implies\n--quick."
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick."
     );
     ExitCode::FAILURE
 }
@@ -68,6 +68,11 @@ fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
                 i += 1;
                 opts.threads = args.get(i).and_then(|s| s.parse().ok()).unwrap_or(0);
             }
+            "--requests" => {
+                i += 1;
+                opts.requests = args.get(i).and_then(|s| s.parse().ok());
+            }
+            "--exact-tails" => opts.exact_tails = true,
             other => rest.push(other.to_string()),
         }
         i += 1;

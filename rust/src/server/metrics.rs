@@ -1,24 +1,33 @@
 //! Serving metrics: TTFT, TPOT, end-to-end latency, and queue depth, with
 //! p50/p95/p99 summaries and the SLO predicate the RPS sweep enforces.
+//!
+//! Distributions record into [`Dist`] — exact sample vectors by default
+//! (determinism pins, small runs), fixed-memory quantile sketches when the
+//! run is long (the sweeps' default; see `util::sketch`). A bounded
+//! [`SeriesSet`] carries per-iteration traces for CSV export.
 
 use super::request::Request;
 use crate::config::{HardwareConfig, SloConfig};
-use crate::util::Summary;
+use crate::util::{Dist, SeriesSet, TelemetryMode};
 
 /// Aggregated metrics of one serving run. Latencies are recorded in
 /// microseconds of simulated time.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     /// Time to first token (queueing + prefill), completed requests.
-    pub ttft_us: Summary,
+    pub ttft_us: Dist,
     /// Time per output token after the first.
-    pub tpot_us: Summary,
+    pub tpot_us: Dist,
     /// End-to-end request latency.
-    pub e2e_us: Summary,
+    pub e2e_us: Dist,
     /// Admission-queue depth sampled once per iteration.
-    pub queue_depth: Summary,
+    pub queue_depth: Dist,
     /// Tokens scheduled per iteration (batch efficiency).
-    pub batch_tokens: Summary,
+    pub batch_tokens: Dist,
+    /// Bounded per-iteration traces ("queue_depth", "batch_tokens",
+    /// "busy_frac", "memo_hit_rate") for time-series CSV export; fixed
+    /// capacity via stride-doubling decimation.
+    pub series: SeriesSet,
     /// Requests offered to the system.
     pub arrived: usize,
     /// Requests fully completed.
@@ -42,6 +51,33 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Fresh metrics whose distribution fields all record in `mode`.
+    pub fn with_mode(mode: TelemetryMode) -> Self {
+        ServeMetrics {
+            ttft_us: Dist::new(mode),
+            tpot_us: Dist::new(mode),
+            e2e_us: Dist::new(mode),
+            queue_depth: Dist::new(mode),
+            batch_tokens: Dist::new(mode),
+            ..Default::default()
+        }
+    }
+
+    /// Mode of the distribution recorders (all fields share one).
+    pub fn telemetry_mode(&self) -> TelemetryMode {
+        self.ttft_us.mode()
+    }
+
+    /// Retained distribution memory cells across all five recorders —
+    /// O(completed requests) in exact mode, constant in sketch mode.
+    pub fn dist_mem_cells(&self) -> usize {
+        self.ttft_us.mem_cells()
+            + self.tpot_us.mem_cells()
+            + self.e2e_us.mem_cells()
+            + self.queue_depth.mem_cells()
+            + self.batch_tokens.mem_cells()
+    }
+
     pub fn record_completion(&mut self, r: &Request, freq_hz: f64) {
         let us = |c: f64| c / freq_hz * 1e6;
         self.completed += 1;

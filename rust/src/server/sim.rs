@@ -17,11 +17,13 @@
 use super::arrival::RequestGenerator;
 use super::memo::{LayerMemo, LayerOutcome};
 use super::metrics::ServeMetrics;
+use super::request::Request;
 use super::scheduler::ContinuousBatcher;
 use crate::config::{Dataset, HardwareConfig, MoeModelConfig, ServePreset, StrategyKind};
 use crate::coordinator::{make_strategy, LayerCtx, Strategy};
 use crate::engine::timing::attention_cycles;
 use crate::moe::{default_num_slices, ExpertGeometry};
+use crate::util::{cycles_to_us, TelemetryMode};
 use crate::workload::{shard_layer, RequestChunk, TraceGenerator};
 use std::collections::HashSet;
 use std::time::{Duration, Instant};
@@ -54,6 +56,10 @@ pub struct ServerConfig {
     /// either way (the memo only skips re-simulating identical layers).
     /// Automatically disabled for stateful strategies (Hydra).
     pub memo: bool,
+    /// How latency/occupancy distributions are recorded: `Exact` (default;
+    /// every sample retained, `samples()` available) or `Sketch` (fixed
+    /// memory per distribution — what the sweeps use for long horizons).
+    pub telemetry: TelemetryMode,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +72,7 @@ impl Default for ServerConfig {
             mode: LoadMode::Burst { n_requests: 8 },
             drain_factor: 4.0,
             memo: true,
+            telemetry: TelemetryMode::Exact,
         }
     }
 }
@@ -149,7 +156,7 @@ impl<'a> ServerSim<'a> {
             pending: Vec::new(),
             clock: 0,
             iter_idx: 0,
-            metrics: ServeMetrics::default(),
+            metrics: ServeMetrics::with_mode(cfg.telemetry),
             model,
             hw,
             preset,
@@ -280,7 +287,7 @@ impl<'a> ServerSim<'a> {
         self.pending.clear();
         self.clock = 0;
         self.iter_idx = 0;
-        self.metrics = ServeMetrics::default();
+        self.metrics = ServeMetrics::with_mode(self.cfg.telemetry);
     }
 
     /// Deliver one externally routed request. Admission happens once the
@@ -352,10 +359,10 @@ impl<'a> ServerSim<'a> {
         }
         let plan = self.batcher.next_batch();
         debug_assert!(!plan.is_empty(), "batcher has work but scheduled nothing");
-        self.metrics
-            .batch_tokens
-            .push(plan.iter().map(|c| c.tokens).sum::<usize>() as f64);
-        self.metrics.queue_depth.push(self.batcher.queue_depth() as f64);
+        let batch_toks = plan.iter().map(|c| c.tokens).sum::<usize>() as f64;
+        let depth = self.batcher.queue_depth() as f64;
+        self.metrics.batch_tokens.push(batch_toks);
+        self.metrics.queue_depth.push(depth);
 
         let t_wall = Instant::now();
         let cost = self.iteration_cycles(self.iter_idx, &plan);
@@ -366,6 +373,24 @@ impl<'a> ServerSim<'a> {
         self.metrics.moe_d2d_bytes += cost.d2d_bytes;
         self.metrics.iterations += 1;
         self.iter_idx += 1;
+
+        // Bounded per-iteration traces, stamped at the post-iteration
+        // clock. Fixed memory regardless of run length (see
+        // `util::timeseries`), so this is on unconditionally.
+        let t_us = cycles_to_us(self.clock, self.hw.freq_hz);
+        self.metrics.series.push("queue_depth", t_us, depth);
+        self.metrics.series.push("batch_tokens", t_us, batch_toks);
+        let busy_frac = if self.clock > 0 {
+            self.metrics.busy_cycles as f64 / self.clock as f64
+        } else {
+            0.0
+        };
+        self.metrics.series.push("busy_frac", t_us, busy_frac);
+        let hit_rate = self.memo.as_ref().map_or(0.0, |m| {
+            let total = m.hits + m.misses;
+            if total == 0 { 0.0 } else { m.hits as f64 / total as f64 }
+        });
+        self.metrics.series.push("memo_hit_rate", t_us, hit_rate);
 
         let done = self.batcher.complete_iteration(&plan, self.clock);
         for r in &done {

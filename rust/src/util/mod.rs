@@ -5,18 +5,54 @@
 //! carries its own deterministic PRNG, a minimal JSON reader for the
 //! artifact manifest, a fixed-width table printer for experiment output,
 //! summary statistics, and a scoped worker pool for parallel sweeps.
+//!
+//! # Streaming telemetry
+//!
+//! Long serving sweeps ("millions of requests") cannot afford to retain
+//! every latency sample, so the telemetry layer is dual-mode:
+//!
+//! * [`stats::Summary`] — exact; keeps all samples, quantiles served from
+//!   a dirty-bit sorted cache (one sort per batch of pushes, not per
+//!   call). Default for direct `ServerSim` use and `--exact-tails` sweeps.
+//! * [`sketch::QuantileSketch`] — fixed memory; log-spaced bins over a
+//!   configurable `[lo, hi)` plus *exact* count/sum/min/max side-counters.
+//!   Quantiles carry a documented relative-error bound of
+//!   `sqrt(gamma) - 1` (~1.4% at the default 1024 bins over `[1e-3, 1e9)`
+//!   µs). Default for `serve-sweep` / `cluster-sweep`.
+//!
+//! Determinism and merge guarantees: a sketch's bins are integer counters,
+//! so `push` order never changes its state. The only f64 accumulator is
+//! `sum`, whose addition is order-sensitive; multi-way merges therefore go
+//! through `merge_canonical`, which sorts the parts by a total order on
+//! their *content* before folding — merging per-package sketches is
+//! bit-identical under any package permutation (and thread count). Exact
+//! mode gets the same guarantee by concatenating and sorting all samples
+//! with `f64::total_cmp`.
+//!
+//! [`timeseries::TimeSeries`] bounds per-iteration traces (queue depth,
+//! batch occupancy, busy fraction, memo hit rate): a fixed-capacity ring
+//! that drops every other point and doubles its sampling stride on
+//! overflow, so retained points are always a uniform subsample. The sweep
+//! experiments export these as long-format `*_timeseries.csv` files with
+//! columns `(scheme-or-package, channel, t_us, value)` — one row per
+//! retained point; filter by `channel`, plot `value` against `t_us`
+//! (simulated microseconds).
 
 pub mod json;
 pub mod parallel;
 pub mod rng;
+pub mod sketch;
 pub mod stats;
 pub mod table;
+pub mod timeseries;
 
 pub use json::Json;
 pub use parallel::{parallel_map, pool_size};
 pub use rng::Rng;
-pub use stats::Summary;
+pub use sketch::{QuantileSketch, SketchConfig};
+pub use stats::{Dist, Summary, TelemetryMode};
 pub use table::Table;
+pub use timeseries::{SeriesSet, TimeSeries};
 
 /// Integer ceil-division for timing arithmetic.
 #[inline]

@@ -1,0 +1,374 @@
+//! Fixed-memory quantile sketch for streaming telemetry.
+//!
+//! `QuantileSketch` replaces `Vec<f64>` sample retention on the serving
+//! metrics hot path: memory is O(bins) — independent of how many samples
+//! are pushed — so an RPS sweep cell can run millions of requests without
+//! growing. The design is deliberately simple and *deterministic*:
+//!
+//! * **Fixed log-spaced bins** over a configurable `[lo, hi)` range: bin
+//!   `i` covers `[lo·γ^i, lo·γ^(i+1))` with `γ = (hi/lo)^(1/n_bins)`.
+//!   Values below `lo` (including zero/negative) land in an underflow
+//!   bucket, values at or above `hi` in an overflow bucket.
+//! * **Exact side-counters**: count, sum, min, and max are tracked
+//!   exactly, so `mean()`, `min()`, and `max()` are *not* approximations —
+//!   only `quantile()` is.
+//! * **Error bound**: `quantile()` reports the geometric midpoint of the
+//!   bin holding the target rank, clamped to `[min, max]`. For samples
+//!   inside `[lo, hi)` the reported value is within a factor `√γ` of a
+//!   sample at that rank, i.e. relative error ≤ `√γ − 1`
+//!   ([`SketchConfig::rel_error_bound`]; ≈1.4% for the default 1024 bins
+//!   over 12 decades). Ranks resolving to the underflow (overflow) bucket
+//!   return the exact `min` (`max`).
+//! * **Mergeable and order-invariant**: [`QuantileSketch::merge`] adds bin
+//!   counts (u64 — exact and associative). The float side-counters make a
+//!   naive fold order-sensitive (f64 addition is not associative), so
+//!   multi-way aggregation goes through [`QuantileSketch::merge_canonical`],
+//!   which first sorts the parts by a total order on their contents: the
+//!   result is bit-identical under any permutation of the inputs — the
+//!   property `tests/cluster_determinism.rs` pins for cluster aggregation.
+//!
+//! Determinism: push/merge/quantile perform the same float operations in
+//! the same order for the same logical content, so identical runs produce
+//! bit-identical sketches — no wall clock, no hashing, no randomness.
+
+/// Bin layout of a sketch. Sketches can only merge when their configs are
+/// identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SketchConfig {
+    /// Lower edge of the binned range (must be > 0).
+    pub lo: f64,
+    /// Upper edge of the binned range (exclusive; must be > `lo`).
+    pub hi: f64,
+    /// Number of log-spaced bins between `lo` and `hi`.
+    pub n_bins: usize,
+}
+
+impl Default for SketchConfig {
+    /// Default telemetry range: the metrics layer records in microseconds
+    /// of simulated time, so `[1e-3, 1e9)` µs spans 1 ns to ~17 minutes —
+    /// every latency the simulator can produce — at ≤1.4% relative error.
+    fn default() -> Self {
+        SketchConfig { lo: 1e-3, hi: 1e9, n_bins: 1024 }
+    }
+}
+
+impl SketchConfig {
+    /// Per-bin growth factor γ.
+    pub fn gamma(&self) -> f64 {
+        (self.hi / self.lo).powf(1.0 / self.n_bins as f64)
+    }
+
+    /// Documented relative-error bound of `quantile()` for in-range
+    /// samples: √γ − 1 (the reported bin midpoint vs. any sample in that
+    /// bin).
+    pub fn rel_error_bound(&self) -> f64 {
+        self.gamma().sqrt() - 1.0
+    }
+
+    fn validate(&self) {
+        assert!(self.lo > 0.0 && self.hi > self.lo, "sketch range must be 0 < lo < hi");
+        assert!(self.n_bins >= 2, "sketch needs at least 2 bins");
+    }
+}
+
+/// Mergeable fixed-memory quantile sketch. See the module docs for the
+/// determinism and error guarantees.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantileSketch {
+    cfg: SketchConfig,
+    /// Cached 1/ln γ and ln lo for the index computation.
+    inv_ln_gamma: f64,
+    ln_lo: f64,
+    count: u64,
+    sum: f64,
+    /// +∞ / −∞ sentinels while empty; accessors report 0.0 then.
+    min: f64,
+    max: f64,
+    under: u64,
+    over: u64,
+    bins: Vec<u64>,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new(SketchConfig::default())
+    }
+}
+
+impl QuantileSketch {
+    pub fn new(cfg: SketchConfig) -> Self {
+        cfg.validate();
+        QuantileSketch {
+            inv_ln_gamma: 1.0 / cfg.gamma().ln(),
+            ln_lo: cfg.lo.ln(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            under: 0,
+            over: 0,
+            bins: vec![0; cfg.n_bins],
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &SketchConfig {
+        &self.cfg
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        if v < self.cfg.lo {
+            self.under += 1;
+        } else if v >= self.cfg.hi {
+            self.over += 1;
+        } else {
+            let idx = ((v.ln() - self.ln_lo) * self.inv_ln_gamma) as usize;
+            self.bins[idx.min(self.cfg.n_bins - 1)] += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean (sum and count are exact side-counters); 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Exact minimum; 0.0 when empty (matching `Summary`).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.min
+    }
+
+    /// Exact maximum; 0.0 when empty (matching `Summary`).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.max
+    }
+
+    /// Approximate quantile, q in [0, 1] — nearest-rank over the bin
+    /// histogram, reported as the geometric midpoint of the target bin
+    /// clamped to the exact `[min, max]`. See the module docs for the
+    /// relative-error bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let target = pos.round() as u64;
+        let mut cum = self.under;
+        if target < cum {
+            return self.min;
+        }
+        for (i, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if target < cum {
+                let mid = (self.ln_lo + (i as f64 + 0.5) / self.inv_ln_gamma).exp();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another sketch into this one (bin-wise). Both sketches must
+    /// share a config. Bin counts add exactly; `sum` is a float add, so
+    /// use [`QuantileSketch::merge_canonical`] when the fold order must
+    /// not matter.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert_eq!(self.cfg, other.cfg, "cannot merge sketches with different configs");
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        self.under += other.under;
+        self.over += other.over;
+        for (b, &o) in self.bins.iter_mut().zip(&other.bins) {
+            *b += o;
+        }
+    }
+
+    /// Merge many sketches into one, bit-identically under any permutation
+    /// of `parts`: the inputs are first ordered by a total order on their
+    /// contents, then folded. Returns an empty default-config sketch when
+    /// `parts` is empty.
+    pub fn merge_canonical(parts: &[&QuantileSketch]) -> QuantileSketch {
+        let mut order: Vec<&QuantileSketch> = parts.to_vec();
+        order.sort_by(|a, b| Self::canonical_cmp(a, b));
+        let mut out = match order.first() {
+            Some(p) => QuantileSketch::new(p.cfg),
+            None => QuantileSketch::default(),
+        };
+        for p in order {
+            out.merge(p);
+        }
+        out
+    }
+
+    /// A total order on sketch contents (any total order works — it only
+    /// has to be deterministic and permutation-free).
+    fn canonical_cmp(a: &QuantileSketch, b: &QuantileSketch) -> std::cmp::Ordering {
+        a.count
+            .cmp(&b.count)
+            .then(a.sum.total_cmp(&b.sum))
+            .then(a.min.total_cmp(&b.min))
+            .then(a.max.total_cmp(&b.max))
+            .then(a.under.cmp(&b.under))
+            .then(a.over.cmp(&b.over))
+            .then_with(|| a.bins.cmp(&b.bins))
+    }
+
+    /// Retained memory cells (bins + under/overflow): constant for a given
+    /// config, independent of `len()` — the O(1)-per-cell property the
+    /// telemetry tests assert.
+    pub fn mem_cells(&self) -> usize {
+        self.bins.len() + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroish() {
+        let s = QuantileSketch::default();
+        assert!(s.is_empty());
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn exact_side_counters() {
+        let mut s = QuantileSketch::default();
+        for v in [3.0, 1.0, 4.0, 1.5, 9.25] {
+            s.push(v);
+        }
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 9.25);
+        assert!((s.mean() - (3.0 + 1.0 + 4.0 + 1.5 + 9.25) / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_within_bound_on_uniform_grid() {
+        let cfg = SketchConfig::default();
+        let bound = cfg.rel_error_bound();
+        let mut s = QuantileSketch::new(cfg);
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        for &x in &xs {
+            s.push(x);
+        }
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let exact = xs[(q * 999.0).round() as usize];
+            let got = s.quantile(q);
+            assert!(
+                (got - exact).abs() / exact <= bound + 1e-12,
+                "q={q}: got {got}, exact {exact}, bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_range_values_hit_min_max() {
+        let mut s = QuantileSketch::new(SketchConfig { lo: 1.0, hi: 100.0, n_bins: 16 });
+        s.push(0.0); // underflow (also exercises v <= 0 never taking ln)
+        s.push(0.5);
+        s.push(1e6); // overflow
+        assert_eq!(s.quantile(0.0), 0.0); // underflow rank -> exact min
+        assert_eq!(s.quantile(1.0), 1e6); // overflow rank -> exact max
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 1e6);
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        let mut a = QuantileSketch::default();
+        let mut b = QuantileSketch::default();
+        let mut all = QuantileSketch::default();
+        for i in 0..500 {
+            let v = 1.0 + (i as f64) * 0.37;
+            if i % 2 == 0 {
+                a.push(v);
+            } else {
+                b.push(v);
+            }
+            all.push(v);
+        }
+        let merged = QuantileSketch::merge_canonical(&[&a, &b]);
+        assert_eq!(merged.len(), all.len());
+        assert_eq!(merged.min(), all.min());
+        assert_eq!(merged.max(), all.max());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(merged.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn canonical_merge_is_permutation_invariant() {
+        let mk = |seed: u64, n: usize| {
+            let mut s = QuantileSketch::default();
+            for i in 0..n {
+                s.push(0.1 + ((seed.wrapping_mul(i as u64 + 1) % 997) as f64) * 1.7);
+            }
+            s
+        };
+        let (a, b, c) = (mk(3, 40), mk(5, 77), mk(11, 13));
+        let fwd = QuantileSketch::merge_canonical(&[&a, &b, &c]);
+        let rev = QuantileSketch::merge_canonical(&[&c, &a, &b]);
+        assert_eq!(fwd, rev); // bit-identical: PartialEq over every field
+    }
+
+    #[test]
+    fn memory_is_constant_in_sample_count() {
+        let mut s = QuantileSketch::default();
+        let cells = s.mem_cells();
+        for i in 0..100_000u64 {
+            s.push((i % 977) as f64 + 0.5);
+        }
+        assert_eq!(s.mem_cells(), cells);
+        assert_eq!(s.len(), 100_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "different configs")]
+    fn merge_rejects_mismatched_configs() {
+        let mut a = QuantileSketch::new(SketchConfig { lo: 1.0, hi: 10.0, n_bins: 8 });
+        let b = QuantileSketch::new(SketchConfig { lo: 1.0, hi: 20.0, n_bins: 8 });
+        a.merge(&b);
+    }
+}

@@ -1,9 +1,40 @@
-//! Summary statistics over latency/utilization samples.
+//! Summary statistics over latency/utilization samples, and the dual-mode
+//! distribution recorder (`Dist`) the serving metrics record into.
+//!
+//! * [`Summary`] — exact: retains every sample (O(n) memory) and serves
+//!   interpolated quantiles from a sorted cache that is rebuilt at most
+//!   once per batch of pushes (dirty bit), so SLO probes calling `p99()`
+//!   repeatedly never re-sort — the bisection hot path.
+//! * [`Dist`] — either an exact `Summary` or a fixed-memory
+//!   [`QuantileSketch`] (see `util::sketch`), selected by
+//!   [`TelemetryMode`]. Sketch mode keeps count/sum/min/max exact and
+//!   bounds quantile error, at O(1) memory per metric — the default for
+//!   the serve/cluster sweeps; exact mode remains the default for direct
+//!   `ServerSim` use and pins the sweeps' pre-sketch outputs bit-for-bit
+//!   behind `--exact-tails`.
 
-/// Streaming summary of f64 samples (kept sorted on demand for quantiles).
+use super::sketch::{QuantileSketch, SketchConfig};
+use std::cell::{Cell, RefCell};
+
+/// Streaming summary of f64 samples (sorted once per dirty batch for
+/// quantiles; `samples()` preserves insertion order).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     samples: Vec<f64>,
+    /// Sorted copy of `samples`, rebuilt lazily when `dirty`.
+    sorted: RefCell<Vec<f64>>,
+    dirty: Cell<bool>,
+    /// Times the sorted cache was rebuilt — lets perf tests pin that
+    /// repeated quantile calls do not re-sort.
+    sorts: Cell<u64>,
+}
+
+impl PartialEq for Summary {
+    /// Equality is over the recorded samples (insertion order); the cache
+    /// state is incidental.
+    fn eq(&self, other: &Self) -> bool {
+        self.samples == other.samples
+    }
 }
 
 impl Summary {
@@ -13,18 +44,23 @@ impl Summary {
 
     pub fn push(&mut self, v: f64) {
         self.samples.push(v);
+        self.dirty.set(true);
     }
 
     pub fn extend(&mut self, vs: &[f64]) {
         self.samples.extend_from_slice(vs);
+        if !vs.is_empty() {
+            self.dirty.set(true);
+        }
     }
 
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
-    /// Raw samples in insertion order — used by the cluster layer to merge
-    /// per-package summaries into one canonical (sorted) distribution.
+    /// Raw samples in insertion order — used by the cluster layer's exact
+    /// mode to merge per-package summaries into one canonical (sorted)
+    /// distribution, and by determinism pins.
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
@@ -40,11 +76,20 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Minimum; 0.0 on the empty set (consistent with `mean`/`quantile` —
+    /// a ±INFINITY here used to leak `inf` into CSV exports).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Maximum; 0.0 on the empty set (see [`Summary::min`]).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -57,13 +102,21 @@ impl Summary {
         (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
-    /// Linear-interpolated quantile, q in [0, 1].
+    /// Linear-interpolated quantile, q in [0, 1]. Served from the sorted
+    /// cache: the sort runs once after any batch of pushes, not per call.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if self.dirty.get() {
+            let mut s = self.sorted.borrow_mut();
+            s.clear();
+            s.extend_from_slice(&self.samples);
+            s.sort_unstable_by(f64::total_cmp);
+            self.dirty.set(false);
+            self.sorts.set(self.sorts.get() + 1);
+        }
+        let s = self.sorted.borrow();
         let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -81,6 +134,188 @@ impl Summary {
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }
+
+    /// How many times the sorted cache has been rebuilt (perf pin; see
+    /// `tests/perf_fastpath.rs`).
+    pub fn sort_count(&self) -> u64 {
+        self.sorts.get()
+    }
+}
+
+/// Which representation a [`Dist`] records into.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TelemetryMode {
+    /// Retain every sample (O(n) memory, exact quantiles). The default
+    /// for direct `ServerSim` use and the `--exact-tails` sweep flag.
+    #[default]
+    Exact,
+    /// Fixed-memory quantile sketch (O(1) memory, exact count/sum/min/max,
+    /// bounded quantile error). The sweeps' default path.
+    Sketch,
+}
+
+/// A latency/occupancy distribution recorder: exact `Summary` or
+/// fixed-memory `QuantileSketch` behind one API. Both modes agree exactly
+/// on `len`/`mean`/`min`/`max`; quantiles agree within the sketch's
+/// documented error bound.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    Exact(Summary),
+    Sketch(QuantileSketch),
+}
+
+impl Default for Dist {
+    fn default() -> Self {
+        Dist::Exact(Summary::new())
+    }
+}
+
+impl Dist {
+    pub fn new(mode: TelemetryMode) -> Self {
+        match mode {
+            TelemetryMode::Exact => Dist::Exact(Summary::new()),
+            TelemetryMode::Sketch => Dist::Sketch(QuantileSketch::default()),
+        }
+    }
+
+    pub fn with_sketch_config(cfg: SketchConfig) -> Self {
+        Dist::Sketch(QuantileSketch::new(cfg))
+    }
+
+    pub fn mode(&self) -> TelemetryMode {
+        match self {
+            Dist::Exact(_) => TelemetryMode::Exact,
+            Dist::Sketch(_) => TelemetryMode::Sketch,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        match self {
+            Dist::Exact(s) => s.push(v),
+            Dist::Sketch(s) => s.push(v),
+        }
+    }
+
+    pub fn extend(&mut self, vs: &[f64]) {
+        match self {
+            Dist::Exact(s) => s.extend(vs),
+            Dist::Sketch(s) => {
+                for &v in vs {
+                    s.push(v);
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Dist::Exact(s) => s.len(),
+            Dist::Sketch(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            Dist::Exact(s) => s.mean(),
+            Dist::Sketch(s) => s.mean(),
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        match self {
+            Dist::Exact(s) => s.min(),
+            Dist::Sketch(s) => s.min(),
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        match self {
+            Dist::Exact(s) => s.max(),
+            Dist::Sketch(s) => s.max(),
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        match self {
+            Dist::Exact(s) => s.quantile(q),
+            Dist::Sketch(s) => s.quantile(q),
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Raw samples — exact mode only (determinism pins, canonical exact
+    /// merge). Panics in sketch mode rather than silently reporting an
+    /// empty distribution.
+    pub fn samples(&self) -> &[f64] {
+        match self {
+            Dist::Exact(s) => s.samples(),
+            Dist::Sketch(_) => {
+                panic!("Dist::samples() requires exact telemetry mode (sketches retain no samples)")
+            }
+        }
+    }
+
+    pub fn as_sketch(&self) -> Option<&QuantileSketch> {
+        match self {
+            Dist::Sketch(s) => Some(s),
+            Dist::Exact(_) => None,
+        }
+    }
+
+    /// Retained memory cells: O(n) in exact mode, constant in sketch mode
+    /// — what the telemetry tests assert stays flat as request horizons
+    /// grow.
+    pub fn mem_cells(&self) -> usize {
+        match self {
+            Dist::Exact(s) => s.len(),
+            Dist::Sketch(s) => s.mem_cells(),
+        }
+    }
+
+    /// Merge many recorders into one, bit-identically under any
+    /// permutation of `parts`. All parts must share a mode (and, for
+    /// sketches, a config). Exact mode concatenates and sorts all samples
+    /// (the canonical total order); sketch mode folds in canonical content
+    /// order (see `QuantileSketch::merge_canonical`). Empty input merges
+    /// to an empty exact recorder.
+    pub fn merge_canonical(parts: &[&Dist]) -> Dist {
+        let Some(first) = parts.first() else {
+            return Dist::default();
+        };
+        match first.mode() {
+            TelemetryMode::Exact => {
+                let mut all: Vec<f64> = parts
+                    .iter()
+                    .flat_map(|d| d.samples().iter().copied())
+                    .collect();
+                all.sort_unstable_by(f64::total_cmp);
+                let mut s = Summary::new();
+                s.extend(&all);
+                Dist::Exact(s)
+            }
+            TelemetryMode::Sketch => {
+                let sketches: Vec<&QuantileSketch> = parts
+                    .iter()
+                    .map(|d| {
+                        d.as_sketch()
+                            .expect("cannot merge mixed exact/sketch telemetry modes")
+                    })
+                    .collect();
+                Dist::Sketch(QuantileSketch::merge_canonical(&sketches))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +327,9 @@ mod tests {
         let s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.quantile(0.5), 0.0);
+        // Regression: used to return +/-INFINITY and leak `inf` into CSVs.
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
         assert!(s.is_empty());
     }
 
@@ -120,5 +358,66 @@ mod tests {
         s.extend(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
         // sample stddev of this classic set is ~2.138
         assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn sorted_cache_rebuilds_only_when_dirty() {
+        let mut s = Summary::new();
+        s.extend(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.sort_count(), 0);
+        let p = s.p99();
+        assert_eq!(s.sort_count(), 1);
+        // Repeated quantiles: identical values, no re-sort.
+        assert_eq!(s.p99(), p);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.sort_count(), 1);
+        // A push dirties the cache; the next quantile re-sorts once.
+        s.push(0.5);
+        assert_eq!(s.quantile(0.0), 0.5);
+        assert_eq!(s.sort_count(), 2);
+        // Insertion order is preserved regardless of cache state.
+        assert_eq!(s.samples(), &[5.0, 1.0, 3.0, 2.0, 4.0, 0.5]);
+    }
+
+    #[test]
+    fn dist_modes_agree_on_exact_stats() {
+        let mut e = Dist::new(TelemetryMode::Exact);
+        let mut k = Dist::new(TelemetryMode::Sketch);
+        for i in 1..=200 {
+            let v = (i as f64) * 1.31;
+            e.push(v);
+            k.push(v);
+        }
+        assert_eq!(e.len(), k.len());
+        assert_eq!(e.min(), k.min());
+        assert_eq!(e.max(), k.max());
+        assert!((e.mean() - k.mean()).abs() < 1e-9);
+        let bound = SketchConfig::default().rel_error_bound();
+        for q in [0.5, 0.9, 0.99] {
+            let (ex, sk) = (e.quantile(q), k.quantile(q));
+            assert!(
+                (sk - ex).abs() / ex <= 2.0 * bound,
+                "q={q}: sketch {sk} vs exact {ex}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exact telemetry mode")]
+    fn sketch_dist_refuses_samples() {
+        let d = Dist::new(TelemetryMode::Sketch);
+        let _ = d.samples();
+    }
+
+    #[test]
+    fn merge_canonical_exact_sorts() {
+        let mut a = Dist::default();
+        a.extend(&[3.0, 1.0]);
+        let mut b = Dist::default();
+        b.extend(&[2.0]);
+        let m = Dist::merge_canonical(&[&a, &b]);
+        assert_eq!(m.samples(), &[1.0, 2.0, 3.0]);
+        let m2 = Dist::merge_canonical(&[&b, &a]);
+        assert_eq!(m.samples(), m2.samples());
     }
 }

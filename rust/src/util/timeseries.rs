@@ -1,0 +1,215 @@
+//! Bounded time-series recording for long serving runs.
+//!
+//! A [`TimeSeries`] keeps at most `cap` (time, value) points no matter how
+//! many samples are pushed: when the buffer fills, it drops every other
+//! retained point and doubles its sampling stride (keeping every 2nd, then
+//! 4th, … push). The retained points are always a uniform-stride subsample
+//! of the full stream starting at the first push, so plots stay faithful
+//! while memory stays O(cap) — the property that lets `ServeMetrics` carry
+//! per-iteration queue-depth/occupancy traces through million-request
+//! sweeps. Fully deterministic: retention depends only on push order.
+//!
+//! [`SeriesSet`] is a small named-channel map over `TimeSeries` used by
+//! the serving metrics ("queue_depth", "batch_tokens", "busy_frac",
+//! "memo_hit_rate"); `rows()` flattens it into long-format
+//! (channel, t, value) tuples for CSV export (see the sweep experiments'
+//! `*_timeseries.csv` outputs).
+
+/// Decimating ring: at most `cap` points, stride-doubling on overflow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeSeries {
+    cap: usize,
+    stride: u64,
+    seen: u64,
+    points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub const DEFAULT_CAP: usize = 512;
+
+    /// `cap` is rounded up to an even minimum of 4 so decimation always
+    /// halves cleanly and the stride stays aligned with retained pushes.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(4);
+        let cap = cap + cap % 2;
+        TimeSeries { cap, stride: 1, seen: 0, points: Vec::new() }
+    }
+
+    /// Record one sample. `t` is the sample's timestamp (the metrics layer
+    /// uses simulated µs); pushes must arrive in nondecreasing `t` order
+    /// for the retained points to form a time-ordered trace.
+    pub fn push(&mut self, t: f64, v: f64) {
+        if self.seen % self.stride == 0 {
+            if self.points.len() == self.cap {
+                // Keep every other point; the survivors sit at multiples
+                // of the doubled stride because the buffer only fills at
+                // seen == cap * stride (cap is even).
+                let mut i = 0usize;
+                self.points.retain(|_| {
+                    let keep = i % 2 == 0;
+                    i += 1;
+                    keep
+                });
+                self.stride *= 2;
+            }
+            self.points.push((t, v));
+        }
+        self.seen += 1;
+    }
+
+    /// Total samples offered (retained or decimated away).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Current sampling stride (1 until the first decimation).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Retained points, time order.
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The retention bound: `len() <= capacity()` always.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        TimeSeries::new(Self::DEFAULT_CAP)
+    }
+}
+
+/// Named channels over [`TimeSeries`]; channels are created on first push
+/// and kept in creation order (deterministic for a deterministic caller).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SeriesSet {
+    channels: Vec<(String, TimeSeries)>,
+}
+
+impl SeriesSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, channel: &str, t: f64, v: f64) {
+        match self.channels.iter_mut().find(|(n, _)| n == channel) {
+            Some((_, s)) => s.push(t, v),
+            None => {
+                let mut s = TimeSeries::default();
+                s.push(t, v);
+                self.channels.push((channel.to_string(), s));
+            }
+        }
+    }
+
+    pub fn get(&self, channel: &str) -> Option<&TimeSeries> {
+        self.channels.iter().find(|(n, _)| n == channel).map(|(_, s)| s)
+    }
+
+    pub fn channels(&self) -> impl Iterator<Item = (&str, &TimeSeries)> {
+        self.channels.iter().map(|(n, s)| (n.as_str(), s))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.channels.is_empty()
+    }
+
+    /// Flatten to long-format (channel, t, value) rows, channel creation
+    /// order then time order — the CSV export shape.
+    pub fn rows(&self) -> Vec<(&str, f64, f64)> {
+        let mut out = Vec::new();
+        for (name, s) in &self.channels {
+            for &(t, v) in s.points() {
+                out.push((name.as_str(), t, v));
+            }
+        }
+        out
+    }
+
+    /// Sum of retained points across channels (bounded by
+    /// channels × capacity regardless of run length).
+    pub fn total_points(&self) -> usize {
+        self.channels.iter().map(|(_, s)| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_everything_under_capacity() {
+        let mut s = TimeSeries::new(8);
+        for i in 0..8 {
+            s.push(i as f64, (i * i) as f64);
+        }
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.stride(), 1);
+        assert_eq!(s.points()[3], (3.0, 9.0));
+    }
+
+    #[test]
+    fn decimates_with_uniform_stride() {
+        let mut s = TimeSeries::new(8);
+        for i in 0..64 {
+            s.push(i as f64, i as f64);
+        }
+        assert!(s.len() <= 8, "len {}", s.len());
+        assert_eq!(s.seen(), 64);
+        assert_eq!(s.stride(), 8); // 64 pushes through cap 8: 1->2->4->8
+        // Retained points are exactly the stride-aligned pushes.
+        for (k, &(t, v)) in s.points().iter().enumerate() {
+            assert_eq!(t, (k as u64 * s.stride()) as f64);
+            assert_eq!(v, t);
+        }
+    }
+
+    #[test]
+    fn memory_never_grows_past_cap() {
+        let mut s = TimeSeries::new(16);
+        for i in 0..100_000 {
+            s.push(i as f64, 1.0);
+        }
+        assert!(s.len() <= s.capacity());
+        assert_eq!(s.seen(), 100_000);
+    }
+
+    #[test]
+    fn deterministic_for_identical_streams() {
+        let feed = |n: usize| {
+            let mut s = TimeSeries::new(8);
+            for i in 0..n {
+                s.push(i as f64, (i % 7) as f64);
+            }
+            s
+        };
+        assert_eq!(feed(1000), feed(1000));
+    }
+
+    #[test]
+    fn series_set_channels_and_rows() {
+        let mut set = SeriesSet::new();
+        set.push("queue", 0.0, 1.0);
+        set.push("busy", 0.0, 0.5);
+        set.push("queue", 1.0, 2.0);
+        assert_eq!(set.get("queue").unwrap().len(), 2);
+        let rows = set.rows();
+        assert_eq!(rows[0], ("queue", 0.0, 1.0));
+        assert_eq!(rows[1], ("queue", 1.0, 2.0));
+        assert_eq!(rows[2], ("busy", 0.0, 0.5));
+        assert_eq!(set.total_points(), 3);
+    }
+}

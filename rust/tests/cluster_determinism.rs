@@ -16,7 +16,7 @@ use expert_streaming::cluster::{
 use expert_streaming::config::{presets, ClusterConfig, Dataset, RouterKind, StrategyKind};
 use expert_streaming::experiments::{cluster_sweep, ExpOpts};
 use expert_streaming::server::{LoadMode, Request, ServerConfig, ServerSim};
-use expert_streaming::util::Rng;
+use expert_streaming::util::{Rng, TelemetryMode};
 
 fn server_cfg(mode: LoadMode) -> ServerConfig {
     ServerConfig { strategy: StrategyKind::FseDpPaired, mode, seed: 7, ..Default::default() }
@@ -129,6 +129,49 @@ fn aggregation_invariant_under_package_permutation() {
         assert!(p.busy_imbalance() == m.busy_imbalance());
         assert!(p.routed_cv() == m.routed_cv());
         assert!(p.p99_ttft_ms() == m.p99_ttft_ms());
+    }
+}
+
+#[test]
+fn sketch_mode_aggregation_invariant_under_package_permutation() {
+    // The sweeps' default telemetry mode: per-package distributions are
+    // fixed-memory sketches, and `Dist::merge_canonical` must still make
+    // the aggregate bit-identical under any package permutation. `Dist`'s
+    // `PartialEq` covers every sketch field — bins, exact side-counters,
+    // and the one order-sensitive f64 accumulator (`sum`) — so equality
+    // here really is bit-level.
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let per: Vec<_> = (0..4u64)
+        .map(|seed| {
+            let cfg = ServerConfig {
+                strategy: StrategyKind::FseDpPaired,
+                mode: LoadMode::Burst { n_requests: 8 + 2 * seed as usize },
+                seed: 7 + seed,
+                telemetry: TelemetryMode::Sketch,
+                ..Default::default()
+            };
+            ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run()
+        })
+        .collect();
+    let routed: Vec<usize> = per.iter().map(|m| m.arrived).collect();
+    let arrived: usize = routed.iter().sum();
+    let base = ClusterMetrics::aggregate(per.clone(), routed.clone(), arrived, 0, 0, 0);
+    for perm in [[3usize, 2, 1, 0], [1, 3, 0, 2], [2, 0, 3, 1]] {
+        let p = ClusterMetrics::aggregate(
+            perm.iter().map(|&i| per[i].clone()).collect(),
+            perm.iter().map(|&i| routed[i]).collect(),
+            arrived,
+            0,
+            0,
+            0,
+        );
+        assert_eq!(p.ttft_us, base.ttft_us, "{perm:?}");
+        assert_eq!(p.tpot_us, base.tpot_us, "{perm:?}");
+        assert_eq!(p.e2e_us, base.e2e_us, "{perm:?}");
+        assert!(p.p99_ttft_ms() == base.p99_ttft_ms(), "{perm:?}");
+        assert!(p.busy_imbalance() == base.busy_imbalance(), "{perm:?}");
     }
 }
 

@@ -146,6 +146,45 @@ fn memo_on_off_identical_for_all_stateless_strategies() {
 }
 
 #[test]
+fn repeated_p99_probes_hit_the_sort_cache() {
+    // `ServeMetrics::meets` computes p99 for both TTFT and TPOT on every
+    // bisection probe; the dirty-bit cache must serve all repeats from one
+    // sort per distribution, with identical values every time.
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let cfg = ServerConfig {
+        strategy: StrategyKind::FseDpPaired,
+        mode: LoadMode::Burst { n_requests: 8 },
+        ..Default::default()
+    };
+    let m = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run();
+    let ttft = match &m.ttft_us {
+        expert_streaming::util::Dist::Exact(s) => s,
+        _ => unreachable!("default telemetry is exact"),
+    };
+    assert_eq!(ttft.sort_count(), 0, "no quantile asked for yet");
+    let first = m.p99_ttft_ms();
+    assert!(first > 0.0);
+    for _ in 0..32 {
+        // Repeated probes: bit-identical values, and still only one sort.
+        assert_eq!(m.p99_ttft_ms(), first);
+        assert_eq!(m.ttft_us.quantile(0.99), m.ttft_us.quantile(0.99));
+    }
+    assert_eq!(ttft.sort_count(), 1, "repeated p99 calls re-sorted");
+    // A fresh push dirties the cache exactly once more.
+    let mut m2 = m.clone();
+    m2.ttft_us.push(1.0);
+    m2.ttft_us.p99();
+    m2.ttft_us.p99();
+    let ttft2 = match &m2.ttft_us {
+        expert_streaming::util::Dist::Exact(s) => s,
+        _ => unreachable!(),
+    };
+    assert_eq!(ttft2.sort_count(), 2);
+}
+
+#[test]
 fn parallel_executor_matches_serial_on_simulator_work() {
     // The real workload shape the sweep fans out: full seeded ServerSim
     // runs. Serial and parallel executions must agree bit-for-bit.

@@ -1,0 +1,205 @@
+//! Streaming-telemetry invariants (ISSUE 6):
+//!
+//! * sketch merge is associative and (canonically) commutative, and sketch
+//!   quantiles stay within the documented error bound of exact `Summary`
+//!   quantiles on seeded lognormal samples;
+//! * sketch-mode serving runs use O(1) distribution memory at a ≥10×
+//!   longer request horizon than the quick-sweep default, with bounded
+//!   time-series recorders — the acceptance property that unlocks
+//!   million-request sweeps;
+//! * exact mode and sketch mode agree exactly on counters/mean/min/max
+//!   and within the bound on quantiles, on the same simulation;
+//! * `Summary::min`/`max` return 0.0 on the empty set (regression: they
+//!   used to return ±INFINITY and leak `inf` into CSV exports).
+
+use expert_streaming::config::{presets, Dataset, StrategyKind};
+use expert_streaming::server::{LoadMode, ServeMetrics, ServerConfig, ServerSim};
+use expert_streaming::util::{
+    QuantileSketch, Rng, SketchConfig, Summary, TelemetryMode, TimeSeries,
+};
+
+/// Seeded lognormal samples — the shape of a latency distribution, and
+/// the distribution the sketch documents its error bound against.
+fn lognormal(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| 1e3 * (0.75 * rng.normal()).exp()).collect()
+}
+
+fn sketch_of(vs: &[f64]) -> QuantileSketch {
+    let mut s = QuantileSketch::default();
+    for &v in vs {
+        s.push(v);
+    }
+    s
+}
+
+#[test]
+fn sketch_merge_associative_and_commutative() {
+    let parts: Vec<QuantileSketch> = (0..4)
+        .map(|i| sketch_of(&lognormal(100 + i, 300 + 17 * i as usize)))
+        .collect();
+    let [a, b, c, d] = [&parts[0], &parts[1], &parts[2], &parts[3]];
+
+    // Associativity of pairwise merge: the integer state (bins, count,
+    // under/over) and the exact min/max add associatively, so quantiles —
+    // which depend only on those — are bit-identical across groupings.
+    // (Only the float `sum` is order-sensitive; that is exactly why
+    // multi-way aggregation goes through `merge_canonical`.)
+    let mut left = a.clone(); // ((a + b) + c) + d
+    left.merge(b);
+    left.merge(c);
+    left.merge(d);
+    let mut right = c.clone(); // (c + d) first, then folded under a + b
+    right.merge(d);
+    let mut right_full = a.clone();
+    right_full.merge(b);
+    right_full.merge(&right);
+    assert_eq!(left.len(), right_full.len());
+    assert_eq!(left.min(), right_full.min());
+    assert_eq!(left.max(), right_full.max());
+    for i in 0..=100 {
+        let q = i as f64 / 100.0;
+        assert_eq!(left.quantile(q), right_full.quantile(q), "q={q}");
+    }
+    assert!((left.mean() - right_full.mean()).abs() < 1e-9 * left.mean());
+
+    // Canonical commutativity: every permutation of the parts merges to a
+    // bit-identical sketch (PartialEq covers every field, `sum` included).
+    let base = QuantileSketch::merge_canonical(&[a, b, c, d]);
+    for perm in [[d, c, b, a], [b, d, a, c], [c, a, d, b]] {
+        assert_eq!(base, QuantileSketch::merge_canonical(&perm));
+    }
+}
+
+#[test]
+fn sketch_quantiles_within_bound_of_exact_on_lognormal() {
+    let bound = SketchConfig::default().rel_error_bound();
+    assert!(bound < 0.02, "documented bound should be ~1.4%, got {bound}");
+    for seed in [7u64, 42, 1234] {
+        let vs = lognormal(seed, 2000);
+        let sketch = sketch_of(&vs);
+        let mut exact = Summary::new();
+        exact.extend(&vs);
+        let mut sorted = vs.clone();
+        sorted.sort_unstable_by(f64::total_cmp);
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let s = sketch.quantile(q);
+            // The documented bound is against the sample at the sketch's
+            // own (nearest) rank: the exact order statistic it binned.
+            let rank = (q * (vs.len() - 1) as f64).round() as usize;
+            let order_stat = sorted[rank];
+            assert!(
+                (s - order_stat).abs() / order_stat <= bound + 1e-12,
+                "seed {seed} q={q}: sketch {s} vs order stat {order_stat} (bound {bound})"
+            );
+            // Against Summary's interpolated quantile the adjacent-rank
+            // gap adds sampling slack on top of the bin bound; 3x the
+            // bound comfortably covers both at n=2000.
+            let e = exact.quantile(q);
+            assert!(
+                (s - e).abs() / e <= 3.0 * bound,
+                "seed {seed} q={q}: sketch {s} vs exact {e} (bound {bound})"
+            );
+        }
+        // Side-counters are exact, not approximations.
+        assert_eq!(sketch.len(), vs.len());
+        assert_eq!(sketch.min(), vs.iter().copied().fold(f64::INFINITY, f64::min));
+        assert_eq!(sketch.max(), vs.iter().copied().fold(f64::NEG_INFINITY, f64::max));
+    }
+}
+
+/// The quick serve-sweep default is 16 requests per point; sketch mode
+/// must hold distribution memory constant at ≥10× that horizon, with the
+/// time-series recorders bounded by their fixed capacity.
+#[test]
+fn sketch_mode_memory_is_constant_at_10x_horizon() {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let run = |n_requests: usize, telemetry: TelemetryMode| -> ServeMetrics {
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Burst { n_requests },
+            telemetry,
+            ..Default::default()
+        };
+        ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run()
+    };
+
+    const QUICK_DEFAULT: usize = 16; // serve_sweep's quick requests_per_point
+    let small = run(QUICK_DEFAULT, TelemetryMode::Sketch);
+    let big = run(10 * QUICK_DEFAULT, TelemetryMode::Sketch);
+    assert_eq!(big.completed, 10 * QUICK_DEFAULT);
+    // O(1) distribution memory: identical cell count at 10x the requests.
+    assert_eq!(small.dist_mem_cells(), big.dist_mem_cells());
+    // The exact-mode twin grows with the horizon — the contrast that
+    // makes the sketch the long-run default.
+    let big_exact = run(10 * QUICK_DEFAULT, TelemetryMode::Exact);
+    assert!(big_exact.dist_mem_cells() > small.dist_mem_cells());
+    // ...while agreeing on what was simulated.
+    assert_eq!(big_exact.completed, big.completed);
+    assert_eq!(big_exact.end_cycles, big.end_cycles);
+    // Time-series recorders stay within their fixed capacity, while having
+    // seen every iteration.
+    for (name, series) in big.series.channels() {
+        assert!(
+            series.len() <= series.capacity() && series.capacity() <= TimeSeries::DEFAULT_CAP,
+            "channel {name} overflowed: {} points",
+            series.len()
+        );
+        assert_eq!(series.seen(), big.iterations as u64, "channel {name}");
+    }
+}
+
+#[test]
+fn exact_and_sketch_modes_agree_on_the_same_simulation() {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let run = |telemetry: TelemetryMode| {
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Open { rate_rps: 300.0, duration_s: 0.05 },
+            telemetry,
+            ..Default::default()
+        };
+        ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run()
+    };
+    let e = run(TelemetryMode::Exact);
+    let s = run(TelemetryMode::Sketch);
+    // Telemetry mode must not perturb the simulation itself...
+    assert_eq!(e.arrived, s.arrived);
+    assert_eq!(e.completed, s.completed);
+    assert_eq!(e.iterations, s.iterations);
+    assert_eq!(e.end_cycles, s.end_cycles);
+    assert_eq!(e.busy_cycles, s.busy_cycles);
+    // ...nor the exact side-statistics of any distribution.
+    assert_eq!(e.ttft_us.len(), s.ttft_us.len());
+    assert_eq!(e.ttft_us.min(), s.ttft_us.min());
+    assert_eq!(e.ttft_us.max(), s.ttft_us.max());
+    assert!((e.ttft_us.mean() - s.ttft_us.mean()).abs() <= 1e-9 * e.ttft_us.mean().abs());
+    // Quantiles agree within the documented bound.
+    let bound = SketchConfig::default().rel_error_bound();
+    for q in [0.5, 0.9, 0.99] {
+        let (ev, sv) = (e.ttft_us.quantile(q), s.ttft_us.quantile(q));
+        assert!(
+            (sv - ev).abs() <= 2.0 * bound * ev.abs() + 1e-12,
+            "q={q}: exact {ev} vs sketch {sv}"
+        );
+    }
+    // Identical bounded time-series either way (they are mode-independent).
+    assert_eq!(e.series, s.series);
+}
+
+#[test]
+fn summary_empty_min_max_are_zero_not_infinite() {
+    let s = Summary::new();
+    assert_eq!(s.min(), 0.0);
+    assert_eq!(s.max(), 0.0);
+    assert!(s.min().is_finite() && s.max().is_finite());
+    // The empty Dist recorders a fresh ServeMetrics carries must not leak
+    // inf into CSV formatting either.
+    let m = ServeMetrics::default();
+    assert_eq!(m.queue_depth.min(), 0.0);
+    assert_eq!(m.queue_depth.max(), 0.0);
+}

@@ -14,6 +14,19 @@ import sys
 # ops_per_s drop beyond this fraction is annotated as a regression.
 REGRESSION_FRAC = 0.10
 
+# Sub-microsecond telemetry micro-ops (sketch pushes/merges, cached Summary
+# quantiles) jitter far more run-to-run than the simulator mesobenchmarks;
+# give them a wider noise floor so they track the trajectory without
+# crying wolf.
+MICRO_OP_PREFIXES = ("sketch_", "summary_quantile")
+MICRO_OP_FRAC = 0.25
+
+
+def noise_floor(name):
+    if name.startswith(MICRO_OP_PREFIXES):
+        return MICRO_OP_FRAC
+    return REGRESSION_FRAC
+
 
 def load(path):
     with open(path) as f:
@@ -56,7 +69,7 @@ def main():
             continue
         ratio = r["ops_per_s"] / p["ops_per_s"]
         rows.append((name, p, r, ratio))
-        if ratio < 1.0 - REGRESSION_FRAC:
+        if ratio < 1.0 - noise_floor(name):
             warnings.append(
                 f"perf regression: {name} ops/s {p['ops_per_s']:.1f} -> "
                 f"{r['ops_per_s']:.1f} ({(1 - ratio) * 100:.1f}% slower)"
@@ -75,7 +88,12 @@ def main():
     for msg in warnings:
         print(f"::warning::{msg}")
     if not warnings:
-        print("no regressions beyond the {:.0f}% noise floor".format(REGRESSION_FRAC * 100))
+        print(
+            "no regressions beyond the {:.0f}% noise floor "
+            "({:.0f}% for telemetry micro-ops)".format(
+                REGRESSION_FRAC * 100, MICRO_OP_FRAC * 100
+            )
+        )
     return 0
 
 

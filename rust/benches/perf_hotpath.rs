@@ -8,15 +8,18 @@
 //!     burst on the smoke model), with the layer memo on and off, and
 //!     per-iteration latencies timed *individually* (the p99 really is a
 //!     tail, not the run tail divided by the mean iteration count);
-//!  4. the parallel sweep executor: independent seeded burst serves fanned
+//!  4. the disabled-trace serve path (`trace_disabled_overhead`) — the
+//!     default `trace: None` run, pinning the zero-cost-when-off claim of
+//!     the `obs` span recorder;
+//!  5. the parallel sweep executor: independent seeded burst serves fanned
 //!     across the worker pool vs. the serial loop;
-//!  5. the L5 cluster hot paths: per-arrival router decision throughput
+//!  6. the L5 cluster hot paths: per-arrival router decision throughput
 //!     (`router_route/*`) and cluster stepping (`cluster_step/*` — the
 //!     candidate-selection + delivery + package-step loop over 4 packages);
-//!  6. the streaming-telemetry hot paths (`sketch_push`, `sketch_merge`,
+//!  7. the streaming-telemetry hot paths (`sketch_push`, `sketch_merge`,
 //!     `summary_quantile`) — ingestion, canonical merging, and the
 //!     dirty-bit quantile cache;
-//!  7. numeric serving latency through PJRT (when artifacts exist).
+//!  8. numeric serving latency through PJRT (when artifacts exist).
 //!
 //! Besides the human-readable output, results are written to
 //! `BENCH_serve.json` (in the cargo working directory) as
@@ -190,6 +193,38 @@ fn bench_serve_iteration(records: &mut Vec<BenchRecord>) -> f64 {
         });
     }
     hit_rate
+}
+
+/// Tracing's zero-cost-when-off claim, measured: a burst serve with no
+/// recorder attached (`trace: None`, the default) — the only added work
+/// on the hot path is one `Option` branch per site. The record tracks
+/// that path's throughput so a regression in the disabled-trace overhead
+/// shows up in the bench delta like any other hot-path slip.
+fn bench_trace_disabled(records: &mut Vec<BenchRecord>) {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let n = reps(15);
+    let mut seed = 100u64;
+    let (runs_per_s, p99_run_us) = measure(n, || {
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Burst { n_requests: 8 },
+            seed,
+            ..Default::default()
+        };
+        let m = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run();
+        std::hint::black_box(m.end_cycles);
+        seed += 1;
+    });
+    println!(
+        "[perf] trace disabled: {runs_per_s:.1} burst-serves/s (p99 {p99_run_us:.1} us/serve, recorder detached)"
+    );
+    records.push(BenchRecord {
+        name: "trace_disabled_overhead".into(),
+        ops_per_s: runs_per_s,
+        p99_us: p99_run_us,
+    });
 }
 
 /// The sweep executor: N independent seeded burst serves, serial vs.
@@ -447,6 +482,7 @@ fn main() {
     bench_flow_engine(&mut records);
     bench_trace_generation(&mut records);
     let memo_hit_rate = bench_serve_iteration(&mut records);
+    bench_trace_disabled(&mut records);
     bench_parallel_sweep(&mut records);
     bench_router_decisions(&mut records);
     bench_cluster_step(&mut records);

@@ -30,6 +30,7 @@ use super::router::{make_router, RouterPolicy};
 use crate::config::{
     ClusterConfig, Dataset, HardwareConfig, MoeModelConfig, RouterKind, ServePreset,
 };
+use crate::obs::{TraceHandle, PID_FRONTEND, TID_LINK, TID_REBALANCER, TID_ROUTER};
 use crate::server::{LoadMode, Request, RequestGenerator, ServerConfig, ServerSim};
 
 /// N packages behind a router. Deterministic for a given
@@ -48,6 +49,10 @@ pub struct ClusterSim<'a> {
     handoff_bytes: u64,
     kv_migration_bytes: u64,
     migrations: usize,
+    /// Span recorder shared with every package (`None` = zero overhead).
+    /// Recording never feeds back into routing or package state, so
+    /// cluster results are bit-identical attached or not.
+    trace: Option<TraceHandle>,
 }
 
 impl<'a> ClusterSim<'a> {
@@ -76,6 +81,7 @@ impl<'a> ClusterSim<'a> {
             handoff_bytes: 0,
             kv_migration_bytes: 0,
             migrations: 0,
+            trace: None,
             packages,
             model,
             hw,
@@ -83,6 +89,23 @@ impl<'a> ClusterSim<'a> {
             cfg,
             cluster,
         }
+    }
+
+    /// Attach a span recorder: the front-end's router / link / rebalancer
+    /// tracks live in pid 0, and every package gets the same handle (pids
+    /// 1..=N) via [`ServerSim::attach_trace`].
+    pub fn attach_trace(&mut self, handle: TraceHandle) {
+        handle.with(|r| {
+            r.set_freq(self.hw.freq_hz);
+            r.name_process(PID_FRONTEND, "cluster front-end");
+            r.name_thread(PID_FRONTEND, TID_ROUTER, "router");
+            r.name_thread(PID_FRONTEND, TID_LINK, "link");
+            r.name_thread(PID_FRONTEND, TID_REBALANCER, "rebalancer");
+        });
+        for (i, p) in self.packages.iter_mut().enumerate() {
+            p.attach_trace(handle.clone(), i);
+        }
+        self.trace = Some(handle);
     }
 
     /// Run the configured load (the same `LoadMode` vocabulary as
@@ -164,10 +187,35 @@ impl<'a> ClusterSim<'a> {
         let loads: Vec<usize> = self.packages.iter().map(|p| p.load()).collect();
         let p = self.router.route(&r, &loads).min(self.packages.len() - 1);
         self.routed[p] += 1;
+        if let Some(h) = &self.trace {
+            h.with(|rec| {
+                rec.instant(
+                    PID_FRONTEND,
+                    TID_ROUTER,
+                    "cluster",
+                    "route",
+                    r.arrival_cycles,
+                    vec![("req", r.id as u64), ("package", p as u64)],
+                )
+            });
+        }
         if self.router.kind() != RouterKind::PassThrough {
             let bytes = handoff_bytes(self.model, self.hw.act_bytes, r.prompt_len);
             self.handoff_bytes += bytes;
             r.ready_cycles = r.arrival_cycles + self.link.transfer_cycles(bytes);
+            if let Some(h) = &self.trace {
+                h.with(|rec| {
+                    rec.async_span(
+                        PID_FRONTEND,
+                        TID_LINK,
+                        "link",
+                        "handoff",
+                        r.arrival_cycles,
+                        r.ready_cycles,
+                        vec![("req", r.id as u64), ("bytes", bytes), ("to", p as u64)],
+                    )
+                });
+            }
         }
         let now = r.arrival_cycles;
         self.packages[p].inject(r);
@@ -199,6 +247,33 @@ impl<'a> ClusterSim<'a> {
         // the request physically leaves no earlier than either clock.
         let depart = now.max(self.packages[from].clock());
         r.ready_cycles = depart + self.link.transfer_cycles(hand + kv);
+        if let Some(h) = &self.trace {
+            h.with(|rec| {
+                rec.instant(
+                    PID_FRONTEND,
+                    TID_REBALANCER,
+                    "cluster",
+                    "migrate",
+                    now,
+                    vec![
+                        ("req", r.id as u64),
+                        ("from", from as u64),
+                        ("to", to as u64),
+                        ("kv_bytes", kv),
+                    ],
+                );
+                rec.async_span(
+                    PID_FRONTEND,
+                    TID_LINK,
+                    "link",
+                    "migrate_transfer",
+                    depart,
+                    r.ready_cycles,
+                    vec![("req", r.id as u64), ("bytes", hand + kv)],
+                );
+                rec.acct.migration(r.ready_cycles - depart);
+            });
+        }
         self.routed[from] -= 1;
         self.routed[to] += 1;
         self.packages[to].inject(r);
@@ -320,6 +395,42 @@ mod tests {
         // Stealing spread real work onto package 1.
         assert!(m.routed[1] > 0);
         assert!(m.per_package[1].completed > 0);
+    }
+
+    #[test]
+    fn trace_attachment_preserves_cluster_results() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Burst { n_requests: 24 },
+            seed: 7,
+            ..Default::default()
+        };
+        // Pass-through + tight delta exercises the migration path too.
+        let mut cluster = cluster_cfg(2, RouterKind::PassThrough);
+        cluster.rebalance_delta = 2;
+        let plain =
+            ClusterSim::new(&model, &hw, Dataset::C4, &preset, cfg.clone(), cluster.clone())
+                .run();
+
+        let mut sim = ClusterSim::new(&model, &hw, Dataset::C4, &preset, cfg, cluster);
+        let handle = TraceHandle::enabled();
+        sim.attach_trace(handle.clone());
+        let traced = sim.run();
+
+        assert_eq!(traced.end_cycles, plain.end_cycles);
+        assert_eq!(traced.completed, plain.completed);
+        assert_eq!(traced.routed, plain.routed);
+        assert_eq!(traced.migrations, plain.migrations);
+        handle.with(|rec| {
+            assert_eq!(rec.acct.migrations as usize, traced.migrations);
+            assert!(rec.events().iter().any(|e| e.name == "route"));
+            assert!(rec.events().iter().any(|e| e.name == "migrate"));
+            // Both packages registered their tracks.
+            assert!(rec.process_names().len() >= 3);
+        });
     }
 
     #[test]

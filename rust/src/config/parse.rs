@@ -19,6 +19,8 @@ fn known_hardware_key(key: &str) -> bool {
         | "hop_ns" | "mesh" | "macs" | "freq_mhz" | "overhead_cycles"
         | "slices" | "tokens" | "seed" | "iters" | "slack"
         | "model" | "dataset" | "strategy"
+        // Traced-serve shape (`repro run --trace`): offered rate + count.
+        | "rps" | "requests"
     )
 }
 

@@ -100,10 +100,14 @@ pub fn all_models() -> Vec<MoeModelConfig> {
     vec![phi35_moe(), yuan2_m32(), deepseek_moe(), qwen3_a3b()]
 }
 
+/// Lookup by (case-insensitive) substring of the preset name. The smoke
+/// model is addressable too (`model=tiny`) — CI's traced serve uses it —
+/// but stays out of `all_models()` so paper sweeps never pick it up.
 pub fn model_by_name(name: &str) -> Option<MoeModelConfig> {
     let lower = name.to_ascii_lowercase();
     all_models()
         .into_iter()
+        .chain(std::iter::once(tiny_moe()))
         .find(|m| m.name.to_ascii_lowercase().contains(&lower))
 }
 

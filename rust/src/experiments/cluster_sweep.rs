@@ -322,6 +322,40 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
     }
     super::save(&ts_t, opts, "cluster_sweep_timeseries");
 
+    // 5. `--trace-cell`: re-run the representative cell at its sustained
+    //    load with the span recorder attached and export the Perfetto
+    //    trace + accounting CSVs. Tracing is bit-neutral, so the traced
+    //    run reproduces the knee cell exactly.
+    if let Some(path) = &opts.trace_cell {
+        let rate = if results[rep_idx].sustained_rps > 0.0 {
+            results[rep_idx].sustained_rps
+        } else {
+            // Every probe violated the SLO: trace a light load instead so
+            // the artifact still exists.
+            0.5 * base_rps * PACKAGES[rep_ni] as f64
+        };
+        let n_packages = PACKAGES[rep_ni];
+        let total_requests = sweep.requests_per_package * n_packages;
+        let cfg = ServerConfig {
+            strategy: SCHEMES[rep_si],
+            mode: LoadMode::Open {
+                rate_rps: rate,
+                duration_s: total_requests as f64 / rate,
+            },
+            seed: sweep.seed,
+            telemetry: sweep.telemetry,
+            ..Default::default()
+        };
+        let cluster =
+            ClusterConfig { n_packages, router: ROUTERS[rep_ri], ..sweep.base.clone() };
+        let mut sim =
+            ClusterSim::new(&sweep.model, &hw, Dataset::C4, &sweep.preset, cfg, cluster);
+        let handle = crate::obs::TraceHandle::enabled();
+        sim.attach_trace(handle.clone());
+        sim.run();
+        super::save_trace_artifacts(&handle, hw.freq_hz, path);
+    }
+
     super::save(&detail, opts, "cluster_sweep");
     super::save(&summary, opts, "cluster_sweep_summary");
     vec![detail, summary]

@@ -67,6 +67,12 @@ pub struct ExpOpts {
     /// Record exact sample vectors in the sweeps instead of fixed-memory
     /// sketches — restores pre-sketch outputs bit for bit (small runs).
     pub exact_tails: bool,
+    /// `--trace-cell PATH`: after the sweep, re-run one representative
+    /// grid cell with the `obs` span recorder attached and write the
+    /// Chrome trace there (plus `trace_accounting.csv` /
+    /// `trace_expert_heatmap.csv` beside it). The sweep results
+    /// themselves are unaffected — tracing is bit-neutral.
+    pub trace_cell: Option<String>,
 }
 
 impl Default for ExpOpts {
@@ -79,6 +85,7 @@ impl Default for ExpOpts {
             cluster: None,
             requests: None,
             exact_tails: false,
+            trace_cell: None,
         }
     }
 }
@@ -158,6 +165,39 @@ pub(crate) fn run_one(
 
 pub(crate) fn us(cycles: u64, hw: &HardwareConfig) -> f64 {
     crate::util::cycles_to_us(cycles, hw.freq_hz)
+}
+
+/// Export one traced sweep cell (`--trace-cell`): the Chrome trace at
+/// `path`, the accounting/heatmap CSVs beside it, and the attribution
+/// reports to stdout. Warning-only on IO errors, like [`save`].
+pub(crate) fn save_trace_artifacts(handle: &crate::obs::TraceHandle, freq_hz: f64, path: &str) {
+    let sibling = |name: &str| -> String {
+        std::path::Path::new(path)
+            .with_file_name(name)
+            .to_string_lossy()
+            .into_owned()
+    };
+    handle.with(|rec| {
+        if let Err(e) = crate::obs::save_chrome_trace(rec, path) {
+            eprintln!("warning: could not save {path}: {e}");
+        }
+        rec.acct.chiplet_table(freq_hz).print();
+        rec.acct.request_table(freq_hz).print();
+        for (t, name) in [
+            (rec.acct.accounting_table(freq_hz), "trace_accounting.csv"),
+            (rec.acct.heat_table(), "trace_expert_heatmap.csv"),
+        ] {
+            let p = sibling(name);
+            if let Err(e) = t.save_csv(&p) {
+                eprintln!("warning: could not save {p}: {e}");
+            }
+        }
+        println!(
+            "trace cell: {path} ({} events, {} dropped)",
+            rec.events().len(),
+            rec.dropped()
+        );
+    });
 }
 
 #[cfg(test)]

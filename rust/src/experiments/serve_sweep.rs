@@ -333,6 +333,31 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
     }
     super::save(&ts_t, opts, "serve_sweep_timeseries");
 
+    // 6. `--trace-cell`: re-run the 0.80x FSE-DP+paired grid cell with the
+    //    span recorder attached and export the Perfetto trace + accounting
+    //    CSVs. A traced re-run rather than instrumentation of the sweep
+    //    itself: tracing is bit-neutral, so the traced cell reproduces the
+    //    grid cell exactly, and the sweep's own runs stay untouched in the
+    //    worker pool.
+    if let Some(path) = &opts.trace_cell {
+        let rps = 0.80 * base_rps;
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Open {
+                rate_rps: rps,
+                duration_s: sweep.requests_per_point as f64 / rps,
+            },
+            seed: sweep.seed,
+            telemetry: sweep.telemetry,
+            ..Default::default()
+        };
+        let mut sim = ServerSim::new(&sweep.model, &hw, Dataset::C4, &sweep.preset, cfg);
+        let handle = crate::obs::TraceHandle::enabled();
+        sim.attach_trace(handle.clone(), 0);
+        sim.run();
+        super::save_trace_artifacts(&handle, hw.freq_hz, path);
+    }
+
     super::save(&load_t, opts, "serve_sweep_load");
     super::save(&sum_t, opts, "serve_sweep_summary");
     super::save(&burst_t, opts, "serve_sweep_bursty");

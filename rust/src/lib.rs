@@ -24,6 +24,10 @@
 //!   behind a pluggable request router over a serdes-class inter-package
 //!   link, with cluster-level SLO metrics, load-imbalance statistics, and
 //!   the `repro cluster-sweep` scaling yardstick.
+//! * Observability (`obs`): end-to-end tracing across L3→L5 — request
+//!   lifecycles, scheduler iterations, routing/link transfers, and adopted
+//!   chiplet activity — with Perfetto (Chrome trace event) export and a
+//!   cycle-accounting profiler (`repro run --trace out.json`).
 
 pub mod baselines;
 pub mod cluster;
@@ -33,6 +37,7 @@ pub mod dse;
 pub mod engine;
 pub mod experiments;
 pub mod moe;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sim;

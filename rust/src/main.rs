@@ -5,6 +5,7 @@
 //!   repro experiment <id> [--quick]    regenerate a paper table/figure
 //!   repro all [--quick]                run every experiment
 //!   repro run [key=value ...]          one simulated layer with overrides
+//!   repro run --trace out.json         traced cluster serve + Perfetto export
 //!   repro serve [tokens=N] [layers=N]  numeric serving path (PJRT)
 //!   repro serve-sweep [--quick]        open-loop RPS sweep to SLO violation
 //!   repro cluster-sweep [--quick] [key=value ...]
@@ -27,20 +28,25 @@
 //!
 //! Hand-rolled argument handling (the offline crate set has no clap).
 
-use expert_streaming::config::{presets, Dataset, Overrides, StrategyKind};
+use expert_streaming::cluster::ClusterSim;
+use expert_streaming::config::{
+    presets, ClusterConfig, Dataset, HardwareConfig, MoeModelConfig, Overrides, RouterKind,
+    StrategyKind,
+};
 use expert_streaming::coordinator::{make_strategy, LayerCtx};
 use expert_streaming::engine::serve::NumericEngine;
 use expert_streaming::experiments::{self, ExpOpts};
 use expert_streaming::moe::{default_num_slices, ExpertGeometry};
+use expert_streaming::obs::{save_chrome_trace, TraceHandle};
 use expert_streaming::runtime::artifacts::Manifest;
-use expert_streaming::util::fmt_bytes;
-use expert_streaming::workload::{shard_layer, TraceGenerator};
+use expert_streaming::server::{LoadMode, ServerConfig};
+use expert_streaming::util::{cycles_to_us, fmt_bytes};
 use std::collections::HashSet;
 use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick."
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n            [--trace OUT.json] [requests=N] [rps=F]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--trace-cell OUT.json]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails] [--trace-cell OUT.json]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick.\n\n--trace OUT.json runs a small traced cluster serve and writes a Perfetto-\nviewable Chrome trace plus trace_accounting.csv / trace_expert_heatmap.csv\nnext to it; --trace-cell does the same for one representative sweep cell."
     );
     ExitCode::FAILURE
 }
@@ -73,6 +79,10 @@ fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
                 opts.requests = args.get(i).and_then(|s| s.parse().ok());
             }
             "--exact-tails" => opts.exact_tails = true,
+            "--trace-cell" => {
+                i += 1;
+                opts.trace_cell = args.get(i).cloned();
+            }
             other => rest.push(other.to_string()),
         }
         i += 1;
@@ -81,15 +91,36 @@ fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
 }
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
-    let ov = Overrides::parse(args)?;
+    // `--trace FILE` is flag-style (no '='), so peel it off before the
+    // key=value override parser sees the argument list.
+    let mut rest: Vec<String> = Vec::new();
+    let mut trace_out: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--trace" {
+            i += 1;
+            trace_out = Some(
+                args.get(i)
+                    .cloned()
+                    .ok_or_else(|| "--trace requires an output path".to_string())?,
+            );
+        } else {
+            rest.push(args[i].clone());
+        }
+        i += 1;
+    }
+    let ov = Overrides::parse(&rest)?;
     let model = presets::model_by_name(ov.get("model").unwrap_or("qwen"))
-        .ok_or_else(|| "unknown model (phi/yuan/deepseek/qwen)".to_string())?;
+        .ok_or_else(|| "unknown model (phi/yuan/deepseek/qwen/tiny)".to_string())?;
     let dataset = Dataset::parse(ov.get("dataset").unwrap_or("c4"))
         .ok_or_else(|| "unknown dataset".to_string())?;
     let strategy = StrategyKind::parse(ov.get("strategy").unwrap_or("paired"))
         .ok_or_else(|| "unknown strategy (ep/hydra/naive/fsedp/paired/rule5)".to_string())?;
     let mut hw = presets::mcm_2x2();
     ov.apply_hardware(&mut hw)?;
+    if let Some(out) = trace_out {
+        return cmd_run_traced(&out, &ov, &model, dataset, strategy, &hw);
+    }
     let tokens = ov.get_usize("tokens")?.unwrap_or(64);
     let seed = ov.get_usize("seed")?.unwrap_or(7) as u64;
     let slices = ov
@@ -134,6 +165,81 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         r.scheduler_cycles
     );
     Ok(())
+}
+
+/// `repro run --trace out.json`: a small traced cluster serve (2 packages
+/// behind JSQ) so the trace exercises every layer — request lifecycles,
+/// router/link spans, and adopted chiplet activity — then the Perfetto
+/// export plus the cycle-accounting reports and CSVs next to `out.json`.
+fn cmd_run_traced(
+    out_path: &str,
+    ov: &Overrides,
+    model: &MoeModelConfig,
+    dataset: Dataset,
+    strategy: StrategyKind,
+    hw: &HardwareConfig,
+) -> Result<(), String> {
+    let seed = ov.get_usize("seed")?.unwrap_or(7) as u64;
+    let requests = ov.get_usize("requests")?.unwrap_or(32);
+    let rps = ov.get_f64("rps")?.unwrap_or(400.0);
+    if rps <= 0.0 {
+        return Err("rps must be > 0".into());
+    }
+    let preset = presets::serve_chat();
+    let cfg = ServerConfig {
+        strategy,
+        seed,
+        mode: LoadMode::Open { rate_rps: rps, duration_s: requests as f64 / rps },
+        ..Default::default()
+    };
+    let cluster = ClusterConfig {
+        n_packages: 2,
+        router: RouterKind::Jsq,
+        ..presets::cluster_pod()
+    };
+    let mut sim = ClusterSim::new(model, hw, dataset, &preset, cfg, cluster);
+    let handle = TraceHandle::enabled();
+    sim.attach_trace(handle.clone());
+    let m = sim.run();
+    println!(
+        "{} / {} / {} — traced serve: {}/{} requests completed, {:.2} ms simulated",
+        model.name,
+        dataset.name(),
+        strategy.name(),
+        m.completed,
+        m.arrived,
+        cycles_to_us(m.end_cycles, hw.freq_hz) / 1e3
+    );
+
+    let sibling = |name: &str| -> String {
+        std::path::Path::new(out_path)
+            .with_file_name(name)
+            .to_string_lossy()
+            .into_owned()
+    };
+    let acct_path = sibling("trace_accounting.csv");
+    let heat_path = sibling("trace_expert_heatmap.csv");
+    handle.with(|rec| -> Result<(), String> {
+        save_chrome_trace(rec, out_path).map_err(|e| format!("write {out_path}: {e}"))?;
+        rec.acct.chiplet_table(hw.freq_hz).print();
+        rec.acct.request_table(hw.freq_hz).print();
+        rec.acct
+            .accounting_table(hw.freq_hz)
+            .save_csv(&acct_path)
+            .map_err(|e| format!("write {acct_path}: {e}"))?;
+        rec.acct
+            .heat_table()
+            .save_csv(&heat_path)
+            .map_err(|e| format!("write {heat_path}: {e}"))?;
+        println!(
+            "  trace      : {out_path} ({} events, {} dropped) — open in Perfetto",
+            rec.events().len(),
+            rec.dropped()
+        );
+        println!("  accounting : {acct_path}");
+        println!("  heatmap    : {heat_path}");
+        Ok(())
+    })
 }
 
 fn cmd_serve(args: &[String]) -> Result<(), String> {

@@ -1,0 +1,189 @@
+//! Chrome-trace-event JSON exporter (Perfetto / `chrome://tracing`).
+//!
+//! Renders a [`TraceRecorder`] as the Trace Event Format's object form,
+//! `{"traceEvents":[...]}`:
+//!
+//! * packages are *processes* (pid 0 = cluster front-end), chiplets /
+//!   queues / the router are *threads* — named via `M` metadata events;
+//! * complete spans → `ph:"X"` with `dur`, instants → `ph:"i"` (thread
+//!   scope), overlappable intervals (request lifecycles, link transfers)
+//!   → async nestable `ph:"b"`/`"e"` pairs matched by `(cat, id)`;
+//! * `ts`/`dur` are microseconds, converted from simulated cycles at the
+//!   recorder's clock frequency.
+//!
+//! Bit-reproducibility: events render in record order (deterministic —
+//! all timestamps are simulated), object keys render sorted
+//! (`util::json::Json::Obj` is a `BTreeMap`), and numbers render through
+//! the same `write_num` everywhere, so identical runs produce identical
+//! bytes.
+
+use super::trace::{EventKind, TraceRecorder};
+use crate::util::{cycles_to_us, Json};
+use std::collections::BTreeMap;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn meta(name: &str, pid: u32, tid: u32, value: &str) -> Json {
+    obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str(name.into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(value.into()))])),
+    ])
+}
+
+fn args_json(args: &[(&'static str, u64)]) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in args {
+        m.insert(k.to_string(), Json::Num(*v as f64));
+    }
+    Json::Obj(m)
+}
+
+/// Render the recorder as a Chrome-trace-event [`Json`] document.
+pub fn chrome_trace(rec: &TraceRecorder) -> Json {
+    let freq = rec.freq_hz();
+    let us = |cycles: u64| Json::Num(cycles_to_us(cycles, freq));
+    let mut events: Vec<Json> = Vec::new();
+
+    // Metadata first: process names, then thread names (both maps are
+    // BTreeMaps, so the order is stable).
+    for (&pid, name) in rec.process_names() {
+        events.push(meta("process_name", pid, 0, name));
+    }
+    for (&(pid, tid), name) in rec.thread_names() {
+        events.push(meta("thread_name", pid, tid, name));
+    }
+
+    for ev in rec.events() {
+        let base = |ph: &str, extra: Vec<(&str, Json)>| {
+            let mut pairs = vec![
+                ("ph", Json::Str(ph.into())),
+                ("name", Json::Str(ev.name.into())),
+                ("cat", Json::Str(ev.cat.into())),
+                ("pid", Json::Num(ev.pid as f64)),
+                ("tid", Json::Num(ev.tid as f64)),
+                ("ts", us(ev.start)),
+            ];
+            if !ev.args.is_empty() {
+                pairs.push(("args", args_json(&ev.args)));
+            }
+            pairs.extend(extra);
+            obj(pairs)
+        };
+        match ev.kind {
+            EventKind::Span { dur } => {
+                events.push(base("X", vec![("dur", us(dur))]));
+            }
+            EventKind::Instant => {
+                events.push(base("i", vec![("s", Json::Str("t".into()))]));
+            }
+            EventKind::Async { id, dur } => {
+                events.push(base("b", vec![("id", Json::Num(id as f64))]));
+                // End event: same (cat, id) pairing, no args.
+                events.push(obj(vec![
+                    ("ph", Json::Str("e".into())),
+                    ("name", Json::Str(ev.name.into())),
+                    ("cat", Json::Str(ev.cat.into())),
+                    ("pid", Json::Num(ev.pid as f64)),
+                    ("tid", Json::Num(ev.tid as f64)),
+                    ("ts", us(ev.start + dur)),
+                    ("id", Json::Num(id as f64)),
+                ]));
+            }
+        }
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert(
+        "otherData".to_string(),
+        obj(vec![
+            ("dropped_events", Json::Num(rec.dropped() as f64)),
+            ("clock_freq_hz", Json::Num(freq)),
+        ]),
+    );
+    Json::Obj(top)
+}
+
+/// The trace as a byte-stable JSON string.
+pub fn chrome_trace_string(rec: &TraceRecorder) -> String {
+    chrome_trace(rec).render()
+}
+
+/// Write the trace to `path`, creating parent directories.
+pub fn save_chrome_trace(rec: &TraceRecorder, path: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, chrome_trace_string(rec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceRecorder;
+
+    fn sample() -> TraceRecorder {
+        let mut r = TraceRecorder::new();
+        r.set_freq(1e6); // 1 cycle = 1 us
+        r.name_process(1, "package0");
+        r.name_thread(1, 0, "scheduler");
+        r.span(1, 0, "iter", "iteration", 10, 30, vec![("tokens", 64)]);
+        r.instant(1, 1, "queue", "arrive", 5, vec![("req", 0)]);
+        r.async_span(1, 2, "request", "request", 5, 90, vec![("req", 0)]);
+        r
+    }
+
+    #[test]
+    fn export_parses_and_has_expected_shape() {
+        let s = chrome_trace_string(&sample());
+        let j = Json::parse(&s).expect("exported trace must parse");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 1 X + 1 i + b/e pair = 6.
+        assert_eq!(evs.len(), 6);
+        let phs: Vec<&str> =
+            evs.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phs, vec!["M", "M", "X", "i", "b", "e"]);
+        // X span: ts/dur in us at 1 MHz = cycles.
+        assert_eq!(evs[2].get("ts").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(evs[2].get("dur").unwrap().as_f64().unwrap(), 20.0);
+        // b/e pair shares cat and id; e's ts is the end.
+        assert_eq!(evs[4].get("id").unwrap(), evs[5].get("id").unwrap());
+        assert_eq!(evs[4].get("cat").unwrap(), evs[5].get("cat").unwrap());
+        assert_eq!(evs[5].get("ts").unwrap().as_f64().unwrap(), 90.0);
+    }
+
+    #[test]
+    fn export_is_byte_stable() {
+        assert_eq!(chrome_trace_string(&sample()), chrome_trace_string(&sample()));
+    }
+
+    #[test]
+    fn metadata_names_tracks() {
+        let j = chrome_trace(&sample());
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(
+            evs[0].get("args").unwrap().get("name").unwrap().as_str().unwrap(),
+            "package0"
+        );
+        assert_eq!(evs[0].get("name").unwrap().as_str().unwrap(), "process_name");
+        assert_eq!(
+            evs[1].get("args").unwrap().get("name").unwrap().as_str().unwrap(),
+            "scheduler"
+        );
+    }
+
+    #[test]
+    fn dropped_counter_exported() {
+        let j = chrome_trace(&sample());
+        let other = j.get("otherData").unwrap();
+        assert_eq!(other.get("dropped_events").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(other.get("clock_freq_hz").unwrap().as_f64().unwrap(), 1e6);
+    }
+}

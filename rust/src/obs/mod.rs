@@ -1,0 +1,32 @@
+//! Observability: end-to-end tracing + cycle-accounting profiling.
+//!
+//! One recorder model spans all three simulation layers — L3 chiplet
+//! activity (adopted from `sim::trace::Timeline`), L4 request lifecycles
+//! and scheduler iterations, L5 routing / link transfers / rebalance
+//! migrations — exported as a Perfetto-viewable Chrome trace and folded
+//! into per-chiplet, per-request, and per-(expert × chiplet) attribution
+//! tables.
+//!
+//! * [`trace`] — bounded deterministic span/event recorder
+//!   ([`TraceRecorder`]) and the shared [`TraceHandle`] threaded through
+//!   `ServerSim::attach_trace` / `ClusterSim::attach_trace`.
+//! * [`profile`] — [`Accounting`]: record-time cycle attribution, exact
+//!   regardless of event-buffer retention, rendered via `util::table`.
+//! * [`export`] — Chrome-trace-event JSON (`{"traceEvents":[...]}`),
+//!   byte-stable across identical runs.
+//!
+//! Invariant pinned by `tests/trace.rs`: attaching a trace never changes
+//! any simulation result bit — recording reads sim state, it never
+//! mutates it, and all timestamps are simulated cycles.
+
+pub mod export;
+pub mod profile;
+pub mod trace;
+
+pub use export::{chrome_trace, chrome_trace_string, save_chrome_trace};
+pub use profile::{Accounting, ChipletBusy, Heat, PhaseTotals};
+pub use trace::{
+    chiplet_tid, package_pid, EventKind, Pid, RequestSpan, Tid, TraceEvent, TraceHandle,
+    TraceRecorder, PID_FRONTEND, TID_CHIPLET0, TID_LINK, TID_QUEUE, TID_REBALANCER, TID_REQUESTS,
+    TID_ROUTER, TID_SCHED,
+};

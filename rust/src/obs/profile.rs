@@ -1,0 +1,356 @@
+//! Cycle-accounting profiler: folds trace spans into attribution tables.
+//!
+//! [`Accounting`] is accumulated *at record time* by `obs::trace` — plain
+//! integer adds per span, independent of the event ring's retention — so
+//! the attribution stays exact even after the bounded event buffer starts
+//! dropping spans. Three attributions are kept:
+//!
+//! * **Per-chiplet busy breakdown** — compute / DDR load / D2D send /
+//!   D2D recv cycles per `(package, chiplet)`, folded from adopted
+//!   `sim::trace::Timeline` spans. The compute column reconciles with
+//!   [`Timeline::compute_busy`](crate::sim::Timeline::compute_busy) by
+//!   construction (pinned by `tests/trace.rs`); idle is derived against
+//!   the package's last observed clock.
+//! * **Per-request critical path** — link hand-off vs queue wait vs
+//!   chunked prefill vs decode cycles, telescoped from each completed
+//!   request's lifecycle milestones (the four phases partition
+//!   arrival → finish exactly), plus migration count/transfer time.
+//! * **Per-(expert × chiplet) heat** — tokens routed and compute cycles
+//!   spent, the measured per-expert cost surface that cost-aware routing
+//!   (ROADMAP L5 hardening) consumes.
+//!
+//! Everything renders through `util::table`: two human-readable reports,
+//! a long-format `trace_accounting.csv`, and the heatmap CSV.
+
+use crate::sim::trace::{ActivityKind, NO_EXPERT};
+use crate::util::{cycles_to_us, Table};
+use std::collections::BTreeMap;
+
+/// Process id in the exported trace (0 = cluster front-end, 1..=N =
+/// packages; see `obs::trace`).
+pub type Pid = u32;
+
+/// Busy cycles of one chiplet, by activity kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChipletBusy {
+    pub compute: u64,
+    pub ddr_load: u64,
+    pub d2d_send: u64,
+    pub d2d_recv: u64,
+}
+
+impl ChipletBusy {
+    pub fn total(&self) -> u64 {
+        self.compute + self.ddr_load + self.d2d_send + self.d2d_recv
+    }
+}
+
+/// Summed per-request phase cycles over all completed requests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTotals {
+    /// Completed requests folded in.
+    pub n: u64,
+    pub link: u64,
+    pub queue: u64,
+    pub prefill: u64,
+    pub decode: u64,
+}
+
+impl PhaseTotals {
+    /// Equals the sum of end-to-end latencies of the folded requests (the
+    /// four phases partition each lifetime).
+    pub fn total(&self) -> u64 {
+        self.link + self.queue + self.prefill + self.decode
+    }
+}
+
+/// One (expert × chiplet) cell of the heat surface.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Heat {
+    pub tokens: u64,
+    pub cycles: u64,
+}
+
+/// The folded attribution state. All maps are `BTreeMap` so iteration
+/// (reports, CSVs) is ordered and bit-stable.
+#[derive(Clone, Debug, Default)]
+pub struct Accounting {
+    /// `(pid, chiplet)` → busy breakdown.
+    pub chiplets: BTreeMap<(Pid, usize), ChipletBusy>,
+    /// Last cycle observed per pid — the idle/denominator reference.
+    pub pid_end: BTreeMap<Pid, u64>,
+    pub requests: PhaseTotals,
+    /// `(expert, chiplet)` → tokens routed + compute cycles spent.
+    pub heat: BTreeMap<(u16, usize), Heat>,
+    pub migrations: u64,
+    pub migration_cycles: u64,
+}
+
+impl Accounting {
+    /// Fold one chiplet activity span.
+    pub fn chiplet(&mut self, pid: Pid, chiplet: usize, kind: ActivityKind, cycles: u64) {
+        let b = self.chiplets.entry((pid, chiplet)).or_default();
+        match kind {
+            ActivityKind::Compute => b.compute += cycles,
+            ActivityKind::DdrLoad => b.ddr_load += cycles,
+            ActivityKind::D2dSend => b.d2d_send += cycles,
+            ActivityKind::D2dRecv => b.d2d_recv += cycles,
+        }
+    }
+
+    /// Advance a package's end-of-activity watermark (idle reference).
+    pub fn observe_end(&mut self, pid: Pid, end: u64) {
+        let e = self.pid_end.entry(pid).or_insert(0);
+        *e = (*e).max(end);
+    }
+
+    /// Fold one completed request's phase cycles.
+    pub fn request(&mut self, link: u64, queue: u64, prefill: u64, decode: u64) {
+        self.requests.n += 1;
+        self.requests.link += link;
+        self.requests.queue += queue;
+        self.requests.prefill += prefill;
+        self.requests.decode += decode;
+    }
+
+    /// Fold tokens routed to `(expert, chiplet)`; compute cycles land via
+    /// [`Accounting::heat_cycles`] when the chiplet span carries an
+    /// expert id.
+    pub fn heat_tokens(&mut self, expert: u16, chiplet: usize, tokens: u64) {
+        self.heat.entry((expert, chiplet)).or_default().tokens += tokens;
+    }
+
+    pub fn heat_cycles(&mut self, expert: u16, chiplet: usize, cycles: u64) {
+        if expert != NO_EXPERT {
+            self.heat.entry((expert, chiplet)).or_default().cycles += cycles;
+        }
+    }
+
+    /// Fold one rebalance migration and its link transfer time.
+    pub fn migration(&mut self, transfer_cycles: u64) {
+        self.migrations += 1;
+        self.migration_cycles += transfer_cycles;
+    }
+
+    /// Folded compute-busy cycles of one `(pid, chiplet)` — the quantity
+    /// that must equal `Timeline::compute_busy` for adopted timelines.
+    pub fn compute_busy(&self, pid: Pid, chiplet: usize) -> u64 {
+        self.chiplets.get(&(pid, chiplet)).map_or(0, |b| b.compute)
+    }
+
+    /// Per-chiplet busy breakdown report (µs; idle against the package's
+    /// last observed cycle).
+    pub fn chiplet_table(&self, freq_hz: f64) -> Table {
+        let us = |c: u64| format!("{:.3}", cycles_to_us(c, freq_hz));
+        let mut t = Table::new(
+            "trace accounting: per-chiplet busy breakdown",
+            &[
+                "pkg",
+                "chiplet",
+                "compute_us",
+                "ddr_load_us",
+                "d2d_send_us",
+                "d2d_recv_us",
+                "idle_us",
+                "compute_%",
+            ],
+        );
+        for (&(pid, c), b) in &self.chiplets {
+            let window = self.pid_end.get(&pid).copied().unwrap_or(0);
+            let idle = window.saturating_sub(b.total());
+            let pct = if window > 0 {
+                format!("{:.1}", 100.0 * b.compute as f64 / window as f64)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                format!("{pid}"),
+                format!("{c}"),
+                us(b.compute),
+                us(b.ddr_load),
+                us(b.d2d_send),
+                us(b.d2d_recv),
+                us(idle),
+                pct,
+            ]);
+        }
+        t
+    }
+
+    /// Per-request critical-path report: where completed requests spent
+    /// their end-to-end latency, plus rebalance migrations.
+    pub fn request_table(&self, freq_hz: f64) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "trace accounting: per-request critical path ({} completed requests)",
+                self.requests.n
+            ),
+            &["phase", "total_ms", "mean_us", "share_%"],
+        );
+        let total = self.requests.total();
+        for (phase, cycles) in [
+            ("link", self.requests.link),
+            ("queue", self.requests.queue),
+            ("prefill", self.requests.prefill),
+            ("decode", self.requests.decode),
+        ] {
+            let mean = if self.requests.n > 0 {
+                format!(
+                    "{:.1}",
+                    cycles_to_us(cycles, freq_hz) / self.requests.n as f64
+                )
+            } else {
+                "-".into()
+            };
+            let share = if total > 0 {
+                format!("{:.1}", 100.0 * cycles as f64 / total as f64)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                phase.into(),
+                format!("{:.3}", cycles_to_us(cycles, freq_hz) / 1e3),
+                mean,
+                share,
+            ]);
+        }
+        t.row(vec![
+            "migration".into(),
+            format!("{:.3}", cycles_to_us(self.migration_cycles, freq_hz) / 1e3),
+            format!("{} events", self.migrations),
+            "-".into(),
+        ]);
+        t
+    }
+
+    /// Long-format export of both attributions — the `trace_accounting.csv`
+    /// shape (`section, entity, metric, value`), trivially pivotable.
+    pub fn accounting_table(&self, freq_hz: f64) -> Table {
+        let us = |c: u64| format!("{:.3}", cycles_to_us(c, freq_hz));
+        let mut t = Table::new(
+            "trace accounting (long format)",
+            &["section", "entity", "metric", "value"],
+        );
+        for (&(pid, c), b) in &self.chiplets {
+            let entity = format!("p{pid}.c{c}");
+            let window = self.pid_end.get(&pid).copied().unwrap_or(0);
+            for (metric, cycles) in [
+                ("compute_us", b.compute),
+                ("ddr_load_us", b.ddr_load),
+                ("d2d_send_us", b.d2d_send),
+                ("d2d_recv_us", b.d2d_recv),
+                ("idle_us", window.saturating_sub(b.total())),
+            ] {
+                t.row(vec![
+                    "chiplet".into(),
+                    entity.clone(),
+                    metric.into(),
+                    us(cycles),
+                ]);
+            }
+        }
+        for (phase, cycles) in [
+            ("link", self.requests.link),
+            ("queue", self.requests.queue),
+            ("prefill", self.requests.prefill),
+            ("decode", self.requests.decode),
+        ] {
+            t.row(vec![
+                "request_phase".into(),
+                phase.into(),
+                "total_us".into(),
+                us(cycles),
+            ]);
+        }
+        t.row(vec![
+            "request_phase".into(),
+            "completed".into(),
+            "count".into(),
+            format!("{}", self.requests.n),
+        ]);
+        t.row(vec![
+            "migration".into(),
+            "all".into(),
+            "count".into(),
+            format!("{}", self.migrations),
+        ]);
+        t.row(vec![
+            "migration".into(),
+            "all".into(),
+            "transfer_us".into(),
+            us(self.migration_cycles),
+        ]);
+        t
+    }
+
+    /// The per-(expert × chiplet) token-and-cycle heatmap — one row per
+    /// cell that saw traffic, expert-major order.
+    pub fn heat_table(&self) -> Table {
+        let mut t = Table::new(
+            "trace accounting: per-(expert x chiplet) tokens and compute cycles",
+            &["expert", "chiplet", "tokens", "cycles"],
+        );
+        for (&(e, c), h) in &self.heat {
+            t.row(vec![
+                format!("{e}"),
+                format!("{c}"),
+                format!("{}", h.tokens),
+                format!("{}", h.cycles),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_partition_and_fold() {
+        let mut a = Accounting::default();
+        a.request(10, 20, 30, 40);
+        a.request(0, 5, 5, 10);
+        assert_eq!(a.requests.n, 2);
+        assert_eq!(a.requests.total(), 120);
+        a.migration(50);
+        assert_eq!((a.migrations, a.migration_cycles), (1, 50));
+    }
+
+    #[test]
+    fn chiplet_fold_by_kind_and_idle_window() {
+        let mut a = Accounting::default();
+        a.chiplet(1, 0, ActivityKind::Compute, 100);
+        a.chiplet(1, 0, ActivityKind::DdrLoad, 40);
+        a.chiplet(1, 1, ActivityKind::D2dSend, 7);
+        a.observe_end(1, 200);
+        assert_eq!(a.compute_busy(1, 0), 100);
+        assert_eq!(a.chiplets[&(1, 0)].total(), 140);
+        let t = a.chiplet_table(1e6); // 1 MHz: 1 cycle = 1 us
+        let csv = t.to_csv();
+        assert!(csv.contains("100.000"), "compute us missing: {csv}");
+        assert!(csv.contains("60.000"), "idle us missing: {csv}");
+    }
+
+    #[test]
+    fn heat_ignores_no_expert_cycles() {
+        let mut a = Accounting::default();
+        a.heat_tokens(3, 1, 16);
+        a.heat_cycles(3, 1, 400);
+        a.heat_cycles(NO_EXPERT, 1, 999);
+        assert_eq!(a.heat.len(), 1);
+        assert_eq!(a.heat[&(3, 1)], Heat { tokens: 16, cycles: 400 });
+    }
+
+    #[test]
+    fn tables_are_deterministic() {
+        let mut a = Accounting::default();
+        a.chiplet(2, 1, ActivityKind::Compute, 10);
+        a.chiplet(1, 0, ActivityKind::Compute, 10);
+        a.request(1, 2, 3, 4);
+        let once = a.accounting_table(1e9).to_csv();
+        assert_eq!(once, a.accounting_table(1e9).to_csv());
+        // BTreeMap ordering: pid 1 rows precede pid 2 rows.
+        assert!(once.find("p1.c0").unwrap() < once.find("p2.c1").unwrap());
+    }
+}

@@ -1,0 +1,508 @@
+//! Bounded, deterministic span/event recorder.
+//!
+//! The recorder is the single sink for every layer's activity:
+//!
+//! * **L3 chiplets** — `sim::trace::Timeline` spans (compute / DDR / D2D,
+//!   tagged by expert id) are *adopted* via [`TraceRecorder::adopt_timeline`]
+//!   and re-based onto the serving clock, so per-layer micro-timelines line
+//!   up end-to-end in one trace.
+//! * **L4 serving** — request lifecycle (arrive → queue → admit → prefill
+//!   chunks → decode → finish), per-iteration scheduler spans with memo
+//!   hit/miss counts, and preemption/migration-donation events.
+//! * **L5 cluster** — route decisions, serdes hand-off transfers, and
+//!   rebalance migrations.
+//!
+//! Determinism and cost discipline: every timestamp is a *simulated* cycle
+//! count (never a wall-clock read), recording only ever appends to
+//! recorder-owned state — it cannot perturb sim state or RNG draws, which
+//! is what makes trace-on/trace-off bit-identical (pinned by
+//! `tests/trace.rs`). The event buffer is bounded (like
+//! `util::timeseries`): past `cap` events the recorder counts drops
+//! instead of growing, while the `obs::profile` accounting — folded at
+//! record time from plain integer adds — stays exact regardless.
+//! Zero-overhead-when-off means the *absence* of a recorder: traced code
+//! paths hold an `Option<TraceHandle>` and pay one branch when it is
+//! `None` (pinned by the `trace_disabled_overhead` bench).
+
+use super::profile::Accounting;
+use crate::sim::trace::Timeline;
+use crate::sim::SimTime;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Process id in the exported trace.
+pub type Pid = u32;
+/// Thread id within a trace process.
+pub type Tid = u32;
+
+/// The cluster front-end (router + inter-package link + rebalancer).
+pub const PID_FRONTEND: Pid = 0;
+/// Front-end thread: route decisions.
+pub const TID_ROUTER: Tid = 0;
+/// Front-end thread: serdes hand-off / migration transfers.
+pub const TID_LINK: Tid = 1;
+/// Front-end thread: rebalance decisions.
+pub const TID_REBALANCER: Tid = 2;
+
+/// Package thread: scheduler iterations (attention / MoE / memo spans).
+pub const TID_SCHED: Tid = 0;
+/// Package thread: queue events (arrivals, admissions, preemptions).
+pub const TID_QUEUE: Tid = 1;
+/// Package thread: request lifecycle spans (async, they overlap).
+pub const TID_REQUESTS: Tid = 2;
+/// First chiplet thread; chiplet `c` is `TID_CHIPLET0 + c`.
+pub const TID_CHIPLET0: Tid = 16;
+
+/// Pid of package `p` (front-end owns pid 0).
+pub fn package_pid(package: usize) -> Pid {
+    package as Pid + 1
+}
+
+/// Tid of chiplet `c` within its package's process.
+pub fn chiplet_tid(chiplet: usize) -> Tid {
+    TID_CHIPLET0 + chiplet as Tid
+}
+
+/// Default event-buffer capacity (events, not bytes).
+pub const DEFAULT_CAP: usize = 1 << 18;
+
+/// How an event renders in the Chrome trace format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Complete span (`ph:"X"`): closed interval on one thread track.
+    Span { dur: u64 },
+    /// Instant (`ph:"i"`, thread-scoped).
+    Instant,
+    /// Async nestable begin/end pair (`ph:"b"`/`"e"`), matched by
+    /// `(cat, id)` — used where intervals overlap on one track
+    /// (request lifecycles, link transfers).
+    Async { id: u32, dur: u64 },
+}
+
+/// One recorded event. `name`/`cat` are `&'static str` by design: record
+/// sites pass literals, so recording never allocates for the common case.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub pid: Pid,
+    pub tid: Tid,
+    /// Chrome trace category (also the async-id namespace).
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Start cycle (simulated).
+    pub start: SimTime,
+    pub kind: EventKind,
+    /// Small integer payload, rendered into `args` on export.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// The recorder: a bounded event log plus record-time accounting.
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    enabled: bool,
+    cap: usize,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+    freq_hz: f64,
+    process_names: BTreeMap<Pid, String>,
+    thread_names: BTreeMap<(Pid, Tid), String>,
+    /// Cycle-accounting fold, exact independent of event retention.
+    pub acct: Accounting,
+    next_async_id: u32,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        TraceRecorder {
+            enabled: true,
+            cap: DEFAULT_CAP,
+            events: Vec::new(),
+            dropped: 0,
+            freq_hz: 1e9,
+            process_names: BTreeMap::new(),
+            thread_names: BTreeMap::new(),
+            acct: Accounting::default(),
+            next_async_id: 1,
+        }
+    }
+
+    /// A recorder that ignores every record call (still not free — the
+    /// zero-cost-when-off path is `Option::None`, not this).
+    pub fn disabled() -> Self {
+        let mut r = Self::new();
+        r.enabled = false;
+        r
+    }
+
+    pub fn with_cap(cap: usize) -> Self {
+        let mut r = Self::new();
+        r.cap = cap.max(1);
+        r
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Clock frequency used to convert cycles → µs at export time.
+    pub fn set_freq(&mut self, freq_hz: f64) {
+        self.freq_hz = freq_hz;
+    }
+
+    pub fn freq_hz(&self) -> f64 {
+        self.freq_hz
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Events discarded after the buffer hit `cap` (accounting unaffected).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn name_process(&mut self, pid: Pid, name: &str) {
+        if self.enabled {
+            self.process_names.insert(pid, name.to_string());
+        }
+    }
+
+    pub fn name_thread(&mut self, pid: Pid, tid: Tid, name: &str) {
+        if self.enabled {
+            self.thread_names.insert((pid, tid), name.to_string());
+        }
+    }
+
+    pub fn process_names(&self) -> &BTreeMap<Pid, String> {
+        &self.process_names
+    }
+
+    pub fn thread_names(&self) -> &BTreeMap<(Pid, Tid), String> {
+        &self.thread_names
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Record a complete span on `(pid, tid)`.
+    pub fn span(
+        &mut self,
+        pid: Pid,
+        tid: Tid,
+        cat: &'static str,
+        name: &'static str,
+        start: SimTime,
+        end: SimTime,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        debug_assert!(end >= start, "span {name} ends before it starts");
+        self.push(TraceEvent {
+            pid,
+            tid,
+            cat,
+            name,
+            start,
+            kind: EventKind::Span { dur: end - start },
+            args,
+        });
+    }
+
+    /// Record a thread-scoped instant on `(pid, tid)`.
+    pub fn instant(
+        &mut self,
+        pid: Pid,
+        tid: Tid,
+        cat: &'static str,
+        name: &'static str,
+        at: SimTime,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent { pid, tid, cat, name, start: at, kind: EventKind::Instant, args });
+    }
+
+    /// Record an async (overlappable) span; allocates a fresh async id.
+    pub fn async_span(
+        &mut self,
+        pid: Pid,
+        tid: Tid,
+        cat: &'static str,
+        name: &'static str,
+        start: SimTime,
+        end: SimTime,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        debug_assert!(end >= start, "async span {name} ends before it starts");
+        let id = self.next_async_id;
+        self.next_async_id += 1;
+        self.push(TraceEvent {
+            pid,
+            tid,
+            cat,
+            name,
+            start,
+            kind: EventKind::Async { id, dur: end - start },
+            args,
+        });
+    }
+
+    /// Adopt one `sim::trace::Timeline` (a single layer's chiplet
+    /// micro-schedule, whose cycles start at 0) into the recorder,
+    /// re-based to serving time `offset`. Accounting folds every span;
+    /// the event log gets one span per timeline span, on the owning
+    /// chiplet's thread track.
+    pub fn adopt_timeline(&mut self, pid: Pid, offset: SimTime, tl: &Timeline) {
+        if !self.enabled {
+            return;
+        }
+        use crate::sim::trace::{ActivityKind, NO_EXPERT};
+        for s in &tl.spans {
+            let cycles = s.end - s.start;
+            self.acct.chiplet(pid, s.chiplet, s.kind, cycles);
+            if s.kind == ActivityKind::Compute {
+                self.acct.heat_cycles(s.expert, s.chiplet, cycles);
+            }
+            let name = match s.kind {
+                ActivityKind::Compute => "compute",
+                ActivityKind::DdrLoad => "ddr_load",
+                ActivityKind::D2dSend => "d2d_send",
+                ActivityKind::D2dRecv => "d2d_recv",
+            };
+            let args = if s.expert == NO_EXPERT {
+                vec![]
+            } else {
+                vec![("expert", s.expert as u64)]
+            };
+            self.span(
+                pid,
+                chiplet_tid(s.chiplet),
+                "chiplet",
+                name,
+                offset + s.start,
+                offset + s.end,
+                args,
+            );
+        }
+    }
+
+    /// Emit the full lifecycle of one completed request: an outer
+    /// `request` async span plus its phase children (link hand-off if the
+    /// request travelled, queue wait, prefill, decode), and fold the
+    /// phase cycles into accounting. The four phases telescope — they
+    /// partition `arrival → finish` exactly.
+    pub fn request_lifecycle(&mut self, pid: Pid, r: &RequestSpan) {
+        if !self.enabled {
+            return;
+        }
+        let args = vec![
+            ("req", r.id as u64),
+            ("prompt", r.prompt as u64),
+            ("output", r.output as u64),
+        ];
+        self.async_span(pid, TID_REQUESTS, "request", "request", r.arrival, r.finish, args);
+        if r.ready > r.arrival {
+            self.async_span(pid, TID_REQUESTS, "phase", "link", r.arrival, r.ready, vec![]);
+        }
+        self.async_span(pid, TID_REQUESTS, "phase", "queue", r.ready, r.first_sched, vec![]);
+        self.async_span(pid, TID_REQUESTS, "phase", "prefill", r.first_sched, r.first_token, vec![]);
+        self.async_span(pid, TID_REQUESTS, "phase", "decode", r.first_token, r.finish, vec![]);
+        self.acct.request(
+            r.ready - r.arrival,
+            r.first_sched - r.ready,
+            r.first_token - r.first_sched,
+            r.finish - r.first_token,
+        );
+    }
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Lifecycle milestones of one completed request, in serving cycles.
+/// Invariant: `arrival ≤ ready ≤ first_sched ≤ first_token ≤ finish`.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestSpan {
+    pub id: u32,
+    pub prompt: u32,
+    pub output: u32,
+    /// Cycle the request arrived at the cluster front-end (or directly at
+    /// the package when there is no front-end).
+    pub arrival: SimTime,
+    /// Cycle the request became schedulable at its package (after any
+    /// serdes hand-off).
+    pub ready: SimTime,
+    /// Cycle of the first iteration that scheduled the request.
+    pub first_sched: SimTime,
+    pub first_token: SimTime,
+    pub finish: SimTime,
+}
+
+/// Shared handle to one recorder. Sim stepping is single-threaded per
+/// simulation instance (sweeps parallelize by constructing whole sims
+/// inside worker threads), so `Rc<RefCell<_>>` is the right tool — a
+/// cluster front-end and its packages all record into the same buffer.
+#[derive(Clone, Debug)]
+pub struct TraceHandle(Rc<RefCell<TraceRecorder>>);
+
+impl TraceHandle {
+    pub fn new(rec: TraceRecorder) -> Self {
+        TraceHandle(Rc::new(RefCell::new(rec)))
+    }
+
+    pub fn enabled() -> Self {
+        Self::new(TraceRecorder::new())
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.borrow().is_enabled()
+    }
+
+    /// Run `f` with mutable access to the recorder.
+    pub fn with<R>(&self, f: impl FnOnce(&mut TraceRecorder) -> R) -> R {
+        f(&mut self.0.borrow_mut())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::trace::{ActivityKind, Span, NO_EXPERT};
+
+    #[test]
+    fn bounded_buffer_counts_drops_but_accounting_stays_exact() {
+        let mut r = TraceRecorder::with_cap(4);
+        let mut tl = Timeline::new(1, true);
+        for i in 0..10u64 {
+            tl.record(Span {
+                chiplet: 0,
+                kind: ActivityKind::Compute,
+                start: i * 10,
+                end: i * 10 + 5,
+                expert: 0,
+            });
+        }
+        r.adopt_timeline(1, 0, &tl);
+        assert_eq!(r.events().len(), 4);
+        assert_eq!(r.dropped(), 6);
+        // Accounting saw all 10 spans.
+        assert_eq!(r.acct.compute_busy(1, 0), 50);
+        assert_eq!(r.acct.compute_busy(1, 0), tl.compute_busy(0));
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = TraceRecorder::disabled();
+        r.span(0, 0, "c", "n", 0, 10, vec![]);
+        r.instant(0, 0, "c", "n", 5, vec![]);
+        r.name_process(0, "p");
+        let mut tl = Timeline::new(1, true);
+        tl.record(Span { chiplet: 0, kind: ActivityKind::Compute, start: 0, end: 9, expert: 2 });
+        r.adopt_timeline(0, 0, &tl);
+        assert!(r.events().is_empty());
+        assert!(r.process_names().is_empty());
+        assert_eq!(r.acct.compute_busy(0, 0), 0);
+    }
+
+    #[test]
+    fn lifecycle_phases_telescope() {
+        let mut r = TraceRecorder::new();
+        r.request_lifecycle(
+            1,
+            &RequestSpan {
+                id: 7,
+                prompt: 64,
+                output: 16,
+                arrival: 100,
+                ready: 150,
+                first_sched: 200,
+                first_token: 400,
+                finish: 900,
+            },
+        );
+        assert_eq!(r.acct.requests.n, 1);
+        assert_eq!(r.acct.requests.total(), 800); // = finish - arrival
+        // request + link + queue + prefill + decode spans.
+        assert_eq!(r.events().len(), 5);
+        // Children start/end within the outer request interval.
+        for ev in r.events() {
+            if let EventKind::Async { dur, .. } = ev.kind {
+                assert!(ev.start >= 100 && ev.start + dur <= 900);
+            }
+        }
+    }
+
+    #[test]
+    fn lifecycle_skips_link_span_when_local() {
+        let mut r = TraceRecorder::new();
+        r.request_lifecycle(
+            1,
+            &RequestSpan {
+                id: 0,
+                prompt: 8,
+                output: 4,
+                arrival: 10,
+                ready: 10,
+                first_sched: 20,
+                first_token: 30,
+                finish: 40,
+            },
+        );
+        assert_eq!(r.events().len(), 4); // no link child
+        assert_eq!(r.acct.requests.link, 0);
+    }
+
+    #[test]
+    fn adoption_rebases_and_tags_experts() {
+        let mut r = TraceRecorder::new();
+        let mut tl = Timeline::new(2, true);
+        tl.record(Span { chiplet: 1, kind: ActivityKind::DdrLoad, start: 0, end: 30, expert: NO_EXPERT });
+        tl.record(Span { chiplet: 1, kind: ActivityKind::Compute, start: 30, end: 50, expert: 3 });
+        r.adopt_timeline(2, 1000, &tl);
+        let evs = r.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].start, 1000);
+        assert_eq!(evs[0].tid, chiplet_tid(1));
+        assert_eq!(evs[1].name, "compute");
+        assert_eq!(evs[1].args, vec![("expert", 3)]);
+        // DDR span carries no expert arg; heat only folds compute.
+        assert!(evs[0].args.is_empty());
+        assert_eq!(r.acct.heat[&(3, 1)].cycles, 20);
+        assert_eq!(r.acct.heat.len(), 1);
+    }
+
+    #[test]
+    fn async_ids_are_unique_and_deterministic() {
+        let run = || {
+            let mut r = TraceRecorder::new();
+            r.async_span(0, 0, "a", "x", 0, 5, vec![]);
+            r.async_span(0, 0, "a", "y", 2, 9, vec![]);
+            r.events()
+                .iter()
+                .map(|e| match e.kind {
+                    EventKind::Async { id, .. } => id,
+                    _ => unreachable!(),
+                })
+                .collect::<Vec<_>>()
+        };
+        let a = run();
+        assert_eq!(a, vec![1, 2]);
+        assert_eq!(a, run());
+    }
+}

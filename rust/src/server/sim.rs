@@ -23,9 +23,11 @@ use crate::config::{Dataset, HardwareConfig, MoeModelConfig, ServePreset, Strate
 use crate::coordinator::{make_strategy, LayerCtx, Strategy};
 use crate::engine::timing::attention_cycles;
 use crate::moe::{default_num_slices, ExpertGeometry};
+use crate::obs::{chiplet_tid, package_pid, Pid, RequestSpan, TraceHandle};
+use crate::obs::{TID_QUEUE, TID_REQUESTS, TID_SCHED};
 use crate::util::{cycles_to_us, TelemetryMode};
 use crate::workload::{shard_layer, RequestChunk, TraceGenerator};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
 
 /// How load is offered to the server.
@@ -84,6 +86,18 @@ struct IterCost {
     d2d_bytes: u64,
 }
 
+/// Per-package tracing state (attached via [`ServerSim::attach_trace`]).
+/// The handle is shared — a cluster front-end and all its packages record
+/// into one buffer; `pid` namespaces this package's tracks.
+struct PkgTrace {
+    handle: TraceHandle,
+    pid: Pid,
+    /// Request id → cycle of the first iteration that scheduled it. Keyed
+    /// lookups only (never iterated), so the hash map cannot leak
+    /// iteration-order nondeterminism into the trace.
+    first_sched: HashMap<u32, u64>,
+}
+
 /// The serving simulator: one strategy serving one request stream on one
 /// package. Deterministic for a given (config, preset, seed). Borrows the
 /// model/hardware/preset configs so sweep loops can fan hundreds of
@@ -119,6 +133,11 @@ pub struct ServerSim<'a> {
     clock: u64,
     iter_idx: usize,
     metrics: ServeMetrics,
+    /// Span recorder; `None` (the default) is the zero-overhead path —
+    /// every record site is a single `Option` branch. Recording never
+    /// mutates sim state, so results are bit-identical attached or not
+    /// (pinned by `tests/trace.rs`).
+    trace: Option<PkgTrace>,
 }
 
 impl<'a> ServerSim<'a> {
@@ -157,6 +176,7 @@ impl<'a> ServerSim<'a> {
             clock: 0,
             iter_idx: 0,
             metrics: ServeMetrics::with_mode(cfg.telemetry),
+            trace: None,
             model,
             hw,
             preset,
@@ -164,22 +184,69 @@ impl<'a> ServerSim<'a> {
         }
     }
 
+    /// Attach a span recorder, registering this package's tracks (process
+    /// = the package, threads = scheduler / queue / requests / chiplets).
+    /// `package` is the package index within the cluster (0 for a
+    /// standalone sim); the trace pid is `package + 1` (pid 0 is the
+    /// cluster front-end).
+    pub fn attach_trace(&mut self, handle: TraceHandle, package: usize) {
+        let pid = package_pid(package);
+        handle.with(|r| {
+            r.set_freq(self.hw.freq_hz);
+            r.name_process(pid, &format!("package{package}"));
+            r.name_thread(pid, TID_SCHED, "scheduler");
+            r.name_thread(pid, TID_QUEUE, "queue");
+            r.name_thread(pid, TID_REQUESTS, "requests");
+            for c in 0..self.hw.n_chiplets() {
+                r.name_thread(pid, chiplet_tid(c), &format!("chiplet{c}"));
+            }
+        });
+        self.trace = Some(PkgTrace { handle, pid, first_sched: HashMap::new() });
+    }
+
     /// Cost one scheduling iteration: attention + MoE per layer, exactly
     /// the offline evaluator's per-iteration arithmetic. MoE layers go
     /// through the memo when enabled.
-    fn iteration_cycles(&mut self, iter_idx: usize, plan: &[RequestChunk]) -> IterCost {
+    ///
+    /// `base` is the serving cycle the iteration starts at — the layer
+    /// spans (attention / MoE / adopted chiplet activity) are re-based
+    /// onto it so the trace lines up with the package clock. Tracing only
+    /// reads; the returned cost is bit-identical with tracing on or off
+    /// (a memo *hit* gets an aggregate `moe_memo` span — the chiplet
+    /// micro-schedule was skipped, so there is nothing to adopt; the heat
+    /// map likewise folds tokens on misses only).
+    fn iteration_cycles(&mut self, iter_idx: usize, plan: &[RequestChunk], base: u64) -> IterCost {
         let layers = self.gen.layer_gatings(iter_idx, plan);
         let n_experts_total = self.model.n_experts + self.model.n_shared;
         let none = HashSet::new();
+        // Rc-clone of the handle so the borrow checker sees no overlap
+        // with `self.strategy`/`self.memo` below; one `Option` branch
+        // total when tracing is off.
+        let trace = self.trace.as_ref().map(|t| (t.handle.clone(), t.pid));
         let mut cost = IterCost { cycles: 0, ddr_bytes: 0, d2d_bytes: 0 };
         for gating in &layers {
             let wl = shard_layer(gating, n_experts_total, self.hw.n_chiplets(), &none);
-            cost.cycles += attention_cycles(
+            let att = attention_cycles(
                 self.model,
                 self.hw,
                 self.cfg.avg_context,
                 wl.total_tokens as usize,
             );
+            let att_start = base + cost.cycles;
+            cost.cycles += att;
+            if let Some((h, pid)) = &trace {
+                h.with(|r| {
+                    r.span(
+                        *pid,
+                        TID_SCHED,
+                        "layer",
+                        "attention",
+                        att_start,
+                        att_start + att,
+                        vec![("tokens", wl.total_tokens as u64)],
+                    )
+                });
+            }
             if wl.experts.is_empty() {
                 continue;
             }
@@ -193,16 +260,55 @@ impl<'a> ServerSim<'a> {
                 }
                 None => None,
             };
+            let moe_start = base + cost.cycles;
             let outcome = match cached {
-                Some(hit) => hit,
+                Some(hit) => {
+                    if let Some((h, pid)) = &trace {
+                        h.with(|r| {
+                            r.span(
+                                *pid,
+                                TID_SCHED,
+                                "layer",
+                                "moe_memo",
+                                moe_start,
+                                moe_start + hit.makespan,
+                                vec![("tokens", wl.total_tokens as u64)],
+                            )
+                        });
+                    }
+                    hit
+                }
                 None => {
                     let ctx = LayerCtx {
                         hw: self.hw,
                         geom: &self.geom,
                         workload: &wl,
-                        record_spans: false,
+                        // Span retention is the only thing this toggles;
+                        // the makespan arithmetic is identical either way.
+                        record_spans: trace.is_some(),
                     };
                     let r = self.strategy.run_layer(&ctx);
+                    if let Some((h, pid)) = &trace {
+                        h.with(|rec| {
+                            rec.span(
+                                *pid,
+                                TID_SCHED,
+                                "layer",
+                                "moe",
+                                moe_start,
+                                moe_start + r.makespan,
+                                vec![("tokens", wl.total_tokens as u64)],
+                            );
+                            rec.adopt_timeline(*pid, moe_start, &r.timeline);
+                            for e in &wl.experts {
+                                for (c, &toks) in e.tokens_per_chiplet.iter().enumerate() {
+                                    if toks > 0 {
+                                        rec.acct.heat_tokens(e.expert, c, toks as u64);
+                                    }
+                                }
+                            }
+                        });
+                    }
                     let fresh = LayerOutcome {
                         makespan: r.makespan,
                         ddr_bytes: r.ddr_bytes,
@@ -250,6 +356,22 @@ impl<'a> ServerSim<'a> {
         // generator emits them sorted ascending).
         pending.reverse();
         self.pending = pending;
+        if let Some(t) = &self.trace {
+            // `run` bypasses `inject`, so emit the arrival instants here
+            // (ascending, hence the re-reverse).
+            t.handle.with(|rec| {
+                for r in self.pending.iter().rev() {
+                    rec.instant(
+                        t.pid,
+                        TID_QUEUE,
+                        "queue",
+                        "arrive",
+                        r.ready_cycles,
+                        vec![("req", r.id as u64)],
+                    );
+                }
+            });
+        }
 
         while self.next_ready_cycles().is_some() {
             self.step_with_timer(on_iter_wall);
@@ -288,6 +410,9 @@ impl<'a> ServerSim<'a> {
         self.clock = 0;
         self.iter_idx = 0;
         self.metrics = ServeMetrics::with_mode(self.cfg.telemetry);
+        if let Some(t) = &mut self.trace {
+            t.first_sched.clear();
+        }
     }
 
     /// Deliver one externally routed request. Admission happens once the
@@ -295,6 +420,18 @@ impl<'a> ServerSim<'a> {
     /// delivery order is preserved (FIFO).
     pub fn inject(&mut self, r: Request) {
         self.metrics.arrived += 1;
+        if let Some(t) = &self.trace {
+            t.handle.with(|rec| {
+                rec.instant(
+                    t.pid,
+                    TID_QUEUE,
+                    "queue",
+                    "arrive",
+                    r.ready_cycles,
+                    vec![("req", r.id as u64)],
+                )
+            });
+        }
         // `pending` is sorted descending; place the newcomer *before* any
         // equal keys so existing ones keep popping first.
         let idx = self
@@ -364,8 +501,20 @@ impl<'a> ServerSim<'a> {
         self.metrics.batch_tokens.push(batch_toks);
         self.metrics.queue_depth.push(depth);
 
+        // Trace bookkeeping shares the iteration's clock reads with the
+        // SeriesSet below — `clock_start`/`self.clock` and the memo
+        // counters are read once and reused; no second time source.
+        let clock_start = self.clock;
+        let memo_before = self.memo.as_ref().map_or((0, 0), |m| (m.hits, m.misses));
+        if let Some(t) = &mut self.trace {
+            // First prefill chunk marks the request's first scheduling.
+            for c in plan.iter().filter(|c| c.is_prefill) {
+                t.first_sched.entry(c.request_id).or_insert(clock_start);
+            }
+        }
+
         let t_wall = Instant::now();
-        let cost = self.iteration_cycles(self.iter_idx, &plan);
+        let cost = self.iteration_cycles(self.iter_idx, &plan, clock_start);
         on_iter_wall(t_wall.elapsed());
         self.clock += cost.cycles;
         self.metrics.busy_cycles += cost.cycles;
@@ -392,9 +541,50 @@ impl<'a> ServerSim<'a> {
         });
         self.metrics.series.push("memo_hit_rate", t_us, hit_rate);
 
+        if let Some(t) = &self.trace {
+            let (h, m) = self.memo.as_ref().map_or((0, 0), |mm| (mm.hits, mm.misses));
+            t.handle.with(|rec| {
+                rec.span(
+                    t.pid,
+                    TID_SCHED,
+                    "iter",
+                    "iteration",
+                    clock_start,
+                    self.clock,
+                    vec![
+                        ("tokens", batch_toks as u64),
+                        ("queue_depth", depth as u64),
+                        ("memo_hits", h - memo_before.0),
+                        ("memo_misses", m - memo_before.1),
+                    ],
+                );
+                // Idle attribution measures against the furthest clock
+                // this package has reached.
+                rec.acct.observe_end(t.pid, self.clock);
+            });
+        }
+
         let done = self.batcher.complete_iteration(&plan, self.clock);
         for r in &done {
             self.metrics.record_completion(r, self.hw.freq_hz);
+        }
+        if let Some(t) = &mut self.trace {
+            let clock = self.clock;
+            let pid = t.pid;
+            for r in &done {
+                let first_sched = t.first_sched.remove(&r.id).unwrap_or(r.ready_cycles);
+                let span = RequestSpan {
+                    id: r.id,
+                    prompt: r.prompt_len as u32,
+                    output: r.output_len as u32,
+                    arrival: r.arrival_cycles,
+                    ready: r.ready_cycles,
+                    first_sched,
+                    first_token: r.first_token_cycles.unwrap_or(clock),
+                    finish: r.finish_cycles.unwrap_or(clock),
+                };
+                t.handle.with(|rec| rec.request_lifecycle(pid, &span));
+            }
         }
         done
     }
@@ -416,6 +606,23 @@ impl<'a> ServerSim<'a> {
         };
         // The receiving package's `inject` re-counts it.
         self.metrics.arrived -= 1;
+        let clock = self.clock;
+        if let Some(t) = &mut self.trace {
+            // Any first-schedule mark belongs to the donor's timeline;
+            // the receiving package records its own.
+            t.first_sched.remove(&r.id);
+            let pid = t.pid;
+            t.handle.with(|rec| {
+                rec.instant(
+                    pid,
+                    TID_QUEUE,
+                    "queue",
+                    "migrate_out",
+                    clock,
+                    vec![("req", r.id as u64), ("prefilled", r.prefilled as u64)],
+                )
+            });
+        }
         Some(r)
     }
 
@@ -589,6 +796,37 @@ mod tests {
         assert_eq!(m.ttft_us.samples(), reference.ttft_us.samples());
         assert_eq!(m.tpot_us.samples(), reference.tpot_us.samples());
         assert_eq!((m.memo_hits, m.memo_misses), (reference.memo_hits, reference.memo_misses));
+    }
+
+    #[test]
+    fn trace_attachment_preserves_results_and_records_lifecycles() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = quick_cfg(LoadMode::Burst { n_requests: 4 }, StrategyKind::FseDpPaired);
+        let plain = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg.clone()).run();
+
+        let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+        let handle = TraceHandle::enabled();
+        sim.attach_trace(handle.clone(), 0);
+        let traced = sim.run();
+
+        assert_eq!(traced.end_cycles, plain.end_cycles);
+        assert_eq!(traced.busy_cycles, plain.busy_cycles);
+        assert_eq!(traced.completed, plain.completed);
+        assert_eq!(traced.iterations, plain.iterations);
+        handle.with(|rec| {
+            assert_eq!(rec.acct.requests.n, 4, "one lifecycle per completed request");
+            // Phase cycles telescope to the summed end-to-end latencies.
+            assert!(rec.acct.requests.total() > 0);
+            // Arrive instants, iteration spans, layer spans, chiplet
+            // activity all landed.
+            assert!(rec.events().iter().any(|e| e.name == "arrive"));
+            assert!(rec.events().iter().any(|e| e.name == "iteration"));
+            assert!(rec.events().iter().any(|e| e.name == "compute"));
+            // Burst never idles: busy breakdown saw every chiplet.
+            assert!(!rec.acct.chiplets.is_empty());
+        });
     }
 
     #[test]

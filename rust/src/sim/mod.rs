@@ -16,7 +16,7 @@ pub mod trace;
 pub use memory::BufferTracker;
 pub use mesh::Mesh;
 pub use resource::SerialResource;
-pub use trace::{ActivityKind, Span, Timeline};
+pub use trace::{ActivityKind, Span, Timeline, NO_EXPERT};
 
 /// Simulation time in compute-die cycles.
 pub type SimTime = u64;

@@ -4,6 +4,12 @@
 
 use super::{ChipletId, SimTime};
 
+/// Sentinel for [`Span::expert`] when an activity has no owning expert
+/// (e.g. shared-tensor traffic). Named so call sites and the obs layer's
+/// accounting fold (`obs::profile`) never compare against a bare
+/// `u16::MAX`.
+pub const NO_EXPERT: u16 = u16::MAX;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ActivityKind {
     Compute,
@@ -29,7 +35,8 @@ pub struct Span {
     pub kind: ActivityKind,
     pub start: SimTime,
     pub end: SimTime,
-    /// Expert id the activity belongs to (u16::MAX when not applicable).
+    /// Expert id the activity belongs to ([`NO_EXPERT`] when not
+    /// applicable).
     pub expert: u16,
 }
 
@@ -49,6 +56,16 @@ impl Timeline {
 
     pub fn record(&mut self, span: Span) {
         debug_assert!(span.end >= span.start);
+        // Guard the unchecked busy-counter index: a bad chiplet id would
+        // either panic with an opaque slice message (Compute) or corrupt
+        // nothing silently (other kinds, which skip the counter) — catch
+        // both the same way, at the API boundary.
+        debug_assert!(
+            span.chiplet < self.busy.len(),
+            "span chiplet {} out of range for {}-chiplet timeline",
+            span.chiplet,
+            self.busy.len()
+        );
         if span.kind == ActivityKind::Compute {
             self.busy[span.chiplet] += span.end - span.start;
         }
@@ -183,6 +200,36 @@ mod tests {
         assert!((curve[3] - 1.0).abs() < 1e-9);
         let mean = curve.iter().sum::<f64>() / 4.0;
         assert!((mean - t.utilization(100)).abs() < 1e-9);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn record_rejects_out_of_range_chiplet() {
+        let mut t = Timeline::new(2, false);
+        // DdrLoad would previously pass straight through (no busy-counter
+        // index), hiding the bad id; the guard now rejects every kind.
+        t.record(Span {
+            chiplet: 2,
+            kind: ActivityKind::DdrLoad,
+            start: 0,
+            end: 1,
+            expert: NO_EXPERT,
+        });
+    }
+
+    #[test]
+    fn no_expert_sentinel_is_recordable() {
+        let mut t = Timeline::new(1, true);
+        t.record(Span {
+            chiplet: 0,
+            kind: ActivityKind::Compute,
+            start: 0,
+            end: 4,
+            expert: NO_EXPERT,
+        });
+        assert_eq!(t.compute_busy(0), 4);
+        assert_eq!(t.spans[0].expert, NO_EXPERT);
     }
 
     #[test]

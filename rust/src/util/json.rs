@@ -1,9 +1,16 @@
-//! Minimal JSON reader — just enough to parse `artifacts/manifest.json`.
+//! Minimal JSON reader + writer — parses `artifacts/manifest.json` and
+//! serializes the obs layer's Chrome-trace export.
 //!
 //! Hand-rolled because the offline crate set has no `serde_json`. Supports
 //! the full JSON value grammar (objects, arrays, strings with escapes,
 //! numbers, booleans, null); not streaming, not zero-copy — the manifest is
-//! a few KiB.
+//! a few KiB and traces are bounded by the recorder's event cap.
+//!
+//! The writer (`render` / `Display`) is deliberately bit-stable: object
+//! keys come out in `BTreeMap` order, integral numbers print without a
+//! fractional part, and non-integral numbers use Rust's shortest-roundtrip
+//! `f64` formatting — so the same `Json` value always renders to the same
+//! bytes (what makes exported traces reproducible; see `obs::export`).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -87,6 +94,76 @@ impl Json {
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
+
+    /// Serialize to a compact JSON string (see the module docs for the
+    /// stability guarantees). Alias of `to_string()`.
+    pub fn render(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(f, *n),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                // BTreeMap iterates keys sorted: stable output by design.
+                f.write_str("{")?;
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{x}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+/// Integral values within exact-`f64` range print as integers ("3", not
+/// "3.0" — keeps ids/cycle counts round-trippable by strict readers);
+/// non-finite values have no JSON spelling and degrade to null.
+fn write_num(f: &mut fmt::Formatter<'_>, n: f64) -> fmt::Result {
+    if !n.is_finite() {
+        return f.write_str("null");
+    }
+    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        write!(f, "{}", n as i64)
+    } else {
+        // Shortest representation that round-trips — deterministic.
+        write!(f, "{n}")
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 struct Parser<'a> {
@@ -317,5 +394,26 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let src = r#"{"a": [1, 2.5, {"b": "c\nd"}], "z": null, "m": true}"#;
+        let v = Json::parse(src).unwrap();
+        let out = v.render();
+        assert_eq!(Json::parse(&out).unwrap(), v);
+        // Stable: rendering twice is byte-identical, keys sorted.
+        assert_eq!(out, v.render());
+        assert!(out.find("\"a\"").unwrap() < out.find("\"m\"").unwrap());
+        assert!(out.find("\"m\"").unwrap() < out.find("\"z\"").unwrap());
+    }
+
+    #[test]
+    fn render_numbers_and_escapes() {
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(-0.125).render(), "-0.125");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Str("a\"b\\c\nd".into()).render(), r#""a\"b\\c\nd""#);
+        assert_eq!(Json::Str("\u{1}".into()).render(), "\"\\u0001\"");
     }
 }

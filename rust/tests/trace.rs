@@ -1,0 +1,283 @@
+//! Observability-layer contract tests.
+//!
+//! * Tracing is bit-neutral: serve and cluster results are identical with
+//!   the span recorder attached or not (the same discipline as memo and
+//!   sketch modes).
+//! * The exported Chrome trace parses as JSON, its spans nest (durations
+//!   non-negative, phase children inside their request's interval), and
+//!   identical runs export identical bytes.
+//! * The cycle-accounting fold reconciles with the simulator's own
+//!   counters: per-chiplet compute equals `Timeline::compute_busy`, and
+//!   per-request phase totals telescope to the summed end-to-end
+//!   latencies.
+
+use expert_streaming::config::{presets, ClusterConfig, Dataset, RouterKind, StrategyKind};
+use expert_streaming::coordinator::{make_strategy, LayerCtx};
+use expert_streaming::moe::{default_num_slices, ExpertGeometry};
+use expert_streaming::obs::{chrome_trace_string, EventKind, TraceHandle, TraceRecorder};
+use expert_streaming::server::{LoadMode, ServerConfig, ServerSim};
+use expert_streaming::cluster::ClusterSim;
+use expert_streaming::util::Json;
+use expert_streaming::workload::{shard_layer, TraceGenerator};
+use std::collections::HashSet;
+
+fn server_cfg(mode: LoadMode) -> ServerConfig {
+    ServerConfig { strategy: StrategyKind::FseDpPaired, mode, seed: 7, ..Default::default() }
+}
+
+/// Run a standalone serve, optionally traced; returns (metrics, handle).
+fn run_serve(
+    mode: LoadMode,
+    traced: bool,
+) -> (expert_streaming::server::ServeMetrics, Option<TraceHandle>) {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, server_cfg(mode));
+    let handle = traced.then(TraceHandle::enabled);
+    if let Some(h) = &handle {
+        sim.attach_trace(h.clone(), 0);
+    }
+    (sim.run(), handle)
+}
+
+fn run_cluster(
+    n: usize,
+    router: RouterKind,
+    mode: LoadMode,
+    rebalance_delta: usize,
+    traced: bool,
+) -> (expert_streaming::cluster::ClusterMetrics, Option<TraceHandle>) {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let mut cluster = ClusterConfig { n_packages: n, router, ..presets::cluster_pod() };
+    cluster.rebalance_delta = rebalance_delta;
+    let mut sim = ClusterSim::new(&model, &hw, Dataset::C4, &preset, server_cfg(mode), cluster);
+    let handle = traced.then(TraceHandle::enabled);
+    if let Some(h) = &handle {
+        sim.attach_trace(h.clone());
+    }
+    (sim.run(), handle)
+}
+
+#[test]
+fn serve_results_bit_identical_with_tracing_on_and_off() {
+    for mode in [
+        LoadMode::Burst { n_requests: 8 },
+        LoadMode::Open { rate_rps: 400.0, duration_s: 0.05 },
+    ] {
+        let (off, _) = run_serve(mode, false);
+        let (on, handle) = run_serve(mode, true);
+        assert_eq!(on.arrived, off.arrived);
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.iterations, off.iterations);
+        assert_eq!(on.end_cycles, off.end_cycles);
+        assert_eq!(on.busy_cycles, off.busy_cycles);
+        assert_eq!(on.moe_ddr_bytes, off.moe_ddr_bytes);
+        assert_eq!(on.moe_d2d_bytes, off.moe_d2d_bytes);
+        assert_eq!((on.memo_hits, on.memo_misses), (off.memo_hits, off.memo_misses));
+        assert_eq!(on.ttft_us.samples(), off.ttft_us.samples());
+        assert_eq!(on.tpot_us.samples(), off.tpot_us.samples());
+        assert_eq!(on.e2e_us.samples(), off.e2e_us.samples());
+        // And the trace actually recorded something.
+        handle.unwrap().with(|rec| assert!(!rec.events().is_empty()));
+    }
+}
+
+#[test]
+fn cluster_results_bit_identical_with_tracing_on_and_off() {
+    // JSQ spreads; pass-through + tight delta exercises migrations.
+    for (router, delta) in [(RouterKind::Jsq, 0), (RouterKind::PassThrough, 2)] {
+        let mode = LoadMode::Burst { n_requests: 24 };
+        let (off, _) = run_cluster(2, router, mode, delta, false);
+        let (on, handle) = run_cluster(2, router, mode, delta, true);
+        assert_eq!(on.arrived, off.arrived);
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.iterations, off.iterations);
+        assert_eq!(on.end_cycles, off.end_cycles);
+        assert_eq!(on.routed, off.routed);
+        assert_eq!(on.migrations, off.migrations);
+        assert_eq!(on.handoff_bytes, off.handoff_bytes);
+        assert_eq!(on.kv_migration_bytes, off.kv_migration_bytes);
+        assert_eq!(on.ttft_us.samples(), off.ttft_us.samples());
+        handle.unwrap().with(|rec| {
+            assert!(rec.events().iter().any(|e| e.name == "route"));
+            if delta > 0 {
+                assert_eq!(rec.acct.migrations as usize, on.migrations);
+            }
+        });
+    }
+}
+
+#[test]
+fn exported_chrome_trace_parses_and_spans_nest() {
+    let (_, handle) =
+        run_cluster(2, RouterKind::Jsq, LoadMode::Burst { n_requests: 12 }, 0, true);
+    let handle = handle.unwrap();
+    let s = handle.with(|rec| chrome_trace_string(rec));
+    let j = Json::parse(&s).expect("trace must be valid JSON");
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(evs.len() > 50, "suspiciously small trace: {} events", evs.len());
+
+    // Every complete span has a non-negative duration; every async begin
+    // has a matching end at ts_end >= ts_begin with the same (cat, id).
+    let mut begins: Vec<(String, f64)> = Vec::new(); // (cat:id, ts)
+    for e in evs {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        match ph {
+            "X" => {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+            "b" => {
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let key = format!(
+                    "{}:{}",
+                    e.get("cat").unwrap().as_str().unwrap(),
+                    e.get("id").unwrap().as_f64().unwrap()
+                );
+                begins.push((key, ts));
+            }
+            "e" => {
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let key = format!(
+                    "{}:{}",
+                    e.get("cat").unwrap().as_str().unwrap(),
+                    e.get("id").unwrap().as_f64().unwrap()
+                );
+                let b = begins.iter().position(|(k, _)| *k == key);
+                let (_, bts) = begins.remove(b.expect("async end without begin"));
+                assert!(ts >= bts, "async span ends before it starts");
+            }
+            "i" | "M" => {}
+            other => panic!("unexpected ph {other}"),
+        }
+    }
+    assert!(begins.is_empty(), "{} unmatched async begins", begins.len());
+
+    // Phase children (emitted immediately after their request's begin, in
+    // record order) stay inside the outer request interval. Re-walk with
+    // interval tracking: request b/e events bound their phases.
+    let mut current: Option<(f64, f64)> = None;
+    for e in evs {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        if ph != "b" && ph != "e" {
+            continue;
+        }
+        let name = e.get("name").unwrap().as_str().unwrap();
+        let cat = e.get("cat").unwrap().as_str().unwrap();
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        if cat == "request" && ph == "b" {
+            current = Some((ts, f64::INFINITY));
+        } else if cat == "phase" && ph == "b" {
+            let (start, _) = current.expect("phase begin outside any request");
+            assert!(ts >= start - 1e-9, "phase {name} starts before its request");
+        }
+    }
+}
+
+#[test]
+fn trace_export_is_byte_stable_across_identical_runs() {
+    let export = || {
+        let (_, handle) =
+            run_cluster(2, RouterKind::Jsq, LoadMode::Burst { n_requests: 12 }, 0, true);
+        handle.unwrap().with(|rec| chrome_trace_string(rec))
+    };
+    assert_eq!(export(), export());
+}
+
+#[test]
+fn accounting_compute_matches_timeline_compute_busy() {
+    // Single traced layer via the public coordinator API: adopt its
+    // timeline and check the fold reconciles per chiplet.
+    let model = presets::tiny_moe();
+    let hw = presets::mcm_2x2();
+    let slices = default_num_slices(&model, &hw);
+    let geom = ExpertGeometry::new(&model, &hw, slices);
+    let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
+    let it = gen.iteration(0, 32);
+    let wl = shard_layer(
+        &it.layers[0],
+        model.n_experts + model.n_shared,
+        hw.n_chiplets(),
+        &HashSet::new(),
+    );
+    let mut s = make_strategy(StrategyKind::FseDpPaired, slices);
+    let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: true };
+    let r = s.run_layer(&ctx);
+
+    let mut rec = TraceRecorder::new();
+    rec.adopt_timeline(1, 500, &r.timeline);
+    for c in 0..hw.n_chiplets() {
+        assert_eq!(
+            rec.acct.compute_busy(1, c),
+            r.timeline.compute_busy(c),
+            "chiplet {c} attribution diverged from the timeline"
+        );
+    }
+    // Adopted spans are re-based: none start before the offset.
+    for e in rec.events() {
+        assert!(e.start >= 500);
+    }
+}
+
+#[test]
+fn serve_accounting_reconciles_with_request_count_and_phases() {
+    let (m, handle) = run_serve(LoadMode::Burst { n_requests: 8 }, true);
+    handle.unwrap().with(|rec| {
+        assert_eq!(rec.acct.requests.n as usize, m.completed);
+        // The four phases partition arrival -> finish, so their sum in
+        // cycles equals the summed e2e latencies (compare in us with a
+        // float tolerance; e2e_us went through cycles_to_us).
+        let hw = presets::mcm_2x2();
+        let total_us = expert_streaming::util::cycles_to_us(
+            rec.acct.requests.total(),
+            hw.freq_hz,
+        );
+        let e2e_sum: f64 = m.e2e_us.samples().iter().sum();
+        assert!(
+            (total_us - e2e_sum).abs() < 1e-6 * e2e_sum.max(1.0),
+            "phase telescoping broke: {total_us} vs {e2e_sum}"
+        );
+        // Burst mode: all requests local, no link phase.
+        assert_eq!(rec.acct.requests.link, 0);
+    });
+}
+
+#[test]
+fn recorder_is_bounded_and_counts_drops() {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let mut sim = ServerSim::new(
+        &model,
+        &hw,
+        Dataset::C4,
+        &preset,
+        server_cfg(LoadMode::Burst { n_requests: 8 }),
+    );
+    let handle = TraceHandle::new(TraceRecorder::with_cap(64));
+    sim.attach_trace(handle.clone(), 0);
+    let m = sim.run();
+    assert!(m.completed > 0);
+    handle.with(|rec| {
+        assert!(rec.events().len() <= 64);
+        assert!(rec.dropped() > 0, "tiny cap should have dropped events");
+        // Accounting is folded at record time: still complete.
+        assert_eq!(rec.acct.requests.n as usize, m.completed);
+    });
+}
+
+#[test]
+fn async_phase_children_have_nonneg_durations() {
+    let (_, handle) = run_serve(LoadMode::Open { rate_rps: 300.0, duration_s: 0.05 }, true);
+    handle.unwrap().with(|rec| {
+        for e in rec.events() {
+            if let EventKind::Async { dur, .. } = e.kind {
+                // u64 durations are trivially >= 0; assert the span also
+                // carries sane bounds (start + dur does not overflow).
+                assert!(e.start.checked_add(dur).is_some());
+            }
+        }
+    });
+}

@@ -17,8 +17,10 @@ REGRESSION_FRAC = 0.10
 # Sub-microsecond telemetry micro-ops (sketch pushes/merges, cached Summary
 # quantiles) jitter far more run-to-run than the simulator mesobenchmarks;
 # give them a wider noise floor so they track the trajectory without
-# crying wolf.
-MICRO_OP_PREFIXES = ("sketch_", "summary_quantile")
+# crying wolf. `trace_disabled_overhead` rides the same floor: it exists to
+# catch the disabled-trace Option branch growing real work, not scheduler
+# noise in an 8-request burst.
+MICRO_OP_PREFIXES = ("sketch_", "summary_quantile", "trace_disabled_overhead")
 MICRO_OP_FRAC = 0.25
 
 

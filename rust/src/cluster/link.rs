@@ -36,7 +36,17 @@ impl ClusterLink {
 
     /// Cycles to move `bytes` over the link (latency + serialization).
     pub fn transfer_cycles(&self, bytes: u64) -> u64 {
-        self.latency_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+        self.transfer_cycles_degraded(bytes, 1.0)
+    }
+
+    /// `transfer_cycles` with the endpoint's current bandwidth factor
+    /// (fault injection: a degraded serdes link runs at `factor` of its
+    /// nominal bandwidth). `factor == 1.0` is exactly the healthy cost —
+    /// `bytes_per_cycle * 1.0` is the identical IEEE value — which is
+    /// what keeps zero-fault runs bit-identical.
+    pub fn transfer_cycles_degraded(&self, bytes: u64, factor: f64) -> u64 {
+        debug_assert!(factor > 0.0 && factor <= 1.0);
+        self.latency_cycles + (bytes as f64 / (self.bytes_per_cycle * factor)).ceil() as u64
     }
 
     pub fn latency_cycles(&self) -> u64 {
@@ -70,6 +80,15 @@ mod tests {
         assert_eq!(link.latency_cycles(), 1200);
         assert_eq!(link.transfer_cycles(8000), 1200 + 100);
         assert_eq!(link.transfer_cycles(0), 1200);
+    }
+
+    #[test]
+    fn degraded_transfer_scales_serialization_only() {
+        let link = ClusterLink::new(&presets::cluster_pod(), &presets::mcm_2x2());
+        // Half bandwidth doubles the serialization term, not the latency.
+        assert_eq!(link.transfer_cycles_degraded(8000, 0.5), 1200 + 200);
+        // factor 1.0 is byte-identical to the healthy path.
+        assert_eq!(link.transfer_cycles_degraded(8000, 1.0), link.transfer_cycles(8000));
     }
 
     #[test]

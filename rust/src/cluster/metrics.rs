@@ -15,6 +15,7 @@
 //! sort their per-package inputs for the same reason.
 
 use crate::config::SloConfig;
+use crate::fault::FaultStats;
 use crate::server::ServeMetrics;
 use crate::util::Dist;
 
@@ -44,6 +45,10 @@ pub struct ClusterMetrics {
     pub kv_migration_bytes: u64,
     /// Requests moved between packages by the rebalancer.
     pub migrations: usize,
+    /// Fault-injection ledger (all-zero `Default` on fault-free runs; set
+    /// by `ClusterSim` after aggregation so `aggregate`'s signature — and
+    /// its positional call sites — stay unchanged).
+    pub fault: FaultStats,
     /// Untouched per-package metrics, package order.
     pub per_package: Vec<ServeMetrics>,
 }
@@ -77,8 +82,17 @@ impl ClusterMetrics {
             handoff_bytes,
             kv_migration_bytes,
             migrations,
+            fault: FaultStats::default(),
             per_package,
         }
+    }
+
+    /// Request conservation under faults: every admitted request is
+    /// exactly one of completed / failed-after-retries / shed /
+    /// unfinished-at-cutoff. Trivially true on fault-free runs only when
+    /// the run drained (`unfinished` is measured, not inferred).
+    pub fn conserved(&self) -> bool {
+        self.fault.conserved(self.arrived, self.completed)
     }
 
     pub fn n_packages(&self) -> usize {

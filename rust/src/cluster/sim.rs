@@ -23,14 +23,31 @@
 //! prompt; migrating an in-flight prefill additionally drags its built KV
 //! prefix ([`link::kv_bytes`]), the expensive case the donor preference
 //! avoids when it can.
+//!
+//! **Fault injection** (armed via [`ClusterSim::set_faults`]): a third
+//! event source — the seeded [`FaultSchedule`] plus the front-end's own
+//! detection/probe timers — merges into the same simulated-time order,
+//! firing *before* any delivery or step at the same cycle. A crashed
+//! package stops stepping instantly but the router keeps feeding it until
+//! a missed health probe times out; detection drains everything on it
+//! (KV lost), re-enqueues survivors at the front-end with re-prefill
+//! charged through the link, fails requests past their retry budget, and
+//! starts exponential-backoff re-probes until the restarted hardware is
+//! probed back in. Link degradation scales transfer costs per endpoint,
+//! chiplet brown-outs re-shard workloads inside the package, and DDR
+//! slowdowns stretch iteration costs. A zero [`FaultConfig`] stores no
+//! fault state at all, so fault-free runs stay byte-identical to the
+//! pre-fault-layer simulator (pinned by `tests/fault.rs`).
 
 use super::link::{handoff_bytes, kv_bytes, ClusterLink};
 use super::metrics::ClusterMetrics;
 use super::router::{make_router, RouterPolicy};
 use crate::config::{
-    ClusterConfig, Dataset, HardwareConfig, MoeModelConfig, RouterKind, ServePreset,
+    ClusterConfig, Dataset, FaultConfig, HardwareConfig, MoeModelConfig, RouterKind,
+    ServePreset, ShedPolicy,
 };
-use crate::obs::{TraceHandle, PID_FRONTEND, TID_LINK, TID_REBALANCER, TID_ROUTER};
+use crate::fault::{probe_delay_cycles, FaultEvent, FaultSchedule, FaultStats, TimedFault};
+use crate::obs::{TraceHandle, PID_FRONTEND, TID_FAULT, TID_LINK, TID_REBALANCER, TID_ROUTER};
 use crate::server::{LoadMode, Request, RequestGenerator, ServerConfig, ServerSim};
 
 /// N packages behind a router. Deterministic for a given
@@ -53,6 +70,96 @@ pub struct ClusterSim<'a> {
     /// Recording never feeds back into routing or package state, so
     /// cluster results are bit-identical attached or not.
     trace: Option<TraceHandle>,
+    /// Armed fault configuration (`None` for zero configs — the fault-free
+    /// path carries no fault state at all).
+    fault_cfg: Option<FaultConfig>,
+    /// Per-run fault state, rebuilt by every `run()`.
+    fault: Option<FaultRuntime>,
+}
+
+/// Front-end timer events the fault layer schedules for itself.
+#[derive(Clone, Copy, Debug)]
+enum InternalKind {
+    /// The periodic health check first notices the package is gone.
+    Detect,
+    /// The `k`-th exponential-backoff re-probe of an excluded package.
+    Probe { k: u32 },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct InternalEvent {
+    at: u64,
+    pkg: usize,
+    kind: InternalKind,
+}
+
+/// Mutable fault state for one `run()`: the seeded hardware schedule, the
+/// front-end's view of package health, per-endpoint link factors, parked
+/// requests (every package excluded), and the outcome ledger.
+struct FaultRuntime {
+    sched: FaultSchedule,
+    /// Health-check period in cycles (backoff base for re-probes).
+    probe_cycles: u64,
+    /// Hardware truth: the package is crashed and must not step.
+    down: Vec<bool>,
+    /// Front-end view: detection fired; the router skips this package
+    /// until a probe succeeds. Lags `down` by one health-check period.
+    excluded: Vec<bool>,
+    /// A restart (`PkgUp`) happened while excluded; the next probe wins.
+    restored: Vec<bool>,
+    crash_at: Vec<u64>,
+    /// Per-destination serdes bandwidth factor (1.0 = healthy).
+    link_factor: Vec<f64>,
+    link_since: Vec<u64>,
+    chiplet_since: Vec<u64>,
+    ddr_since: Vec<u64>,
+    /// Requests with nowhere to go (every package excluded); released on
+    /// the next successful probe.
+    parked: Vec<Request>,
+    /// Pending detect/probe timers, kept sorted by `(at, pkg)`.
+    internal: Vec<InternalEvent>,
+    stats: FaultStats,
+}
+
+impl FaultRuntime {
+    fn new(
+        cfg: &FaultConfig,
+        run_seed: u64,
+        n: usize,
+        n_chiplets: usize,
+        freq_hz: f64,
+    ) -> FaultRuntime {
+        FaultRuntime {
+            sched: FaultSchedule::new(cfg, run_seed, n, n_chiplets, freq_hz),
+            probe_cycles: (cfg.probe_interval_s * freq_hz).ceil().max(1.0) as u64,
+            down: vec![false; n],
+            excluded: vec![false; n],
+            restored: vec![false; n],
+            crash_at: vec![0; n],
+            link_factor: vec![1.0; n],
+            link_since: vec![0; n],
+            chiplet_since: vec![0; n],
+            ddr_since: vec![0; n],
+            parked: Vec::new(),
+            internal: Vec::new(),
+            stats: FaultStats::default(),
+        }
+    }
+
+    fn push_internal(&mut self, ev: InternalEvent) {
+        // FIFO within equal (at, pkg): insertion order is deterministic.
+        let idx = self.internal.partition_point(|e| (e.at, e.pkg) <= (ev.at, ev.pkg));
+        self.internal.insert(idx, ev);
+    }
+
+    /// Earliest pending fault-layer event (schedule or internal timer).
+    fn next_at(&self) -> Option<u64> {
+        let timer = self.internal.first().map(|e| e.at);
+        match (self.sched.peek(), timer) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
 }
 
 impl<'a> ClusterSim<'a> {
@@ -82,6 +189,8 @@ impl<'a> ClusterSim<'a> {
             kv_migration_bytes: 0,
             migrations: 0,
             trace: None,
+            fault_cfg: None,
+            fault: None,
             packages,
             model,
             hw,
@@ -89,6 +198,15 @@ impl<'a> ClusterSim<'a> {
             cfg,
             cluster,
         }
+    }
+
+    /// Arm fault injection for subsequent `run()`s. A zero config
+    /// ([`FaultConfig::is_zero`]) stores nothing at all, keeping the
+    /// fault-free path structurally identical to a sim that never heard
+    /// of faults (pinned byte-identical by `tests/fault.rs`).
+    pub fn set_faults(&mut self, cfg: FaultConfig) {
+        cfg.validate();
+        self.fault_cfg = if cfg.is_zero() { None } else { Some(cfg) };
     }
 
     /// Attach a span recorder: the front-end's router / link / rebalancer
@@ -101,6 +219,7 @@ impl<'a> ClusterSim<'a> {
             r.name_thread(PID_FRONTEND, TID_ROUTER, "router");
             r.name_thread(PID_FRONTEND, TID_LINK, "link");
             r.name_thread(PID_FRONTEND, TID_REBALANCER, "rebalancer");
+            r.name_thread(PID_FRONTEND, TID_FAULT, "faults");
         });
         for (i, p) in self.packages.iter_mut().enumerate() {
             p.attach_trace(handle.clone(), i);
@@ -136,20 +255,60 @@ impl<'a> ClusterSim<'a> {
         self.handoff_bytes = 0;
         self.kv_migration_bytes = 0;
         self.migrations = 0;
+        self.fault = self.fault_cfg.as_ref().map(|cfg| {
+            FaultRuntime::new(
+                cfg,
+                self.cfg.seed,
+                self.cluster.n_packages,
+                self.hw.n_chiplets(),
+                self.hw.freq_hz,
+            )
+        });
 
         // Shared overload cutoff (open loop): a package whose clock has
         // crossed it is done, exactly like the standalone run's break.
         let deadline = self.packages[0].deadline_cycles();
         loop {
-            let live = |p: &ServerSim| deadline.map_or(true, |d| p.clock() <= d);
+            // Crashed packages are frozen: they neither step nor surface
+            // ready work until the front-end drains them at detection.
             let candidate = self
                 .packages
                 .iter()
                 .enumerate()
-                .filter(|(_, p)| live(p))
+                .filter(|&(i, p)| {
+                    deadline.map_or(true, |d| p.clock() <= d)
+                        && self.fault.as_ref().map_or(true, |f| !f.down[i])
+                })
                 .filter_map(|(i, p)| p.next_ready_cycles().map(|t| (t, i)))
                 .min();
-            match (candidate, arrivals.last().map(|r| r.arrival_cycles)) {
+            let next_arrival = arrivals.last().map(|r| r.arrival_cycles);
+            // Fault events (hardware schedule + health-check timers) fire
+            // before any delivery or step at the same cycle; absent any
+            // runnable work they only keep firing while stranded requests
+            // (crashed-but-undrained packages, parked survivors) still
+            // need the recovery machinery, and never past the cutoff.
+            if self.fault.is_some() {
+                if let Some(tf) = self.fault.as_ref().unwrap().next_at() {
+                    let next_work = match (candidate, next_arrival) {
+                        (Some((t, _)), Some(a)) => Some(t.min(a)),
+                        (Some((t, _)), None) => Some(t),
+                        (None, Some(a)) => Some(a),
+                        (None, None) => None,
+                    };
+                    let fire = match next_work {
+                        Some(w) => tf <= w,
+                        None => {
+                            self.fault_work_stalled()
+                                && deadline.map_or(true, |d| tf <= d)
+                        }
+                    };
+                    if fire {
+                        self.apply_next_fault_event();
+                        continue;
+                    }
+                }
+            }
+            match (candidate, next_arrival) {
                 // Deliveries strictly precede any step at the same cycle,
                 // mirroring the standalone admit-before-batch ordering.
                 (Some((t, _)), Some(a)) if a <= t => {
@@ -170,22 +329,309 @@ impl<'a> ClusterSim<'a> {
             }
         }
 
+        // Conservation bookkeeping: whatever the cutoff stranded —
+        // never-delivered arrivals, work still on packages, parked
+        // survivors — is `unfinished`, measured rather than inferred so
+        // `ClusterMetrics::conserved` is a real invariant.
+        let leftover = arrivals.len()
+            + self.packages.iter().map(|p| p.load()).sum::<usize>()
+            + self.fault.as_ref().map_or(0, |f| f.parked.len());
         let per_package: Vec<_> = self.packages.iter_mut().map(|p| p.finish()).collect();
-        ClusterMetrics::aggregate(
+        let mut m = ClusterMetrics::aggregate(
             per_package,
             self.routed.clone(),
             arrived,
             self.handoff_bytes,
             self.kv_migration_bytes,
             self.migrations,
-        )
+        );
+        if let Some(f) = &mut self.fault {
+            f.stats.unfinished = leftover;
+            m.fault = f.stats.clone();
+        } else {
+            m.fault.unfinished = leftover;
+        }
+        m
+    }
+
+    /// True while the fault machinery still owes work even though no
+    /// package or arrival is runnable: a crashed package is holding
+    /// undrained requests, or survivors are parked awaiting a rejoin.
+    fn fault_work_stalled(&self) -> bool {
+        let Some(f) = &self.fault else { return false };
+        !f.parked.is_empty()
+            || f.down
+                .iter()
+                .enumerate()
+                .any(|(i, &d)| d && self.packages[i].load() > 0)
+    }
+
+    /// Pop and apply the earliest fault-layer event; internal timers win
+    /// ties against the hardware schedule (detection at cycle t sees the
+    /// world before the next hardware episode starting at t).
+    fn apply_next_fault_event(&mut self) {
+        let f = self.fault.as_ref().unwrap();
+        let timer_at = f.internal.first().map(|e| e.at);
+        let sched_at = f.sched.peek();
+        let take_timer = match (timer_at, sched_at) {
+            (Some(a), Some(b)) => a <= b,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => return,
+        };
+        if take_timer {
+            let ev = self.fault.as_mut().unwrap().internal.remove(0);
+            match ev.kind {
+                InternalKind::Detect => self.on_detect(ev.pkg, ev.at),
+                InternalKind::Probe { k } => self.on_probe(ev.pkg, ev.at, k),
+            }
+        } else {
+            let tf = self.fault.as_mut().unwrap().sched.pop().unwrap();
+            self.on_schedule_event(tf);
+        }
+    }
+
+    fn on_schedule_event(&mut self, tf: TimedFault) {
+        let at = tf.at;
+        match tf.event {
+            FaultEvent::PkgCrash { pkg } => self.on_crash(pkg, at),
+            FaultEvent::PkgUp { pkg } => {
+                let f = self.fault.as_mut().unwrap();
+                if f.down[pkg] {
+                    // Hardware is back; the front-end still has to probe
+                    // it in before traffic returns.
+                    f.restored[pkg] = true;
+                }
+            }
+            FaultEvent::LinkDegrade { pkg } => {
+                let factor = self.fault_cfg.as_ref().unwrap().link_degraded_factor;
+                let f = self.fault.as_mut().unwrap();
+                f.link_factor[pkg] = factor;
+                f.link_since[pkg] = at;
+                f.stats.link_degrades += 1;
+            }
+            FaultEvent::LinkRestore { pkg } => {
+                let since = {
+                    let f = self.fault.as_mut().unwrap();
+                    f.link_factor[pkg] = 1.0;
+                    f.link_since[pkg]
+                };
+                self.trace_fault_span(
+                    "link_degraded",
+                    since,
+                    at,
+                    vec![("package", pkg as u64)],
+                );
+            }
+            FaultEvent::ChipletDown { pkg, chiplet } => {
+                {
+                    let f = self.fault.as_mut().unwrap();
+                    f.chiplet_since[pkg] = at;
+                    f.stats.chiplet_brownouts += 1;
+                }
+                self.packages[pkg].set_chiplet_down(chiplet, true);
+                self.trace_fault_instant(
+                    "chiplet_down",
+                    at,
+                    vec![("package", pkg as u64), ("chiplet", chiplet as u64)],
+                );
+            }
+            FaultEvent::ChipletUp { pkg, chiplet } => {
+                self.packages[pkg].set_chiplet_down(chiplet, false);
+                let since = self.fault.as_ref().unwrap().chiplet_since[pkg];
+                self.trace_fault_span(
+                    "chiplet_brownout",
+                    since,
+                    at,
+                    vec![("package", pkg as u64), ("chiplet", chiplet as u64)],
+                );
+            }
+            FaultEvent::DdrSlow { pkg } => {
+                let factor = self.fault_cfg.as_ref().unwrap().ddr_slow_factor;
+                {
+                    let f = self.fault.as_mut().unwrap();
+                    f.ddr_since[pkg] = at;
+                    f.stats.ddr_slowdowns += 1;
+                }
+                self.packages[pkg].set_ddr_factor(factor);
+            }
+            FaultEvent::DdrRestore { pkg } => {
+                self.packages[pkg].set_ddr_factor(1.0);
+                let since = self.fault.as_ref().unwrap().ddr_since[pkg];
+                self.trace_fault_span(
+                    "ddr_slow",
+                    since,
+                    at,
+                    vec![("package", pkg as u64)],
+                );
+            }
+        }
+    }
+
+    fn on_crash(&mut self, pkg: usize, at: u64) {
+        let fresh_outage = {
+            let f = self.fault.as_mut().unwrap();
+            f.stats.crashes += 1;
+            if f.down[pkg] {
+                // Crashed again before being probed back in: the outage
+                // simply continues (detection is already pending or done).
+                f.restored[pkg] = false;
+                false
+            } else {
+                f.down[pkg] = true;
+                f.restored[pkg] = false;
+                f.crash_at[pkg] = at;
+                true
+            }
+        };
+        self.trace_fault_instant("pkg_crash", at, vec![("package", pkg as u64)]);
+        if fresh_outage {
+            let d = self.fault.as_ref().unwrap().probe_cycles;
+            self.fault.as_mut().unwrap().push_internal(InternalEvent {
+                at: at + d,
+                pkg,
+                kind: InternalKind::Detect,
+            });
+        }
+    }
+
+    /// The health check timed out: exclude the package from routing,
+    /// drain everything it held (KV lost), re-enqueue survivors at the
+    /// front-end with re-prefill charged through the link, fail requests
+    /// past their retry budget, and start backoff re-probes.
+    fn on_detect(&mut self, pkg: usize, at: u64) {
+        self.fault.as_mut().unwrap().excluded[pkg] = true;
+        let drained = self.packages[pkg].fail_and_drain();
+        self.routed[pkg] -= drained.len();
+        self.trace_fault_instant(
+            "pkg_detected_down",
+            at,
+            vec![("package", pkg as u64), ("drained", drained.len() as u64)],
+        );
+        let retry_budget = self.fault_cfg.as_ref().unwrap().retry_budget;
+        for mut r in drained {
+            self.fault.as_mut().unwrap().stats.lost_kv_tokens += r.prefilled as u64;
+            if r.retries >= retry_budget {
+                self.fault.as_mut().unwrap().stats.failed += 1;
+                self.trace_fault_instant(
+                    "req_failed",
+                    at,
+                    vec![("req", r.id as u64), ("retries", r.retries as u64)],
+                );
+                continue;
+            }
+            r.retries += 1;
+            r.lose_kv();
+            self.fault.as_mut().unwrap().stats.retries += 1;
+            self.deliver_at(r, at, false);
+        }
+        let (base, backoff) = (
+            self.fault.as_ref().unwrap().probe_cycles,
+            self.fault_cfg.as_ref().unwrap().probe_backoff,
+        );
+        self.fault.as_mut().unwrap().push_internal(InternalEvent {
+            at: at + probe_delay_cycles(base, backoff, 0),
+            pkg,
+            kind: InternalKind::Probe { k: 1 },
+        });
+    }
+
+    /// The `k`-th re-probe of an excluded package: rejoin it if the
+    /// hardware restarted, otherwise back off exponentially and retry.
+    fn on_probe(&mut self, pkg: usize, at: u64, k: u32) {
+        let (still_down, ready) = {
+            let f = self.fault.as_ref().unwrap();
+            (f.down[pkg], f.restored[pkg])
+        };
+        if !still_down {
+            return;
+        }
+        if !ready {
+            let (base, backoff) = (
+                self.fault.as_ref().unwrap().probe_cycles,
+                self.fault_cfg.as_ref().unwrap().probe_backoff,
+            );
+            self.fault.as_mut().unwrap().push_internal(InternalEvent {
+                at: at + probe_delay_cycles(base, backoff, k),
+                pkg,
+                kind: InternalKind::Probe { k: k + 1 },
+            });
+            return;
+        }
+        let downtime = {
+            let f = self.fault.as_mut().unwrap();
+            f.down[pkg] = false;
+            f.excluded[pkg] = false;
+            f.restored[pkg] = false;
+            f.stats.recoveries += 1;
+            let dt = at - f.crash_at[pkg];
+            f.stats.recovery_cycles += dt;
+            dt
+        };
+        // The restarted package rejoins empty at the probe instant; its
+        // clock cannot lag the front-end's view of the recovery.
+        self.packages[pkg].advance_clock_to(at);
+        self.trace_fault_instant(
+            "pkg_rejoin",
+            at,
+            vec![("package", pkg as u64), ("downtime_cycles", downtime)],
+        );
+        let parked = std::mem::take(&mut self.fault.as_mut().unwrap().parked);
+        for r in parked {
+            self.deliver_at(r, at, false);
+        }
+    }
+
+    fn trace_fault_instant(&self, name: &'static str, at: u64, args: Vec<(&'static str, u64)>) {
+        if let Some(h) = &self.trace {
+            h.with(move |rec| rec.instant(PID_FRONTEND, TID_FAULT, "fault", name, at, args));
+        }
+    }
+
+    fn trace_fault_span(
+        &self,
+        name: &'static str,
+        start: u64,
+        end: u64,
+        args: Vec<(&'static str, u64)>,
+    ) {
+        if let Some(h) = &self.trace {
+            h.with(move |rec| {
+                rec.async_span(PID_FRONTEND, TID_FAULT, "fault", name, start, end, args)
+            });
+        }
     }
 
     /// Route one arrival, charge its hand-off, and give the rebalancer a
     /// chance to move one request.
-    fn deliver(&mut self, mut r: Request) {
-        let loads: Vec<usize> = self.packages.iter().map(|p| p.load()).collect();
-        let p = self.router.route(&r, &loads).min(self.packages.len() - 1);
+    fn deliver(&mut self, r: Request) {
+        let now = r.arrival_cycles;
+        self.deliver_at(r, now, true);
+    }
+
+    /// Deliver a request at simulated time `now`: fresh arrivals may be
+    /// shed under the load-shedding policy; redeliveries (crash survivors,
+    /// parked releases — `fresh == false`) were already admitted and must
+    /// not be shed. Routing only sees non-excluded packages; with no
+    /// fault runtime the alive set is the identity, so the fault-free
+    /// path is byte-identical to the pre-fault-layer delivery.
+    fn deliver_at(&mut self, mut r: Request, now: u64, fresh: bool) {
+        if fresh && self.should_shed(&r) {
+            self.fault.as_mut().unwrap().stats.shed += 1;
+            self.trace_fault_instant("req_shed", now, vec![("req", r.id as u64)]);
+            return;
+        }
+        let alive: Vec<usize> = match &self.fault {
+            Some(f) => (0..self.packages.len()).filter(|&i| !f.excluded[i]).collect(),
+            None => (0..self.packages.len()).collect(),
+        };
+        if alive.is_empty() {
+            // Nowhere to go: park until a probe brings a package back.
+            self.fault.as_mut().unwrap().parked.push(r);
+            return;
+        }
+        let loads: Vec<usize> = alive.iter().map(|&i| self.packages[i].load()).collect();
+        let p = alive[self.router.route(&r, &loads).min(alive.len() - 1)];
         self.routed[p] += 1;
         if let Some(h) = &self.trace {
             h.with(|rec| {
@@ -194,15 +640,22 @@ impl<'a> ClusterSim<'a> {
                     TID_ROUTER,
                     "cluster",
                     "route",
-                    r.arrival_cycles,
+                    now,
                     vec![("req", r.id as u64), ("package", p as u64)],
                 )
             });
         }
-        if self.router.kind() != RouterKind::PassThrough {
+        // Redeliveries always cross the link (the request physically moves
+        // off the dead package), even under the pass-through router.
+        let retry = r.retries > 0;
+        if self.router.kind() != RouterKind::PassThrough || retry {
             let bytes = handoff_bytes(self.model, self.hw.act_bytes, r.prompt_len);
             self.handoff_bytes += bytes;
-            r.ready_cycles = r.arrival_cycles + self.link.transfer_cycles(bytes);
+            let factor = self.fault.as_ref().map_or(1.0, |f| f.link_factor[p]);
+            r.ready_cycles = now + self.link.transfer_cycles_degraded(bytes, factor);
+            if retry {
+                self.fault.as_mut().unwrap().stats.reprefill_bytes += bytes;
+            }
             if let Some(h) = &self.trace {
                 h.with(|rec| {
                     rec.async_span(
@@ -210,16 +663,43 @@ impl<'a> ClusterSim<'a> {
                         TID_LINK,
                         "link",
                         "handoff",
-                        r.arrival_cycles,
+                        now,
                         r.ready_cycles,
                         vec![("req", r.id as u64), ("bytes", bytes), ("to", p as u64)],
                     )
                 });
             }
         }
-        let now = r.arrival_cycles;
         self.packages[p].inject(r);
         self.maybe_rebalance(now);
+    }
+
+    /// Priority load shedding: when the fleet's capacity shrinks, reject
+    /// work *before* the SLO knee instead of letting every latency tail
+    /// blow out. `Tail` sheds only longer-than-mean prompts past the soft
+    /// watermark (degrade the expensive tail first); both policies shed
+    /// everything past the hard watermark, and anything that arrives
+    /// while no package is routable.
+    fn should_shed(&self, r: &Request) -> bool {
+        let Some(cfg) = &self.fault_cfg else { return false };
+        if cfg.shed == ShedPolicy::None {
+            return false;
+        }
+        let f = self.fault.as_ref().unwrap();
+        let alive: Vec<usize> =
+            (0..self.packages.len()).filter(|&i| !f.excluded[i]).collect();
+        if alive.is_empty() {
+            return true;
+        }
+        let mean_load = alive.iter().map(|&i| self.packages[i].load()).sum::<usize>()
+            as f64
+            / alive.len() as f64;
+        if mean_load >= cfg.shed_hard_load as f64 {
+            return true;
+        }
+        cfg.shed == ShedPolicy::Tail
+            && mean_load >= cfg.shed_soft_load as f64
+            && r.prompt_len as f64 > self.preset.prompt_mean
     }
 
     /// Migrate one request from the most- to the least-loaded package when
@@ -228,10 +708,23 @@ impl<'a> ClusterSim<'a> {
         if self.cluster.rebalance_delta == 0 || self.packages.len() < 2 {
             return;
         }
-        let loads: Vec<usize> = self.packages.iter().map(|p| p.load()).collect();
-        let from = argmax(&loads);
-        let to = argmin(&loads);
-        if loads[from] - loads[to] <= self.cluster.rebalance_delta {
+        // Only healthy, routable packages take part; with no fault runtime
+        // `eligible` is the identity mapping and the arithmetic below is
+        // exactly the pre-fault-layer computation.
+        let eligible: Vec<usize> = match &self.fault {
+            Some(f) => (0..self.packages.len())
+                .filter(|&i| !f.down[i] && !f.excluded[i])
+                .collect(),
+            None => (0..self.packages.len()).collect(),
+        };
+        if eligible.len() < 2 {
+            return;
+        }
+        let loads: Vec<usize> = eligible.iter().map(|&i| self.packages[i].load()).collect();
+        let from = eligible[argmax(&loads)];
+        let to = eligible[argmin(&loads)];
+        if self.packages[from].load() - self.packages[to].load() <= self.cluster.rebalance_delta
+        {
             return;
         }
         let Some(mut r) = self.packages[from].donate_for_migration() else {
@@ -246,7 +739,13 @@ impl<'a> ClusterSim<'a> {
         // The donor package may have simulated ahead of the front-end;
         // the request physically leaves no earlier than either clock.
         let depart = now.max(self.packages[from].clock());
-        r.ready_cycles = depart + self.link.transfer_cycles(hand + kv);
+        // A migration touches both endpoints' serdes; the slower (most
+        // degraded) link paces the transfer.
+        let factor = self
+            .fault
+            .as_ref()
+            .map_or(1.0, |f| f.link_factor[from].min(f.link_factor[to]));
+        r.ready_cycles = depart + self.link.transfer_cycles_degraded(hand + kv, factor);
         if let Some(h) = &self.trace {
             h.with(|rec| {
                 rec.instant(
@@ -440,5 +939,131 @@ mod tests {
         let jsq = run_cluster(4, RouterKind::Jsq, mode, 0);
         assert!(jsq.busy_imbalance() >= 1.0);
         assert!(jsq.routed_cv() < 0.5, "JSQ cv {}", jsq.routed_cv());
+    }
+
+    #[test]
+    fn zero_fault_config_preserves_results_bit_for_bit() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let mk = || ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Open { rate_rps: 600.0, duration_s: 0.05 },
+            seed: 7,
+            ..Default::default()
+        };
+        let cluster = cluster_cfg(3, RouterKind::Jsq);
+        let plain =
+            ClusterSim::new(&model, &hw, Dataset::C4, &preset, mk(), cluster.clone()).run();
+        let mut sim = ClusterSim::new(&model, &hw, Dataset::C4, &preset, mk(), cluster);
+        sim.set_faults(FaultConfig::default());
+        let zeroed = sim.run();
+        assert_eq!(plain.end_cycles, zeroed.end_cycles);
+        assert_eq!(plain.completed, zeroed.completed);
+        assert_eq!(plain.iterations, zeroed.iterations);
+        assert_eq!(plain.routed, zeroed.routed);
+        assert_eq!(plain.handoff_bytes, zeroed.handoff_bytes);
+        assert_eq!(plain.ttft_us.samples(), zeroed.ttft_us.samples());
+        assert_eq!(plain.fault, zeroed.fault);
+        // Fault-free conservation: everything generated is completed or
+        // measured as unfinished at the cutoff.
+        assert!(zeroed.conserved());
+    }
+
+    fn run_faulty(seed: u64) -> ClusterMetrics {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Open { rate_rps: 1500.0, duration_s: 0.02 },
+            seed,
+            ..Default::default()
+        };
+        let mut sim = ClusterSim::new(
+            &model,
+            &hw,
+            Dataset::C4,
+            &preset,
+            cfg,
+            cluster_cfg(4, RouterKind::Jsq),
+        );
+        sim.set_faults(FaultConfig {
+            pkg_mtbf_s: 2e-3,
+            pkg_mttr_s: 4e-4,
+            link_mtbf_s: 3e-3,
+            link_mttr_s: 4e-4,
+            probe_interval_s: 1e-4,
+            ..FaultConfig::default()
+        });
+        sim.run()
+    }
+
+    #[test]
+    fn crashes_recover_and_requests_are_conserved() {
+        let m = run_faulty(7);
+        assert!(m.fault.crashes >= 1, "no crash fired: {:?}", m.fault);
+        assert!(m.fault.recoveries >= 1, "no recovery: {:?}", m.fault);
+        assert!(m.fault.recoveries <= m.fault.crashes);
+        assert!(m.completed > 0, "faults starved the whole run");
+        assert!(
+            m.conserved(),
+            "conservation violated: arrived {} completed {} fault {:?}",
+            m.arrived,
+            m.completed,
+            m.fault
+        );
+    }
+
+    #[test]
+    fn fault_runs_are_deterministic() {
+        let a = run_faulty(7);
+        let b = run_faulty(7);
+        assert_eq!(a.fault, b.fault);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.end_cycles, b.end_cycles);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.ttft_us.samples(), b.ttft_us.samples());
+        // A different seed draws a different fault history.
+        let c = run_faulty(8);
+        assert_ne!(
+            (a.fault.crashes, a.end_cycles, a.completed),
+            (c.fault.crashes, c.end_cycles, c.completed)
+        );
+    }
+
+    #[test]
+    fn hard_shedding_rejects_everything_and_still_conserves() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = ServerConfig {
+            strategy: StrategyKind::FseDpPaired,
+            mode: LoadMode::Burst { n_requests: 16 },
+            seed: 7,
+            ..Default::default()
+        };
+        let mut sim = ClusterSim::new(
+            &model,
+            &hw,
+            Dataset::C4,
+            &preset,
+            cfg,
+            cluster_cfg(2, RouterKind::Jsq),
+        );
+        // Shed-only config (no hardware faults) with a zero watermark:
+        // admission rejects every arrival, none are lost.
+        sim.set_faults(FaultConfig {
+            shed: ShedPolicy::All,
+            shed_soft_load: 0,
+            shed_hard_load: 0,
+            ..FaultConfig::default()
+        });
+        let m = sim.run();
+        assert_eq!(m.arrived, 16);
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.fault.shed, 16);
+        assert_eq!(m.routed, vec![0, 0]);
+        assert!(m.conserved());
     }
 }

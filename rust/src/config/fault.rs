@@ -1,0 +1,202 @@
+//! Fault-injection knobs for the L4/L5 serving stack.
+//!
+//! A [`FaultConfig`] describes *how often things break and how long they
+//! stay broken* — package crashes, serdes-link degradation episodes,
+//! chiplet brown-outs, DDR slowdowns — plus the front-end's recovery
+//! policy (health-probe cadence, re-probe backoff, per-request retry
+//! budget, admission shedding). All episode lengths are means of
+//! exponential distributions; the actual seeded event streams live in
+//! `fault::schedule`.
+//!
+//! The `Default` config is **inert**: every MTBF is zero and shedding is
+//! off, so a simulator handed `FaultConfig::default()` must behave — and
+//! is pinned by tests to behave — byte-identically to one with no fault
+//! layer at all.
+
+/// Admission load-shedding policy used by the cluster front-end when
+/// capacity shrinks (packages excluded after crashes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Never shed; arrivals queue (or park, if every package is down).
+    None,
+    /// Above the soft threshold shed only long-prompt arrivals (they cost
+    /// the most prefill and re-prefill); above the hard threshold shed
+    /// everything. Degrades *before* the SLO knee rather than at it.
+    Tail,
+    /// Shed every new arrival above the hard threshold only.
+    All,
+}
+
+impl ShedPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPolicy::None => "none",
+            ShedPolicy::Tail => "tail",
+            ShedPolicy::All => "all",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(ShedPolicy::None),
+            "tail" => Some(ShedPolicy::Tail),
+            "all" | "hard" => Some(ShedPolicy::All),
+            _ => None,
+        }
+    }
+}
+
+/// Fault-injection and recovery configuration. A domain with
+/// `*_mtbf_s == 0.0` is disabled; [`FaultConfig::is_zero`] reports the
+/// fully-inert config that the zero-fault bit-identity pin relies on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Mixed into the run seed for the fault event streams only, so fault
+    /// draws never perturb workload/router RNG streams.
+    pub seed: u64,
+    /// Mean time between package crashes, per package (seconds).
+    pub pkg_mtbf_s: f64,
+    /// Mean package outage length (crash → hardware back up).
+    pub pkg_mttr_s: f64,
+    /// Mean time between serdes-link degradation episodes, per package.
+    pub link_mtbf_s: f64,
+    /// Mean link-degradation episode length.
+    pub link_mttr_s: f64,
+    /// Link bandwidth multiplier while degraded, in (0, 1].
+    pub link_degraded_factor: f64,
+    /// Mean time between chiplet brown-outs, per package.
+    pub chiplet_mtbf_s: f64,
+    /// Mean brown-out length (chiplet out of the mesh).
+    pub chiplet_mttr_s: f64,
+    /// Mean time between DDR slowdown episodes, per package.
+    pub ddr_mtbf_s: f64,
+    /// Mean DDR slowdown episode length.
+    pub ddr_mttr_s: f64,
+    /// DDR effective-bandwidth multiplier while slowed, in (0, 1].
+    pub ddr_slow_factor: f64,
+    /// Health-probe cadence (seconds): a crash is detected one probe
+    /// interval after it happens, and the first re-probe fires one
+    /// interval after detection.
+    pub probe_interval_s: f64,
+    /// Re-probe interval growth factor (>= 1). Delays are capped at 16×
+    /// the base interval; see `fault::probe_delay_cycles`.
+    pub probe_backoff: f64,
+    /// KV-loss redeliveries a request may survive; one more crash and it
+    /// is accounted as failed (never silently dropped).
+    pub retry_budget: u32,
+    pub shed: ShedPolicy,
+    /// Mean load per live package at which `Tail` shedding begins.
+    pub shed_soft_load: usize,
+    /// Mean load per live package at which every arrival is shed.
+    pub shed_hard_load: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0x0FA1_7000,
+            pkg_mtbf_s: 0.0,
+            pkg_mttr_s: 0.05,
+            link_mtbf_s: 0.0,
+            link_mttr_s: 0.02,
+            link_degraded_factor: 0.35,
+            chiplet_mtbf_s: 0.0,
+            chiplet_mttr_s: 0.05,
+            ddr_mtbf_s: 0.0,
+            ddr_mttr_s: 0.05,
+            ddr_slow_factor: 0.5,
+            probe_interval_s: 2e-3,
+            probe_backoff: 2.0,
+            retry_budget: 2,
+            shed: ShedPolicy::None,
+            shed_soft_load: 16,
+            shed_hard_load: 48,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when the config injects nothing and sheds nothing — the
+    /// simulator skips building any fault state at all, which is what
+    /// pins zero-fault runs byte-identical to pre-fault-layer outputs.
+    pub fn is_zero(&self) -> bool {
+        self.pkg_mtbf_s == 0.0
+            && self.link_mtbf_s == 0.0
+            && self.chiplet_mtbf_s == 0.0
+            && self.ddr_mtbf_s == 0.0
+            && self.shed == ShedPolicy::None
+    }
+
+    pub fn validate(&self) {
+        assert!(self.pkg_mtbf_s >= 0.0 && self.link_mtbf_s >= 0.0);
+        assert!(self.chiplet_mtbf_s >= 0.0 && self.ddr_mtbf_s >= 0.0);
+        for (mtbf, mttr) in [
+            (self.pkg_mtbf_s, self.pkg_mttr_s),
+            (self.link_mtbf_s, self.link_mttr_s),
+            (self.chiplet_mtbf_s, self.chiplet_mttr_s),
+            (self.ddr_mtbf_s, self.ddr_mttr_s),
+        ] {
+            assert!(mtbf == 0.0 || mttr > 0.0, "active fault domain needs mttr > 0");
+        }
+        assert!(
+            self.link_degraded_factor > 0.0 && self.link_degraded_factor <= 1.0,
+            "link_degraded_factor must be in (0, 1]"
+        );
+        assert!(
+            self.ddr_slow_factor > 0.0 && self.ddr_slow_factor <= 1.0,
+            "ddr_slow_factor must be in (0, 1]"
+        );
+        assert!(self.probe_interval_s > 0.0, "probe_interval_s must be > 0");
+        assert!(self.probe_backoff >= 1.0, "probe_backoff must be >= 1");
+        assert!(
+            self.shed_soft_load <= self.shed_hard_load,
+            "shed_soft_load must not exceed shed_hard_load"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert_and_valid() {
+        let cfg = FaultConfig::default();
+        cfg.validate();
+        assert!(cfg.is_zero());
+    }
+
+    #[test]
+    fn any_active_domain_clears_is_zero() {
+        for field in 0..5 {
+            let mut cfg = FaultConfig::default();
+            match field {
+                0 => cfg.pkg_mtbf_s = 1.0,
+                1 => cfg.link_mtbf_s = 1.0,
+                2 => cfg.chiplet_mtbf_s = 1.0,
+                3 => cfg.ddr_mtbf_s = 1.0,
+                _ => cfg.shed = ShedPolicy::Tail,
+            }
+            cfg.validate();
+            assert!(!cfg.is_zero(), "field {field} should arm the config");
+        }
+    }
+
+    #[test]
+    fn shed_policy_round_trips() {
+        for p in [ShedPolicy::None, ShedPolicy::Tail, ShedPolicy::All] {
+            assert_eq!(ShedPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ShedPolicy::parse("NONE"), Some(ShedPolicy::None));
+        assert_eq!(ShedPolicy::parse("sideways"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn active_domain_without_mttr_is_rejected() {
+        let mut cfg = FaultConfig::default();
+        cfg.pkg_mtbf_s = 1.0;
+        cfg.pkg_mttr_s = 0.0;
+        cfg.validate();
+    }
+}

@@ -3,6 +3,7 @@
 //! override parser so the CLI and experiment drivers can sweep any knob.
 
 pub mod cluster;
+pub mod fault;
 pub mod hardware;
 pub mod model;
 pub mod parse;
@@ -10,6 +11,7 @@ pub mod presets;
 pub mod serve;
 
 pub use cluster::{ClusterConfig, RouterKind};
+pub use fault::{FaultConfig, ShedPolicy};
 pub use hardware::{DdrConfig, D2dConfig, HardwareConfig, SchedulerCost};
 pub use model::{Dataset, MoeModelConfig};
 pub use parse::Overrides;

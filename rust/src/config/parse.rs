@@ -4,6 +4,7 @@
 //! Accepted forms: `weight_buffer_mb=16 ddr_gbps=25.6 mesh=3x3 slices=8`.
 
 use super::cluster::{ClusterConfig, RouterKind};
+use super::fault::{FaultConfig, ShedPolicy};
 use super::hardware::HardwareConfig;
 use std::collections::BTreeMap;
 
@@ -31,6 +32,13 @@ fn known_cluster_key(key: &str) -> bool {
         key,
         "packages" | "router" | "serdes_gbps" | "serdes_lat_us" | "rebalance_delta"
     )
+}
+
+/// Keys `apply_fault` owns (`repro fault-sweep`). Disjoint from both the
+/// hardware and cluster allowlists, again so misplaced knobs fail loudly
+/// instead of becoming silent no-ops.
+pub fn known_fault_key(key: &str) -> bool {
+    matches!(key, "mtbf_s" | "mttr_s" | "link_flap" | "retry_budget" | "shed_policy")
 }
 
 #[derive(Clone, Debug, Default)]
@@ -159,6 +167,45 @@ impl Overrides {
         cluster.validate();
         Ok(())
     }
+
+    /// Apply fault overrides in place (`repro fault-sweep key=value`).
+    /// `mtbf_s`/`mttr_s` pin the package-crash domain to absolute values
+    /// (the sweep otherwise derives them from run length); `link_flap=R`
+    /// arms serdes flapping at R episodes per second (0 disables).
+    pub fn apply_fault(&self, fault: &mut FaultConfig) -> Result<(), String> {
+        for key in self.map.keys() {
+            if !known_fault_key(key) {
+                return Err(format!("unknown fault override key '{key}'"));
+            }
+        }
+        if let Some(v) = self.get_f64("mtbf_s")? {
+            if v < 0.0 {
+                return Err("mtbf_s must be >= 0".into());
+            }
+            fault.pkg_mtbf_s = v;
+        }
+        if let Some(v) = self.get_f64("mttr_s")? {
+            if v <= 0.0 {
+                return Err("mttr_s must be > 0".into());
+            }
+            fault.pkg_mttr_s = v;
+        }
+        if let Some(v) = self.get_f64("link_flap")? {
+            if v < 0.0 {
+                return Err("link_flap must be >= 0 episodes/s".into());
+            }
+            fault.link_mtbf_s = if v == 0.0 { 0.0 } else { 1.0 / v };
+        }
+        if let Some(v) = self.get_usize("retry_budget")? {
+            fault.retry_budget = v as u32;
+        }
+        if let Some(v) = self.get("shed_policy") {
+            fault.shed = ShedPolicy::parse(v)
+                .ok_or_else(|| format!("unknown shed_policy '{v}' (none/tail/all)"))?;
+        }
+        fault.validate();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -223,5 +270,28 @@ mod tests {
         assert!(ov(&["packages=nope"]).apply_cluster(&mut c).is_err());
         assert!(ov(&["routr=jsq"]).apply_cluster(&mut c).is_err());
         assert!(ov(&["router=warp"]).apply_cluster(&mut c).is_err());
+    }
+
+    #[test]
+    fn fault_overrides_apply_and_stay_disjoint() {
+        let o = ov(&["mtbf_s=0.5", "mttr_s=0.05", "link_flap=4", "retry_budget=1", "shed_policy=tail"]);
+        let mut f = FaultConfig::default();
+        o.apply_fault(&mut f).unwrap();
+        assert!((f.pkg_mtbf_s - 0.5).abs() < 1e-12);
+        assert!((f.pkg_mttr_s - 0.05).abs() < 1e-12);
+        assert!((f.link_mtbf_s - 0.25).abs() < 1e-12);
+        assert_eq!(f.retry_budget, 1);
+        assert_eq!(f.shed, ShedPolicy::Tail);
+        // Disjoint from the other allowlists, in both directions.
+        assert!(ov(&["packages=2"]).apply_fault(&mut f).is_err());
+        assert!(ov(&["mesh=3x3"]).apply_fault(&mut f).is_err());
+        let mut c = presets::cluster_pod();
+        assert!(ov(&["mtbf_s=0.5"]).apply_cluster(&mut c).is_err());
+        let mut hw = presets::mcm_2x2();
+        assert!(ov(&["shed_policy=tail"]).apply_hardware(&mut hw).is_err());
+        // Bad values fail loudly.
+        assert!(ov(&["shed_policy=maybe"]).apply_fault(&mut f).is_err());
+        assert!(ov(&["mttr_s=0"]).apply_fault(&mut f).is_err());
+        assert!(ov(&["retry_budgt=1"]).apply_fault(&mut f).is_err());
     }
 }

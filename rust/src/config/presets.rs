@@ -2,6 +2,7 @@
 //! plus serving scenarios for the L4 open-loop subsystem.
 
 use super::cluster::{ClusterConfig, RouterKind};
+use super::fault::{FaultConfig, ShedPolicy};
 use super::hardware::{D2dConfig, DdrConfig, HardwareConfig, SchedulerCost};
 use super::model::MoeModelConfig;
 use super::serve::{ArrivalKind, ServePreset, SloConfig};
@@ -187,6 +188,28 @@ pub fn cluster_pod() -> ClusterConfig {
     }
 }
 
+/// Fault-lab preset: every fault domain armed at rates tuned for the
+/// second-scale smoke runs (`tiny_moe` + `serve_chat`) — a package crash
+/// every ~0.5 s with ~50 ms outages, link flaps, occasional brown-outs
+/// and DDR slowdowns, tail shedding on. `repro fault-sweep` derives its
+/// own MTBF grid from run length instead; this preset is the absolute-
+/// rate starting point for one-off CLI runs and tests.
+pub fn fault_lab() -> FaultConfig {
+    FaultConfig {
+        pkg_mtbf_s: 0.5,
+        pkg_mttr_s: 0.05,
+        link_mtbf_s: 0.4,
+        link_mttr_s: 0.05,
+        chiplet_mtbf_s: 0.5,
+        chiplet_mttr_s: 0.06,
+        ddr_mtbf_s: 0.75,
+        ddr_mttr_s: 0.08,
+        probe_interval_s: 2e-3,
+        shed: ShedPolicy::Tail,
+        ..FaultConfig::default()
+    }
+}
+
 pub fn serve_preset_by_name(name: &str) -> Option<ServePreset> {
     match name.to_ascii_lowercase().as_str() {
         "chat" => Some(serve_chat()),
@@ -220,6 +243,14 @@ mod tests {
         let hw = mcm_2x2();
         let m = tiny_moe();
         assert!(m.expert_bytes(hw.weight_bytes) * m.n_experts as u64 > hw.weight_buffer_bytes);
+    }
+
+    #[test]
+    fn fault_lab_is_armed_and_valid() {
+        let f = fault_lab();
+        f.validate();
+        assert!(!f.is_zero());
+        assert!(f.pkg_mttr_s < f.pkg_mtbf_s, "outages must be shorter than uptime");
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::config::{
     StrategyKind,
 };
 use crate::server::{resolve_slo, LoadMode, ServerConfig, ServerSim};
-use crate::util::{parallel_map, Table, TelemetryMode};
+use crate::util::{try_parallel_map, CellError, Table, TelemetryMode};
 
 /// Completion fraction below which a run counts as saturated (shared with
 /// `serve_sweep`).
@@ -198,9 +198,23 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             })
         })
         .collect();
-    let results: Vec<Cell> = parallel_map(cells.clone(), opts.threads, |(si, ni, ri)| {
-        sweep.saturate(SCHEMES[si], PACKAGES[ni], ROUTERS[ri], &slo, base_rps)
-    });
+    // Panic-isolated fan-out: one diverging cell becomes a loud failure
+    // row instead of tearing down the other 31 cells' work.
+    let results: Vec<Result<Cell, CellError>> =
+        try_parallel_map(cells.clone(), opts.threads, |(si, ni, ri)| {
+            sweep.saturate(SCHEMES[si], PACKAGES[ni], ROUTERS[ri], &slo, base_rps)
+        });
+    for (&(si, ni, ri), r) in cells.iter().zip(&results) {
+        if let Err(e) = r {
+            eprintln!(
+                "cluster_sweep: CELL-PANIC at (scheme {}, packages {}, router {}): {}",
+                SCHEMES[si].name(),
+                PACKAGES[ni],
+                ROUTERS[ri].name(),
+                e
+            );
+        }
+    }
 
     let mut detail = Table::new(
         &format!(
@@ -227,29 +241,49 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         ],
     );
     let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
-    for (&(si, ni, ri), cell) in cells.iter().zip(&results) {
-        let (imb, cv, hand, kv, mig) = match &cell.knee {
-            Some(m) => (
-                format!("{:.3}", m.busy_imbalance()),
-                format!("{:.3}", m.routed_cv()),
-                format!("{:.2}", mib(m.handoff_bytes)),
-                format!("{:.2}", mib(m.kv_migration_bytes)),
-                format!("{}", m.migrations),
-            ),
-            None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+    for (&(si, ni, ri), res) in cells.iter().zip(&results) {
+        let row = match res {
+            Ok(cell) => {
+                let (imb, cv, hand, kv, mig) = match &cell.knee {
+                    Some(m) => (
+                        format!("{:.3}", m.busy_imbalance()),
+                        format!("{:.3}", m.routed_cv()),
+                        format!("{:.2}", mib(m.handoff_bytes)),
+                        format!("{:.2}", mib(m.kv_migration_bytes)),
+                        format!("{}", m.migrations),
+                    ),
+                    None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+                };
+                vec![
+                    SCHEMES[si].name().into(),
+                    format!("{}", PACKAGES[ni]),
+                    ROUTERS[ri].name().into(),
+                    format!("{:.2}", cell.sustained_rps),
+                    format!("{:.2}", cell.sustained_rps / PACKAGES[ni] as f64),
+                    imb,
+                    cv,
+                    hand,
+                    kv,
+                    mig,
+                ]
+            }
+            // Failed cell: same column shape, unmistakable content (only
+            // present when a cell actually panicked, so healthy sweep
+            // output is byte-identical to before).
+            Err(_) => vec![
+                SCHEMES[si].name().into(),
+                format!("{}", PACKAGES[ni]),
+                ROUTERS[ri].name().into(),
+                "CELL-PANIC".into(),
+                "CELL-PANIC".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ],
         };
-        detail.row(vec![
-            SCHEMES[si].name().into(),
-            format!("{}", PACKAGES[ni]),
-            ROUTERS[ri].name().into(),
-            format!("{:.2}", cell.sustained_rps),
-            format!("{:.2}", cell.sustained_rps / PACKAGES[ni] as f64),
-            imb,
-            cv,
-            hand,
-            kv,
-            mig,
-        ]);
+        detail.row(row);
     }
 
     // 3. Per (scheme × packages) summary: best router + scaling efficiency
@@ -266,7 +300,12 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
                         .iter()
                         .position(|&c| c == (si, ni, ri))
                         .expect("cell missing");
-                    (ri, results[idx].sustained_rps)
+                    // Panicked cells never win the best-router fold.
+                    let rps = results[idx]
+                        .as_ref()
+                        .map(|c| c.sustained_rps)
+                        .unwrap_or(f64::NEG_INFINITY);
+                    (ri, rps)
                 })
                 // f64 from the same deterministic runs: plain comparison,
                 // first (lowest router index) wins ties.
@@ -308,7 +347,7 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         .iter()
         .position(|&c| c == (rep_si, rep_ni, rep_ri))
         .expect("representative cell missing");
-    if let Some(knee) = &results[rep_idx].knee {
+    if let Some(knee) = results[rep_idx].as_ref().ok().and_then(|c| c.knee.as_ref()) {
         for (pkg, m) in knee.per_package.iter().enumerate() {
             for (channel, t, v) in m.series.rows() {
                 ts_t.row(vec![
@@ -327,8 +366,9 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
     //    trace + accounting CSVs. Tracing is bit-neutral, so the traced
     //    run reproduces the knee cell exactly.
     if let Some(path) = &opts.trace_cell {
-        let rate = if results[rep_idx].sustained_rps > 0.0 {
-            results[rep_idx].sustained_rps
+        let rep_rps = results[rep_idx].as_ref().map(|c| c.sustained_rps).unwrap_or(0.0);
+        let rate = if rep_rps > 0.0 {
+            rep_rps
         } else {
             // Every probe violated the SLO: trace a light load instead so
             // the artifact still exists.

@@ -1,0 +1,402 @@
+//! `fault_sweep`: the robustness yardstick (`repro fault-sweep`) —
+//! fault intensity × scheme × router under the seeded fault-injection
+//! layer (`crate::fault`), against the fault-free baseline.
+//!
+//! Method:
+//! 1. **Calibrate** once on a single-package EP burst (the same anchors
+//!    as `serve_sweep`/`cluster_sweep`): unloaded tails set the SLO,
+//!    closed-loop capacity sets the offered rate — fixed at 60% of the
+//!    fleet's fault-free capacity so the degradation measured is the
+//!    faults' doing, not a saturated baseline's.
+//! 2. **Sweep fault intensity**: an MTBF grid expressed as fractions of
+//!    the run length (so `--quick` and full runs stress comparably), with
+//!    MTTR, probe interval and the secondary domains (serdes flapping,
+//!    chiplet brown-outs, DDR slowdowns) derived from the package MTBF.
+//!    Intensity 0 is the pinned fault-free baseline — a zero
+//!    `FaultConfig`, byte-identical to a sim that never heard of faults.
+//! 3. **Report degradation**: per cell, goodput retention vs the same
+//!    (scheme, router)'s baseline, SLO attainment, recovery time,
+//!    re-prefill traffic, and the failed/shed/unfinished ledger with the
+//!    conservation verdict. The summary table puts the FSE-DP vs EP
+//!    retention gap side by side per (intensity, router).
+//!
+//! Cells run under the panic-isolating pool (`util::try_parallel_map`):
+//! a diverging cell becomes a loud `CELL-PANIC` row, not a dead sweep.
+//! Like `cluster_sweep`, the grid keeps the `tiny_moe` smoke model —
+//! robustness is a routing/recovery question, not a kernel question.
+
+use super::ExpOpts;
+use crate::cluster::{ClusterMetrics, ClusterSim};
+use crate::config::{
+    presets, ClusterConfig, Dataset, FaultConfig, MoeModelConfig, Overrides, RouterKind,
+    ServePreset, ShedPolicy, StrategyKind,
+};
+use crate::server::{resolve_slo, LoadMode, ServerConfig, ServerSim};
+use crate::util::{try_parallel_map, CellError, Table, TelemetryMode};
+
+/// Shared with the other sweeps.
+const MIN_COMPLETION_FRAC: f64 = 0.95;
+
+const SCHEMES: [StrategyKind; 2] = [StrategyKind::FseDpPaired, StrategyKind::Ep];
+const ROUTERS: [RouterKind; 2] = [RouterKind::Jsq, RouterKind::ExpertAffinity];
+/// MTBF grid as fractions of the run length; 0.0 is the fault-free
+/// baseline every retention figure divides by.
+const INTENSITIES: [f64; 4] = [0.0, 0.5, 0.25, 0.125];
+const INTENSITIES_QUICK: [f64; 2] = [0.0, 0.25];
+
+struct Sweep {
+    model: MoeModelConfig,
+    preset: ServePreset,
+    base: ClusterConfig,
+    seed: u64,
+    n_packages: usize,
+    rate_rps: f64,
+    duration_s: f64,
+    telemetry: TelemetryMode,
+    /// One `FaultConfig` per intensity, index-aligned with the grid
+    /// (index 0 is the zero baseline). Pre-derived so every cell —
+    /// including `--trace-cell` re-runs — sees the identical knobs.
+    faults: Vec<FaultConfig>,
+}
+
+impl Sweep {
+    fn run_cell(&self, scheme: StrategyKind, router: RouterKind, ii: usize) -> ClusterMetrics {
+        let hw = presets::mcm_2x2();
+        let cfg = ServerConfig {
+            strategy: scheme,
+            mode: LoadMode::Open { rate_rps: self.rate_rps, duration_s: self.duration_s },
+            seed: self.seed,
+            telemetry: self.telemetry,
+            ..Default::default()
+        };
+        let cluster = ClusterConfig { n_packages: self.n_packages, router, ..self.base.clone() };
+        let mut sim =
+            ClusterSim::new(&self.model, &hw, Dataset::C4, &self.preset, cfg, cluster);
+        sim.set_faults(self.faults[ii].clone());
+        sim.run()
+    }
+}
+
+/// Derive the full fault configuration for one nonzero MTBF (seconds).
+/// The package-crash domain anchors everything: MTTR is an eighth of the
+/// MTBF (outages are short relative to the gaps between them), the
+/// health-check period an eighth of the MTTR (detection is fast but not
+/// free), and the secondary domains flap at comparable rates. Tail-aware
+/// shedding arms with watermarks scaled from the batcher's capacity.
+fn derive_fault_cfg(mtbf_s: f64, preset: &ServePreset) -> FaultConfig {
+    if mtbf_s <= 0.0 {
+        return FaultConfig::default();
+    }
+    let mttr_s = mtbf_s / 8.0;
+    FaultConfig {
+        pkg_mtbf_s: mtbf_s,
+        pkg_mttr_s: mttr_s,
+        link_mtbf_s: 0.75 * mtbf_s,
+        link_mttr_s: mttr_s,
+        chiplet_mtbf_s: mtbf_s,
+        chiplet_mttr_s: mttr_s,
+        ddr_mtbf_s: 1.5 * mtbf_s,
+        ddr_mttr_s: mttr_s,
+        probe_interval_s: mttr_s / 8.0,
+        shed: ShedPolicy::Tail,
+        shed_soft_load: 2 * preset.max_batch,
+        shed_hard_load: 6 * preset.max_batch,
+        ..FaultConfig::default()
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let base = opts.cluster.clone().unwrap_or_else(presets::cluster_pod);
+    let n_packages = if opts.quick { 2 } else { 4 };
+    let intensities: &[f64] =
+        if opts.quick { &INTENSITIES_QUICK } else { &INTENSITIES };
+    let routers: &[RouterKind] = if opts.quick { &ROUTERS[..1] } else { &ROUTERS };
+    let overrides = Overrides::parse(&opts.fault_overrides)
+        .unwrap_or_else(|e| panic!("fault_sweep overrides: {e}"));
+
+    // 1. Calibration: same single-package EP anchors as the other sweeps.
+    let calib = |n_requests: usize| {
+        let cfg = ServerConfig {
+            strategy: StrategyKind::Ep,
+            mode: LoadMode::Burst { n_requests },
+            seed: opts.seed,
+            ..Default::default()
+        };
+        ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run()
+    };
+    let unloaded = calib(preset.max_batch);
+    let capacity = calib(4 * preset.max_batch);
+    let slo = resolve_slo(&preset.slo, &unloaded);
+    let base_rps = capacity.service_rps(hw.freq_hz);
+    assert!(base_rps > 0.0, "calibration produced no completions");
+
+    let total_requests = opts.requests.unwrap_or(if opts.quick { 80 } else { 400 });
+    let rate_rps = 0.6 * base_rps * n_packages as f64;
+    let duration_s = total_requests as f64 / rate_rps;
+    // Overrides pin absolute knobs on every *armed* cell; the intensity-0
+    // baseline stays a zero config so retention always divides by the
+    // pinned fault-free run.
+    let faults: Vec<FaultConfig> = intensities
+        .iter()
+        .map(|&frac| {
+            let mut cfg = derive_fault_cfg(frac * duration_s, &preset);
+            if !cfg.is_zero() {
+                overrides
+                    .apply_fault(&mut cfg)
+                    .unwrap_or_else(|e| panic!("fault_sweep overrides: {e}"));
+            }
+            cfg
+        })
+        .collect();
+    let sweep = Sweep {
+        model,
+        preset,
+        base,
+        seed: opts.seed,
+        n_packages,
+        rate_rps,
+        duration_s,
+        telemetry: if opts.exact_tails { TelemetryMode::Exact } else { TelemetryMode::Sketch },
+        faults,
+    };
+
+    // 2. Every (scheme × router × intensity) cell across the pool,
+    //    panic-isolated.
+    let cells: Vec<(usize, usize, usize)> = (0..SCHEMES.len())
+        .flat_map(|si| {
+            (0..routers.len())
+                .flat_map(move |ri| (0..intensities.len()).map(move |ii| (si, ri, ii)))
+        })
+        .collect();
+    let results: Vec<Result<ClusterMetrics, CellError>> =
+        try_parallel_map(cells.clone(), opts.threads, |(si, ri, ii)| {
+            sweep.run_cell(SCHEMES[si], routers[ri], ii)
+        });
+    for (&(si, ri, ii), r) in cells.iter().zip(&results) {
+        if let Err(e) = r {
+            eprintln!(
+                "fault_sweep: CELL-PANIC at (scheme {}, router {}, intensity {}): {}",
+                SCHEMES[si].name(),
+                routers[ri].name(),
+                intensities[ii],
+                e
+            );
+        }
+    }
+    let goodput_of = |si: usize, ri: usize, ii: usize| -> Option<f64> {
+        let idx = cells.iter().position(|&c| c == (si, ri, ii))?;
+        results[idx].as_ref().ok().map(|m| m.goodput_rps(hw.freq_hz))
+    };
+
+    // 3. Detail table: one row per cell, with retention vs the same
+    //    (scheme, router)'s fault-free baseline and the conservation
+    //    verdict (`OK` / `VIOLATION` — grep-able by CI).
+    let mut detail = Table::new(
+        &format!(
+            "fault_sweep: {} / preset '{}' / {} packages @ {:.1} RPS (60% of fault-free \
+             capacity) / SLO p99 TTFT <= {:.2} ms, p99 TPOT <= {:.2} ms",
+            sweep.model.name,
+            sweep.preset.name,
+            n_packages,
+            rate_rps,
+            slo.ttft_p99_ms,
+            slo.tpot_p99_ms
+        ),
+        &[
+            "scheme",
+            "router",
+            "intensity",
+            "pkg MTBF ms",
+            "goodput RPS",
+            "retention",
+            "SLO ok",
+            "completion",
+            "crashes",
+            "recoveries",
+            "mean recovery ms",
+            "reprefill MiB",
+            "lost KV tokens",
+            "failed",
+            "shed",
+            "unfinished",
+            "conserved",
+        ],
+    );
+    let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
+    for (&(si, ri, ii), res) in cells.iter().zip(&results) {
+        let head = vec![
+            SCHEMES[si].name().to_string(),
+            routers[ri].name().to_string(),
+            format!("{}", intensities[ii]),
+            format!("{:.3}", intensities[ii] * duration_s * 1e3),
+        ];
+        let row = match res {
+            Ok(m) => {
+                let retention = match goodput_of(si, ri, 0) {
+                    Some(b) if b > 0.0 => {
+                        format!("{:.4}", m.goodput_rps(hw.freq_hz) / b)
+                    }
+                    _ => "n/a".into(),
+                };
+                let conserved = if m.conserved() { "OK" } else { "VIOLATION" };
+                if !m.conserved() {
+                    eprintln!(
+                        "fault_sweep: CONSERVATION VIOLATION at (scheme {}, router {}, \
+                         intensity {}): arrived {} completed {} fault {:?}",
+                        SCHEMES[si].name(),
+                        routers[ri].name(),
+                        intensities[ii],
+                        m.arrived,
+                        m.completed,
+                        m.fault
+                    );
+                }
+                let mut r = head;
+                r.extend([
+                    format!("{:.2}", m.goodput_rps(hw.freq_hz)),
+                    retention,
+                    format!("{}", m.meets(&slo, MIN_COMPLETION_FRAC)),
+                    format!("{:.4}", m.completion_frac()),
+                    format!("{}", m.fault.crashes),
+                    format!("{}", m.fault.recoveries),
+                    format!(
+                        "{:.3}",
+                        m.fault.mean_recovery_cycles() / hw.freq_hz * 1e3
+                    ),
+                    format!("{:.3}", mib(m.fault.reprefill_bytes)),
+                    format!("{}", m.fault.lost_kv_tokens),
+                    format!("{}", m.fault.failed),
+                    format!("{}", m.fault.shed),
+                    format!("{}", m.fault.unfinished),
+                    conserved.to_string(),
+                ]);
+                r
+            }
+            Err(_) => {
+                let mut r = head;
+                r.extend(vec!["CELL-PANIC".to_string(); 13]);
+                r
+            }
+        };
+        detail.row(row);
+    }
+
+    // 4. Summary: the paper-level claim — how much goodput each scheme
+    //    retains under faults, FSE-DP vs EP side by side.
+    let mut summary = Table::new(
+        "fault_sweep summary: goodput retention under faults, FSE-DP vs EP",
+        &["intensity", "pkg MTBF ms", "router", "FSE-DP retention", "EP retention", "gap"],
+    );
+    let retention_of = |si: usize, ri: usize, ii: usize| -> Option<f64> {
+        let base = goodput_of(si, ri, 0)?;
+        if base <= 0.0 {
+            return None;
+        }
+        Some(goodput_of(si, ri, ii)? / base)
+    };
+    for (ii, &frac) in intensities.iter().enumerate().skip(1) {
+        for ri in 0..routers.len() {
+            let fse = retention_of(0, ri, ii);
+            let ep = retention_of(1, ri, ii);
+            let fmt = |v: Option<f64>| v.map_or("n/a".into(), |x| format!("{x:.4}"));
+            let gap = match (fse, ep) {
+                (Some(a), Some(b)) => format!("{:+.4}", a - b),
+                _ => "n/a".into(),
+            };
+            summary.row(vec![
+                format!("{frac}"),
+                format!("{:.3}", frac * duration_s * 1e3),
+                routers[ri].name().to_string(),
+                fmt(fse),
+                fmt(ep),
+                gap,
+            ]);
+        }
+    }
+
+    // 5. `--trace-cell`: re-run the representative cell (FSE-DP, first
+    //    router, highest fault intensity) with the span recorder attached
+    //    — fault/recovery instants and degraded-hardware spans land on
+    //    the front-end's `faults` track. Tracing is bit-neutral.
+    if let Some(path) = &opts.trace_cell {
+        let ii = intensities.len() - 1;
+        let hw = presets::mcm_2x2();
+        let cfg = ServerConfig {
+            strategy: SCHEMES[0],
+            mode: LoadMode::Open { rate_rps: sweep.rate_rps, duration_s: sweep.duration_s },
+            seed: sweep.seed,
+            telemetry: sweep.telemetry,
+            ..Default::default()
+        };
+        let cluster = ClusterConfig {
+            n_packages: sweep.n_packages,
+            router: routers[0],
+            ..sweep.base.clone()
+        };
+        let mut sim =
+            ClusterSim::new(&sweep.model, &hw, Dataset::C4, &sweep.preset, cfg, cluster);
+        sim.set_faults(sweep.faults[ii].clone());
+        let handle = crate::obs::TraceHandle::enabled();
+        sim.attach_trace(handle.clone());
+        sim.run();
+        super::save_trace_artifacts(&handle, hw.freq_hz, path);
+    }
+
+    super::save(&detail, opts, "fault_sweep");
+    super::save(&summary, opts, "fault_sweep_summary");
+    vec![detail, summary]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ExpOpts {
+        ExpOpts {
+            quick: true,
+            out_dir: "/tmp/expstr-test-results".into(),
+            threads: 0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn quick_sweep_reports_faults_and_conserves() {
+        let tables = run(&opts());
+        assert_eq!(tables.len(), 2);
+        // quick: 2 schemes × 1 router × 2 intensities.
+        assert_eq!(tables[0].n_rows(), 4);
+        assert_eq!(tables[1].n_rows(), 1);
+        let csv = tables[0].to_csv();
+        assert!(!csv.contains("VIOLATION"), "conservation violated:\n{csv}");
+        assert!(!csv.contains("CELL-PANIC"), "cell panicked:\n{csv}");
+        // Armed rows (intensity 0.25) observed at least one crash and one
+        // recovery somewhere in the grid.
+        let armed: Vec<&str> = csv.lines().filter(|l| l.contains(",0.25,")).collect();
+        assert_eq!(armed.len(), 2, "armed rows missing:\n{csv}");
+        let col = |line: &str, i: usize| -> u64 {
+            line.split(',').nth(i).and_then(|v| v.parse().ok()).unwrap_or(0)
+        };
+        assert!(armed.iter().any(|l| col(l, 8) > 0), "no crashes:\n{csv}");
+        assert!(armed.iter().any(|l| col(l, 9) > 0), "no recoveries:\n{csv}");
+        // Baseline rows are pinned fault-free: retention exactly 1.
+        for l in csv.lines().filter(|l| l.contains(",0,0.000,")) {
+            assert_eq!(l.split(',').nth(5), Some("1.0000"), "baseline retention: {l}");
+        }
+    }
+
+    #[test]
+    fn overrides_reach_the_armed_cells_and_bad_keys_panic() {
+        let cfg = derive_fault_cfg(0.01, &presets::serve_chat());
+        assert!(cfg.pkg_mtbf_s > 0.0 && !cfg.is_zero());
+        assert!(cfg.probe_interval_s > 0.0);
+        cfg.validate();
+        let mut o = opts();
+        o.fault_overrides = vec!["bogus_key=1".into()];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(&o)));
+        assert!(r.is_err(), "unknown fault override key must fail loudly");
+    }
+}

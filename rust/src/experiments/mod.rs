@@ -20,9 +20,13 @@
 //! yardstick — an open-loop RPS ramp to SLO violation over the L4 server
 //! subsystem (see `crate::server`) — and `cluster_sweep` is the scaling
 //! yardstick above it: packages × router policy × offered RPS over the L5
-//! cluster subsystem (see `crate::cluster`).
+//! cluster subsystem (see `crate::cluster`). `fault_sweep` is the
+//! robustness yardstick: fault intensity × scheme × router under the
+//! seeded fault-injection layer (see `crate::fault`), reporting goodput
+//! retention and recovery accounting against the fault-free baseline.
 
 pub mod cluster_sweep;
+pub mod fault_sweep;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
@@ -73,6 +77,11 @@ pub struct ExpOpts {
     /// `trace_expert_heatmap.csv` beside it). The sweep results
     /// themselves are unaffected — tracing is bit-neutral.
     pub trace_cell: Option<String>,
+    /// Raw `key=value` fault-knob overrides for `fault_sweep`, applied to
+    /// every fault-armed cell via `Overrides::apply_fault`. The key set
+    /// (`mtbf_s`/`mttr_s`/`link_flap`/`retry_budget`/`shed_policy`) is
+    /// disjoint from the cluster/hardware appliers; unknown keys error.
+    pub fault_overrides: Vec<String>,
 }
 
 impl Default for ExpOpts {
@@ -86,13 +95,14 @@ impl Default for ExpOpts {
             requests: None,
             exact_tails: false,
             trace_cell: None,
+            fault_overrides: Vec::new(),
         }
     }
 }
 
-pub const ALL_IDS: [&str; 13] = [
+pub const ALL_IDS: [&str; 14] = [
     "table1", "fig2", "fig9", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "serve_sweep", "cluster_sweep",
+    "fig18", "serve_sweep", "cluster_sweep", "fault_sweep",
 ];
 
 /// Run one experiment by id; returns the rendered tables.
@@ -111,6 +121,7 @@ pub fn run_by_id(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
         "fig18" => fig18::run(opts),
         "serve_sweep" | "serve-sweep" => serve_sweep::run(opts),
         "cluster_sweep" | "cluster-sweep" => cluster_sweep::run(opts),
+        "fault_sweep" | "fault-sweep" => fault_sweep::run(opts),
         other => return Err(format!("unknown experiment '{other}' (see `repro list`)")),
     };
     for t in &tables {
@@ -211,6 +222,6 @@ mod tests {
         let tables = run_by_id("table1", &opts).unwrap();
         assert!(!tables.is_empty());
         assert!(run_by_id("fig99", &opts).is_err());
-        assert_eq!(ALL_IDS.len(), 13);
+        assert_eq!(ALL_IDS.len(), 14);
     }
 }

@@ -1,0 +1,192 @@
+//! Deterministic fault injection and recovery accounting.
+//!
+//! The paper's premise is that dynamic expert trajectories let a
+//! multi-chiplet system re-plan around imbalance and bandwidth loss at
+//! runtime. This module supplies the *loss*: seeded MTBF/MTTR event
+//! streams ([`schedule::FaultSchedule`]) for package crashes, serdes-link
+//! degradation, chiplet brown-outs and DDR slowdowns, plus the shared
+//! recovery-side helpers — the health-probe backoff curve, the
+//! brown-out workload re-shard, and the [`FaultStats`] ledger whose
+//! conservation invariant (`arrived == completed + failed + shed +
+//! unfinished`) guarantees no request is ever silently dropped.
+//!
+//! Everything here is a pure function of `(FaultConfig, run seed,
+//! topology, clock rate)`: no wall clock, no global state, and ties break
+//! on the lowest source index — so fault runs are bit-identical across
+//! `--threads` like every other layer of the stack.
+
+pub mod schedule;
+
+pub use schedule::{FaultEvent, FaultSchedule, TimedFault};
+
+use crate::workload::LayerWorkload;
+
+/// Outcome ledger for one fault-injected run, carried on
+/// `ClusterMetrics::fault`. All counters are front-end-observed (e.g.
+/// `recoveries` counts *probed* rejoins, not hardware restarts).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Package crash events injected (including crashes that re-hit a
+    /// package before the front-end re-probed it back in).
+    pub crashes: usize,
+    /// Packages probed back into the mesh after an outage.
+    pub recoveries: usize,
+    /// Requests that exhausted their retry budget — accounted, not lost.
+    pub failed: usize,
+    /// Arrivals rejected by admission load-shedding.
+    pub shed: usize,
+    /// KV-loss redeliveries performed (a request can contribute several).
+    pub retries: usize,
+    /// Prompt bytes re-shipped over the serdes link for redeliveries.
+    pub reprefill_bytes: u64,
+    /// Prefilled tokens whose KV was wiped by crashes (re-computed by the
+    /// batcher on the new package).
+    pub lost_kv_tokens: u64,
+    /// Summed crash→rejoin downtime over observed recoveries.
+    pub recovery_cycles: u64,
+    /// Serdes-link degradation episodes started.
+    pub link_degrades: usize,
+    /// Chiplet brown-out episodes started.
+    pub chiplet_brownouts: usize,
+    /// DDR slowdown episodes started.
+    pub ddr_slowdowns: usize,
+    /// Requests still in flight (or stranded) when the run cut off —
+    /// measured at the end of `ClusterSim::run`, not inferred.
+    pub unfinished: usize,
+}
+
+impl FaultStats {
+    pub fn mean_recovery_cycles(&self) -> f64 {
+        if self.recoveries == 0 {
+            0.0
+        } else {
+            self.recovery_cycles as f64 / self.recoveries as f64
+        }
+    }
+
+    /// Request-conservation invariant: every admitted request ends in
+    /// exactly one of {completed, failed-after-retries, shed, unfinished}.
+    pub fn conserved(&self, arrived: usize, completed: usize) -> bool {
+        completed + self.failed + self.shed + self.unfinished == arrived
+    }
+}
+
+/// Delay before the `k`-th re-probe of a dead package (k = 0 is the first
+/// re-probe after detection): `base * backoff^k`, capped at `16 * base`.
+/// Monotone non-decreasing in `k` for any `backoff >= 1` — pinned by
+/// tests, because the recovery-time accounting assumes probes never move
+/// *earlier* as an outage drags on.
+pub fn probe_delay_cycles(base_cycles: u64, backoff: f64, k: u32) -> u64 {
+    let base = base_cycles.max(1);
+    let mult = backoff.max(1.0).powi(k.min(16) as i32).min(16.0);
+    (base as f64 * mult).ceil() as u64
+}
+
+/// Re-shard one layer's workload around browned-out chiplets: each
+/// expert's tokens on a downed chiplet are dealt round-robin onto the
+/// live chiplets, starting at a deterministic per-expert offset so the
+/// displaced load spreads instead of piling onto chiplet 0. Vector
+/// widths are preserved — downed chiplets simply carry zero tokens — so
+/// every strategy sees a normal (if skewed) workload and its trajectory
+/// planning re-plans around the hole. Token totals are conserved. If no
+/// chiplet (or every chiplet) is down the workload is returned unchanged.
+pub fn mask_chiplets(mut wl: LayerWorkload, down: &[bool]) -> LayerWorkload {
+    let n = wl.n_chiplets;
+    let live: Vec<usize> = (0..n).filter(|&c| !down.get(c).copied().unwrap_or(false)).collect();
+    if live.len() == n || live.is_empty() {
+        return wl;
+    }
+    for load in wl.experts.iter_mut() {
+        let mut slot = load.expert as usize % live.len();
+        for c in 0..n {
+            if !down.get(c).copied().unwrap_or(false) || load.tokens_per_chiplet[c] == 0 {
+                continue;
+            }
+            let tokens = std::mem::take(&mut load.tokens_per_chiplet[c]);
+            let base = tokens / live.len() as u32;
+            let rem = (tokens % live.len() as u32) as usize;
+            for (j, &lc) in live.iter().enumerate() {
+                let extra = if (j + live.len() - slot) % live.len() < rem { 1 } else { 0 };
+                load.tokens_per_chiplet[lc] += base + extra;
+            }
+            slot = (slot + rem) % live.len();
+        }
+    }
+    wl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ExpertLoad, LayerWorkload};
+
+    fn wl(loads: Vec<(u32, Vec<u32>)>) -> LayerWorkload {
+        let n = loads[0].1.len();
+        let total: u32 = loads.iter().map(|(_, t)| t.iter().sum::<u32>()).sum();
+        LayerWorkload {
+            experts: loads
+                .into_iter()
+                .map(|(e, tokens)| {
+                    let total = tokens.iter().sum();
+                    ExpertLoad { expert: e as crate::moe::ExpertId, tokens_per_chiplet: tokens, total }
+                })
+                .collect(),
+            n_chiplets: n,
+            total_tokens: total,
+        }
+    }
+
+    #[test]
+    fn probe_delay_is_monotone_and_capped() {
+        let base = 1600;
+        let mut prev = 0;
+        for k in 0..24 {
+            let d = probe_delay_cycles(base, 2.0, k);
+            assert!(d >= prev, "probe delay regressed at k={k}");
+            assert!(d <= base * 16, "probe delay exceeds cap at k={k}");
+            prev = d;
+        }
+        // backoff 1.0 = constant cadence
+        assert_eq!(probe_delay_cycles(base, 1.0, 9), base);
+    }
+
+    #[test]
+    fn mask_conserves_tokens_and_zeroes_downed_chiplet() {
+        let w = wl(vec![(0, vec![5, 3, 0, 7]), (9, vec![1, 1, 1, 1])]);
+        let down = [false, true, false, false];
+        let masked = mask_chiplets(w.clone(), &down);
+        assert_eq!(masked.n_chiplets, 4);
+        assert_eq!(masked.total_tokens, w.total_tokens);
+        for (orig, m) in w.experts.iter().zip(masked.experts.iter()) {
+            assert_eq!(m.tokens_per_chiplet[1], 0);
+            assert_eq!(m.total, orig.total);
+            assert_eq!(m.tokens_per_chiplet.iter().sum::<u32>(), orig.total);
+            assert_eq!(m.tokens_per_chiplet.len(), 4);
+        }
+    }
+
+    #[test]
+    fn mask_noop_when_nothing_down() {
+        let w = wl(vec![(3, vec![2, 2, 2, 2])]);
+        let masked = mask_chiplets(w.clone(), &[false; 4]);
+        assert_eq!(masked.experts[0].tokens_per_chiplet, w.experts[0].tokens_per_chiplet);
+    }
+
+    #[test]
+    fn mask_is_deterministic() {
+        let w = wl(vec![(0, vec![5, 3, 2, 7]), (1, vec![4, 4, 4, 4])]);
+        let down = [false, false, true, false];
+        let a = mask_chiplets(w.clone(), &down);
+        let b = mask_chiplets(w, &down);
+        for (x, y) in a.experts.iter().zip(b.experts.iter()) {
+            assert_eq!(x.tokens_per_chiplet, y.tokens_per_chiplet);
+        }
+    }
+
+    #[test]
+    fn conservation_check_matches_arithmetic() {
+        let stats = FaultStats { failed: 2, shed: 3, unfinished: 1, ..FaultStats::default() };
+        assert!(stats.conserved(10, 4));
+        assert!(!stats.conserved(10, 5));
+    }
+}

@@ -1,0 +1,298 @@
+//! Seeded fault event streams.
+//!
+//! Every (domain × package) pair owns an independent RNG forked from one
+//! base stream in a fixed order, and alternates *episode start* / *episode
+//! end* events whose gaps are exponential draws around the configured
+//! MTBF / MTTR means. The merged stream is therefore a pure function of
+//! `(FaultConfig, run seed, n_packages, n_chiplets, freq_hz)` — it does
+//! not depend on run length, on what the simulator does with the events,
+//! or on thread count. Generation is lazy: each source holds only its
+//! next event, so arbitrarily long runs cost O(1) memory.
+
+use crate::config::FaultConfig;
+use crate::util::Rng;
+
+/// One injected fault or recovery edge, in simulator cycles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Package loses power: everything on it (queue, KV, in-flight work)
+    /// is gone. The front-end only notices one probe interval later.
+    PkgCrash { pkg: usize },
+    /// Package hardware is back up; it rejoins the mesh at the next
+    /// successful health probe, not at this instant.
+    PkgUp { pkg: usize },
+    /// Serdes link to `pkg` drops to `link_degraded_factor` bandwidth.
+    LinkDegrade { pkg: usize },
+    LinkRestore { pkg: usize },
+    /// One chiplet browns out of the package mesh; trajectories re-plan
+    /// around the hole via the `mask_chiplets` re-shard.
+    ChipletDown { pkg: usize, chiplet: usize },
+    ChipletUp { pkg: usize, chiplet: usize },
+    /// DDR effective bandwidth drops to `ddr_slow_factor`.
+    DdrSlow { pkg: usize },
+    DdrRestore { pkg: usize },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimedFault {
+    pub at: u64,
+    pub event: FaultEvent,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Domain {
+    Pkg = 0,
+    Link = 1,
+    Chiplet = 2,
+    Ddr = 3,
+}
+
+/// Alternating start/end event generator for one fault source.
+#[derive(Debug)]
+struct EpisodeGen {
+    rng: Rng,
+    mtbf_cycles: f64,
+    mttr_cycles: f64,
+    /// Cycle of the next event; `None` = source disabled.
+    next_at: Option<u64>,
+    /// True between a start event and its matching end event.
+    in_episode: bool,
+}
+
+impl EpisodeGen {
+    fn new(rng: Rng, mtbf_s: f64, mttr_s: f64, freq_hz: f64) -> Self {
+        let mut g = EpisodeGen {
+            rng,
+            mtbf_cycles: mtbf_s * freq_hz,
+            mttr_cycles: mttr_s * freq_hz,
+            next_at: None,
+            in_episode: false,
+        };
+        if mtbf_s > 0.0 && mttr_s > 0.0 {
+            let first = g.exp_cycles(g.mtbf_cycles);
+            g.next_at = Some(first);
+        }
+        g
+    }
+
+    /// Inverse-CDF exponential draw, clamped to >= 1 cycle so episodes
+    /// never collapse to zero length.
+    fn exp_cycles(&mut self, mean_cycles: f64) -> u64 {
+        let u = self.rng.f64();
+        (-mean_cycles * (1.0 - u).ln()).ceil().max(1.0) as u64
+    }
+
+    /// Consume the pending event and draw the time of the next one.
+    fn advance(&mut self) {
+        let at = match self.next_at {
+            Some(t) => t,
+            None => return,
+        };
+        if self.in_episode {
+            self.in_episode = false;
+            let gap = self.exp_cycles(self.mtbf_cycles);
+            self.next_at = Some(at.saturating_add(gap));
+        } else {
+            self.in_episode = true;
+            let len = self.exp_cycles(self.mttr_cycles);
+            self.next_at = Some(at.saturating_add(len));
+        }
+    }
+}
+
+struct SourceGen {
+    domain: Domain,
+    pkg: usize,
+    gen: EpisodeGen,
+    n_chiplets: usize,
+    /// Chiplet picked at the current brown-out's start, so its `Up` event
+    /// names the same chiplet.
+    chiplet: usize,
+}
+
+impl SourceGen {
+    fn pop_event(&mut self) -> TimedFault {
+        let at = self.gen.next_at.expect("pop_event on a disabled source");
+        let event = if !self.gen.in_episode {
+            match self.domain {
+                Domain::Pkg => FaultEvent::PkgCrash { pkg: self.pkg },
+                Domain::Link => FaultEvent::LinkDegrade { pkg: self.pkg },
+                Domain::Chiplet => {
+                    // Draw the victim before `advance` draws the episode
+                    // length — fixed per-source RNG order.
+                    self.chiplet = self.gen.rng.below(self.n_chiplets as u64) as usize;
+                    FaultEvent::ChipletDown { pkg: self.pkg, chiplet: self.chiplet }
+                }
+                Domain::Ddr => FaultEvent::DdrSlow { pkg: self.pkg },
+            }
+        } else {
+            match self.domain {
+                Domain::Pkg => FaultEvent::PkgUp { pkg: self.pkg },
+                Domain::Link => FaultEvent::LinkRestore { pkg: self.pkg },
+                Domain::Chiplet => FaultEvent::ChipletUp { pkg: self.pkg, chiplet: self.chiplet },
+                Domain::Ddr => FaultEvent::DdrRestore { pkg: self.pkg },
+            }
+        };
+        self.gen.advance();
+        TimedFault { at, event }
+    }
+}
+
+/// Merged, lazily-generated fault event stream for one cluster run.
+pub struct FaultSchedule {
+    gens: Vec<SourceGen>,
+}
+
+impl FaultSchedule {
+    pub fn new(
+        cfg: &FaultConfig,
+        run_seed: u64,
+        n_packages: usize,
+        n_chiplets: usize,
+        freq_hz: f64,
+    ) -> Self {
+        cfg.validate();
+        let mut base = Rng::new(run_seed ^ cfg.seed ^ 0xFA01_7FA0_17FA_017F);
+        let mut gens = Vec::with_capacity(4 * n_packages);
+        for pkg in 0..n_packages {
+            for (domain, mtbf, mttr) in [
+                (Domain::Pkg, cfg.pkg_mtbf_s, cfg.pkg_mttr_s),
+                (Domain::Link, cfg.link_mtbf_s, cfg.link_mttr_s),
+                (Domain::Chiplet, cfg.chiplet_mtbf_s, cfg.chiplet_mttr_s),
+                (Domain::Ddr, cfg.ddr_mtbf_s, cfg.ddr_mttr_s),
+            ] {
+                let rng = base.fork((domain as u64) << 32 | pkg as u64);
+                // A brown-out needs a survivor chiplet to re-shard onto.
+                let mtbf =
+                    if matches!(domain, Domain::Chiplet) && n_chiplets < 2 { 0.0 } else { mtbf };
+                gens.push(SourceGen {
+                    domain,
+                    pkg,
+                    gen: EpisodeGen::new(rng, mtbf, mttr, freq_hz),
+                    n_chiplets,
+                    chiplet: 0,
+                });
+            }
+        }
+        FaultSchedule { gens }
+    }
+
+    /// Cycle of the next event across all sources, if any remain armed.
+    pub fn peek(&self) -> Option<u64> {
+        self.gens.iter().filter_map(|g| g.gen.next_at).min()
+    }
+
+    /// Pop the earliest event. Ties break on the lowest source index
+    /// (package-major, domain-minor) so replay order is fixed.
+    pub fn pop(&mut self) -> Option<TimedFault> {
+        let idx = self
+            .gens
+            .iter()
+            .enumerate()
+            .filter_map(|(i, g)| g.gen.next_at.map(|t| (t, i)))
+            .min()
+            .map(|(_, i)| i)?;
+        Some(self.gens[idx].pop_event())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed_cfg() -> FaultConfig {
+        FaultConfig {
+            pkg_mtbf_s: 0.05,
+            pkg_mttr_s: 0.01,
+            link_mtbf_s: 0.04,
+            link_mttr_s: 0.01,
+            chiplet_mtbf_s: 0.05,
+            chiplet_mttr_s: 0.01,
+            ddr_mtbf_s: 0.06,
+            ddr_mttr_s: 0.01,
+            ..FaultConfig::default()
+        }
+    }
+
+    fn drain(mut s: FaultSchedule, n: usize) -> Vec<TimedFault> {
+        (0..n).map(|_| s.pop().expect("stream exhausted")).collect()
+    }
+
+    #[test]
+    fn zero_config_produces_no_events() {
+        let s = FaultSchedule::new(&FaultConfig::default(), 7, 4, 4, 800e6);
+        assert_eq!(s.peek(), None);
+    }
+
+    #[test]
+    fn stream_is_a_pure_function_of_seed() {
+        let cfg = armed_cfg();
+        let a = drain(FaultSchedule::new(&cfg, 7, 2, 4, 800e6), 64);
+        let b = drain(FaultSchedule::new(&cfg, 7, 2, 4, 800e6), 64);
+        assert_eq!(a, b);
+        let c = drain(FaultSchedule::new(&cfg, 8, 2, 4, 800e6), 64);
+        assert_ne!(a, c, "run seed must perturb the stream");
+    }
+
+    #[test]
+    fn events_are_time_ordered_and_alternate_per_source() {
+        let cfg = armed_cfg();
+        let events = drain(FaultSchedule::new(&cfg, 11, 2, 4, 800e6), 200);
+        let mut last = 0;
+        let mut open: std::collections::BTreeMap<(usize, usize), bool> = Default::default();
+        for tf in &events {
+            assert!(tf.at >= last, "events regressed in time");
+            last = tf.at;
+            let (key, start) = match tf.event {
+                FaultEvent::PkgCrash { pkg } => ((0, pkg), true),
+                FaultEvent::PkgUp { pkg } => ((0, pkg), false),
+                FaultEvent::LinkDegrade { pkg } => ((1, pkg), true),
+                FaultEvent::LinkRestore { pkg } => ((1, pkg), false),
+                FaultEvent::ChipletDown { pkg, .. } => ((2, pkg), true),
+                FaultEvent::ChipletUp { pkg, .. } => ((2, pkg), false),
+                FaultEvent::DdrSlow { pkg } => ((3, pkg), true),
+                FaultEvent::DdrRestore { pkg } => ((3, pkg), false),
+            };
+            let was_open = open.entry(key).or_insert(false);
+            assert_ne!(*was_open, start, "source {key:?} did not alternate");
+            *was_open = start;
+        }
+    }
+
+    #[test]
+    fn chiplet_pairs_name_the_same_victim() {
+        let mut cfg = armed_cfg();
+        cfg.pkg_mtbf_s = 0.0;
+        cfg.link_mtbf_s = 0.0;
+        cfg.ddr_mtbf_s = 0.0;
+        let events = drain(FaultSchedule::new(&cfg, 3, 1, 4, 800e6), 20);
+        let mut current: Option<usize> = None;
+        for tf in events {
+            match tf.event {
+                FaultEvent::ChipletDown { chiplet, .. } => {
+                    assert!(chiplet < 4);
+                    current = Some(chiplet);
+                }
+                FaultEvent::ChipletUp { chiplet, .. } => {
+                    assert_eq!(Some(chiplet), current.take());
+                }
+                _ => unreachable!("only the chiplet domain is armed"),
+            }
+        }
+    }
+
+    #[test]
+    fn single_chiplet_package_never_browns_out() {
+        let cfg = armed_cfg();
+        let events = drain(FaultSchedule::new(&cfg, 5, 1, 4, 800e6), 40).len();
+        assert!(events > 0);
+        let s = FaultSchedule::new(
+            &FaultConfig { chiplet_mtbf_s: 0.05, ..FaultConfig::default() },
+            5,
+            1,
+            1,
+            800e6,
+        );
+        assert_eq!(s.peek(), None, "n_chiplets < 2 must disarm brown-outs");
+    }
+}

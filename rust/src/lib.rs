@@ -24,6 +24,11 @@
 //!   behind a pluggable request router over a serdes-class inter-package
 //!   link, with cluster-level SLO metrics, load-imbalance statistics, and
 //!   the `repro cluster-sweep` scaling yardstick.
+//! * Robustness (`fault`): seeded, deterministic fault injection —
+//!   package crashes with KV loss and retry accounting, serdes-link
+//!   flapping, chiplet brown-outs, DDR slowdowns — threaded through
+//!   L4/L5 recovery paths, with the `repro fault-sweep` degradation
+//!   yardstick.
 //! * Observability (`obs`): end-to-end tracing across L3→L5 — request
 //!   lifecycles, scheduler iterations, routing/link transfers, and adopted
 //!   chiplet activity — with Perfetto (Chrome trace event) export and a
@@ -36,6 +41,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod engine;
 pub mod experiments;
+pub mod fault;
 pub mod moe;
 pub mod obs;
 pub mod runtime;

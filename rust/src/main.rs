@@ -10,6 +10,8 @@
 //!   repro serve-sweep [--quick]        open-loop RPS sweep to SLO violation
 //!   repro cluster-sweep [--quick] [key=value ...]
 //!                                      L5 scaling sweep: packages x router x RPS
+//!   repro fault-sweep [--quick] [key=value ...]
+//!                                      robustness sweep: fault intensity x scheme x router
 //!
 //! `serve-sweep` drives the L4 serving subsystem (`server::ServerSim`):
 //! seeded Poisson arrivals are continuous-batched onto the simulated
@@ -30,8 +32,8 @@
 
 use expert_streaming::cluster::ClusterSim;
 use expert_streaming::config::{
-    presets, ClusterConfig, Dataset, HardwareConfig, MoeModelConfig, Overrides, RouterKind,
-    StrategyKind,
+    presets, ClusterConfig, Dataset, FaultConfig, HardwareConfig, MoeModelConfig, Overrides,
+    RouterKind, StrategyKind,
 };
 use expert_streaming::coordinator::{make_strategy, LayerCtx};
 use expert_streaming::engine::serve::NumericEngine;
@@ -46,9 +48,30 @@ use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n            [--trace OUT.json] [requests=N] [rps=F]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--trace-cell OUT.json]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails] [--trace-cell OUT.json]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick.\n\n--trace OUT.json runs a small traced cluster serve and writes a Perfetto-\nviewable Chrome trace plus trace_accounting.csv / trace_expert_heatmap.csv\nnext to it; --trace-cell does the same for one representative sweep cell."
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n            [--trace OUT.json] [requests=N] [rps=F]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--trace-cell OUT.json]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails] [--trace-cell OUT.json]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n  repro fault-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--trace-cell OUT.json]\n                    [mtbf_s=F] [mttr_s=F] [link_flap=F] [retry_budget=N]\n                    [shed_policy=none|tail|all]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick.\n\n--trace OUT.json runs a small traced cluster serve and writes a Perfetto-\nviewable Chrome trace plus trace_accounting.csv / trace_expert_heatmap.csv\nnext to it; --trace-cell does the same for one representative sweep cell.\n\nfault-sweep sweeps an MTBF grid over seeded package crashes, serdes\nflapping, chiplet brown-outs and DDR slowdowns, reporting goodput\nretention vs the pinned fault-free baseline (fault_sweep.csv)."
     );
     ExitCode::FAILURE
+}
+
+/// Fail fast on an unwritable trace output path: probe it before the
+/// sweep spends minutes simulating, instead of warning after the run.
+/// The probe creates (or opens) the file without truncating existing
+/// content; the export overwrites it later.
+fn check_writable(path: &str) -> Result<(), String> {
+    std::fs::OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(path)
+        .map(|_| ())
+        .map_err(|e| format!("cannot write trace output '{path}': {e}"))
+}
+
+/// Up-front `--trace-cell` validation shared by the sweep commands.
+fn check_trace_cell(opts: &ExpOpts) -> Result<(), String> {
+    match &opts.trace_cell {
+        Some(p) => check_writable(p),
+        None => Ok(()),
+    }
 }
 
 fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
@@ -108,6 +131,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             rest.push(args[i].clone());
         }
         i += 1;
+    }
+    if let Some(out) = &trace_out {
+        check_writable(out)?;
     }
     let ov = Overrides::parse(&rest)?;
     let model = presets::model_by_name(ov.get("model").unwrap_or("qwen"))
@@ -284,7 +310,8 @@ fn main() -> ExitCode {
         "experiment" => {
             let (opts, rest) = parse_opts(&args[1..]);
             match rest.first() {
-                Some(id) => experiments::run_by_id(id, &opts).map(|_| ()),
+                Some(id) => check_trace_cell(&opts)
+                    .and_then(|()| experiments::run_by_id(id, &opts).map(|_| ())),
                 None => Err("experiment id required".into()),
             }
         }
@@ -306,7 +333,8 @@ fn main() -> ExitCode {
             if let Some(stray) = rest.first() {
                 Err(format!("serve-sweep takes no positional args (got '{stray}')"))
             } else {
-                experiments::run_by_id("serve_sweep", &opts).map(|_| ())
+                check_trace_cell(&opts)
+                    .and_then(|()| experiments::run_by_id("serve_sweep", &opts).map(|_| ()))
             }
         }
         "cluster-sweep" => {
@@ -330,12 +358,34 @@ fn main() -> ExitCode {
             match parsed {
                 Ok(cluster) => {
                     opts.cluster = cluster;
-                    experiments::run_by_id("cluster_sweep", &opts).map(|_| ())
+                    check_trace_cell(&opts).and_then(|()| {
+                        experiments::run_by_id("cluster_sweep", &opts).map(|_| ())
+                    })
                 }
                 Err(e) => Err(e),
             }
         }
-        _ => return usage(),
+        "fault-sweep" => {
+            let (mut opts, rest) = parse_opts(&args[1..]);
+            // Validate the override keys/values up front against a scratch
+            // config so a typo is a one-line error, not a mid-sweep panic.
+            let validated = Overrides::parse(&rest).and_then(|ov| {
+                let mut probe = FaultConfig::default();
+                ov.apply_fault(&mut probe)
+            });
+            match validated {
+                Ok(()) => {
+                    opts.fault_overrides = rest;
+                    check_trace_cell(&opts).and_then(|()| {
+                        experiments::run_by_id("fault_sweep", &opts).map(|_| ())
+                    })
+                }
+                Err(e) => Err(e),
+            }
+        }
+        other => Err(format!(
+            "unknown command '{other}' (run `repro` with no arguments for usage)"
+        )),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,

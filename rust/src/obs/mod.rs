@@ -27,6 +27,6 @@ pub use export::{chrome_trace, chrome_trace_string, save_chrome_trace};
 pub use profile::{Accounting, ChipletBusy, Heat, PhaseTotals};
 pub use trace::{
     chiplet_tid, package_pid, EventKind, Pid, RequestSpan, Tid, TraceEvent, TraceHandle,
-    TraceRecorder, PID_FRONTEND, TID_CHIPLET0, TID_LINK, TID_QUEUE, TID_REBALANCER, TID_REQUESTS,
-    TID_ROUTER, TID_SCHED,
+    TraceRecorder, PID_FRONTEND, TID_CHIPLET0, TID_FAULT, TID_LINK, TID_QUEUE, TID_REBALANCER,
+    TID_REQUESTS, TID_ROUTER, TID_SCHED,
 };

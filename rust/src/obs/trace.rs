@@ -44,6 +44,9 @@ pub const TID_ROUTER: Tid = 0;
 pub const TID_LINK: Tid = 1;
 /// Front-end thread: rebalance decisions.
 pub const TID_REBALANCER: Tid = 2;
+/// Front-end thread: fault-injection events (crashes, detections,
+/// rejoins, shed/failed requests) and degraded-hardware spans.
+pub const TID_FAULT: Tid = 3;
 
 /// Package thread: scheduler iterations (attention / MoE / memo spans).
 pub const TID_SCHED: Tid = 0;

@@ -45,6 +45,10 @@ pub struct Request {
     pub first_token_cycles: Option<u64>,
     /// Clock when the last output token completed.
     pub finish_cycles: Option<u64>,
+    /// KV-loss redeliveries survived so far (bumped by the cluster
+    /// front-end when a crashed package wipes this request's KV); once it
+    /// exceeds the fault retry budget the request is accounted as failed.
+    pub retries: u32,
 }
 
 impl Request {
@@ -61,7 +65,20 @@ impl Request {
             decoded: 0,
             first_token_cycles: None,
             finish_cycles: None,
+            retries: 0,
         }
+    }
+
+    /// Reset transient progress after a crash wiped this request's KV: it
+    /// must re-prefill from scratch and restart its token stream on some
+    /// other package. The arrival anchor survives, so TTFT and e2e keep
+    /// charging the whole outage + re-prefill to the request.
+    pub fn lose_kv(&mut self) {
+        self.state = RequestState::Queued;
+        self.prefilled = 0;
+        self.decoded = 0;
+        self.first_token_cycles = None;
+        self.finish_cycles = None;
     }
 
     pub fn remaining_prefill(&self) -> usize {
@@ -111,6 +128,23 @@ mod tests {
         assert_eq!(r.e2e_cycles(), Some(12000));
         // 4 post-prefill tokens over 8000 cycles
         assert_eq!(r.tpot_cycles(), Some(2000.0));
+    }
+
+    #[test]
+    fn lose_kv_resets_progress_but_keeps_identity() {
+        let mut r = Request::new(3, 500, 32, 4);
+        r.prefilled = 20;
+        r.decoded = 1;
+        r.state = RequestState::Decode;
+        r.first_token_cycles = Some(9000);
+        r.retries = 1;
+        r.lose_kv();
+        assert_eq!(r.state, RequestState::Queued);
+        assert_eq!((r.prefilled, r.decoded), (0, 0));
+        assert_eq!(r.first_token_cycles, None);
+        // Identity and accounting anchors survive the wipe.
+        assert_eq!((r.id, r.arrival_cycles, r.retries), (3, 500, 1));
+        assert_eq!(r.remaining_prefill(), 32);
     }
 
     #[test]

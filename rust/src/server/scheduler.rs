@@ -76,6 +76,17 @@ impl ContinuousBatcher {
         Some(r)
     }
 
+    /// Remove and return every request the batcher holds — queued first
+    /// (FIFO), then running in admission order (crash recovery: the whole
+    /// package is gone, so unlike `evict_newest_prefill` even decoding
+    /// requests leave). Requests are returned as-is; the caller owns the
+    /// KV-loss accounting (`Request::lose_kv`) and the retry decision.
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        let mut out: Vec<Request> = self.queued.drain(..).collect();
+        out.append(&mut self.running);
+        out
+    }
+
     /// Form the next iteration's batch. Returns the per-request chunks in
     /// scheduling order; empty only when there is no work at all.
     pub fn next_batch(&mut self) -> Vec<RequestChunk> {
@@ -263,6 +274,21 @@ mod tests {
         let p3 = b3.next_batch();
         b3.complete_iteration(&p3, 10); // prefill done -> Decode
         assert!(b3.evict_newest_prefill().is_none());
+    }
+
+    #[test]
+    fn drain_all_empties_queue_then_running_in_order() {
+        let mut b = batcher();
+        b.enqueue(Request::new(1, 0, 100, 4));
+        let p = b.next_batch();
+        b.complete_iteration(&p, 500); // id 1 running with 32 prefilled
+        b.enqueue(Request::new(2, 10, 4, 2));
+        b.enqueue(Request::new(3, 20, 4, 2));
+        let drained = b.drain_all();
+        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 1]);
+        assert_eq!(drained[2].prefilled, 32); // progress intact; caller wipes it
+        assert!(!b.has_work());
+        assert_eq!(b.unfinished(), 0);
     }
 
     #[test]

@@ -138,6 +138,14 @@ pub struct ServerSim<'a> {
     /// mutates sim state, so results are bit-identical attached or not
     /// (pinned by `tests/trace.rs`).
     trace: Option<PkgTrace>,
+    /// Browned-out chiplets (fault injection). Empty = all healthy, which
+    /// is the structural fast path: `iteration_cycles` only re-shards
+    /// when this is non-empty, so fault-free runs are untouched.
+    chiplet_down: Vec<bool>,
+    /// DDR effective-bandwidth factor (fault injection), 1.0 = healthy.
+    /// Applied as a post-memo penalty so the layer memo stays a pure
+    /// function of the workload.
+    ddr_factor: f64,
 }
 
 impl<'a> ServerSim<'a> {
@@ -177,6 +185,8 @@ impl<'a> ServerSim<'a> {
             iter_idx: 0,
             metrics: ServeMetrics::with_mode(cfg.telemetry),
             trace: None,
+            chiplet_down: Vec::new(),
+            ddr_factor: 1.0,
             model,
             hw,
             preset,
@@ -226,6 +236,15 @@ impl<'a> ServerSim<'a> {
         let mut cost = IterCost { cycles: 0, ddr_bytes: 0, d2d_bytes: 0 };
         for gating in &layers {
             let wl = shard_layer(gating, n_experts_total, self.hw.n_chiplets(), &none);
+            // Brown-out re-shard: displaced tokens move to live chiplets
+            // BEFORE the memo key is computed, so cached costs are keyed
+            // on the workload the strategy actually ran. Structurally a
+            // no-op (not just numerically) when no chiplet is down.
+            let wl = if self.chiplet_down.is_empty() {
+                wl
+            } else {
+                crate::fault::mask_chiplets(wl, &self.chiplet_down)
+            };
             let att = attention_cycles(
                 self.model,
                 self.hw,
@@ -324,6 +343,15 @@ impl<'a> ServerSim<'a> {
             cost.ddr_bytes += outcome.ddr_bytes;
             cost.d2d_bytes += outcome.d2d_bytes;
         }
+        // DDR slowdown episode (fault injection): charge the *extra*
+        // streaming time the degraded bandwidth would have added, outside
+        // the memo so cached layer costs stay episode-independent. The
+        // healthy path never enters this branch.
+        if self.ddr_factor < 1.0 && cost.ddr_bytes > 0 {
+            let bpc = self.hw.ddr_bytes_per_cycle() * self.hw.ddr.channels as f64;
+            let extra = (cost.ddr_bytes as f64 / bpc) * (1.0 / self.ddr_factor - 1.0);
+            cost.cycles += extra.ceil() as u64;
+        }
         cost
     }
 
@@ -410,6 +438,8 @@ impl<'a> ServerSim<'a> {
         self.clock = 0;
         self.iter_idx = 0;
         self.metrics = ServeMetrics::with_mode(self.cfg.telemetry);
+        self.chiplet_down.clear();
+        self.ddr_factor = 1.0;
         if let Some(t) = &mut self.trace {
             t.first_sched.clear();
         }
@@ -587,6 +617,81 @@ impl<'a> ServerSim<'a> {
             }
         }
         done
+    }
+
+    // ---- fault-injection hooks (driven by the cluster fault runtime) ----
+
+    /// Mark one chiplet browned-out (`down = true`) or recovered. While
+    /// any chiplet is down, every layer's workload is re-sharded around
+    /// the hole (`fault::mask_chiplets`) before costing, forcing the
+    /// strategy's trajectory planning to re-plan on the surviving mesh.
+    /// The mask collapses back to empty when the last chiplet recovers,
+    /// restoring the structural fast path.
+    pub fn set_chiplet_down(&mut self, chiplet: usize, down: bool) {
+        let n = self.hw.n_chiplets();
+        if chiplet >= n {
+            return;
+        }
+        if self.chiplet_down.is_empty() {
+            if !down {
+                return;
+            }
+            self.chiplet_down = vec![false; n];
+        }
+        self.chiplet_down[chiplet] = down;
+        if !down && !self.chiplet_down.iter().any(|&d| d) {
+            self.chiplet_down.clear();
+        }
+    }
+
+    /// Set the DDR effective-bandwidth factor (1.0 = healthy); degraded
+    /// iterations are charged the extra streaming time post-memo.
+    pub fn set_ddr_factor(&mut self, factor: f64) {
+        debug_assert!(factor > 0.0 && factor <= 1.0);
+        self.ddr_factor = factor;
+    }
+
+    /// Jump the package clock forward (never backward) — a restarted
+    /// package rejoins the cluster at the probe time, not at the clock it
+    /// crashed on.
+    pub fn advance_clock_to(&mut self, cycle: u64) {
+        self.clock = self.clock.max(cycle);
+    }
+
+    /// Crash the package: every request on it — undelivered, queued, or
+    /// in flight — is removed and returned in a deterministic order
+    /// (undelivered earliest-ready first, then admission-queue FIFO, then
+    /// running requests in admission order). Progress fields are returned
+    /// as-is; the caller owns the KV-loss accounting (`Request::lose_kv`)
+    /// and the retry/fail decision. `arrived` is decremented per drained
+    /// request exactly like `donate_for_migration`, because whichever
+    /// package receives the retry re-counts it on `inject`.
+    pub fn fail_and_drain(&mut self) -> Vec<Request> {
+        // `pending` is ready-descending; pop() walks earliest-first.
+        let mut out = Vec::new();
+        while let Some(r) = self.pending.pop() {
+            out.push(r);
+        }
+        out.extend(self.batcher.drain_all());
+        self.metrics.arrived -= out.len();
+        if let Some(t) = &mut self.trace {
+            let clock = self.clock;
+            let pid = t.pid;
+            for r in &out {
+                t.first_sched.remove(&r.id);
+            }
+            t.handle.with(|rec| {
+                rec.instant(
+                    pid,
+                    TID_QUEUE,
+                    "fault",
+                    "crash_drain",
+                    clock,
+                    vec![("requests", out.len() as u64)],
+                )
+            });
+        }
+        out
     }
 
     /// Give up one not-yet-started request for migration to another
@@ -827,6 +932,80 @@ mod tests {
             // Burst never idles: busy breakdown saw every chiplet.
             assert!(!rec.acct.chiplets.is_empty());
         });
+    }
+
+    #[test]
+    fn brownout_reshards_and_still_completes() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = quick_cfg(LoadMode::Burst { n_requests: 4 }, StrategyKind::FseDpPaired);
+        let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+        sim.begin();
+        sim.set_chiplet_down(1, true);
+        let mut gen = RequestGenerator::new(&preset, 1.0, hw.freq_hz, 7);
+        for r in gen.burst(4) {
+            sim.inject(r);
+        }
+        while sim.next_ready_cycles().is_some() {
+            sim.step();
+        }
+        let m = sim.finish();
+        // The burst is fully served on the surviving 3 chiplets.
+        assert_eq!(m.completed, 4);
+        assert!(m.busy_cycles > 0);
+    }
+
+    #[test]
+    fn ddr_slowdown_strictly_increases_busy_time() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = quick_cfg(LoadMode::Burst { n_requests: 4 }, StrategyKind::FseDpPaired);
+        let healthy = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg.clone()).run();
+        let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+        sim.begin();
+        sim.set_ddr_factor(0.5);
+        let mut gen = RequestGenerator::new(&preset, 1.0, hw.freq_hz, 7);
+        for r in gen.burst(4) {
+            sim.inject(r);
+        }
+        while sim.next_ready_cycles().is_some() {
+            sim.step();
+        }
+        let m = sim.finish();
+        assert_eq!(m.completed, 4);
+        // Streaming bytes moved (healthy run pins moe_ddr_bytes > 0), so
+        // half-bandwidth DDR must cost strictly more cycles.
+        assert!(m.busy_cycles > healthy.busy_cycles);
+        // Identical traffic, slower drains: bytes are unchanged.
+        assert_eq!(m.moe_ddr_bytes, healthy.moe_ddr_bytes);
+    }
+
+    #[test]
+    fn fail_and_drain_returns_everything_and_uncounts() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = quick_cfg(LoadMode::Burst { n_requests: 6 }, StrategyKind::FseDpPaired);
+        let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+        sim.begin();
+        let mut gen = RequestGenerator::new(&preset, 1.0, hw.freq_hz, 7);
+        for r in gen.burst(6) {
+            sim.inject(r);
+        }
+        assert_eq!(sim.load(), 6);
+        let done = sim.step(); // some now in flight, some still queued
+        let drained = sim.fail_and_drain();
+        assert_eq!(done.len() + drained.len(), 6, "crash loses no requests");
+        assert_eq!(sim.load(), 0);
+        assert!(sim.next_ready_cycles().is_none(), "package is empty after the drain");
+        let mut ids: Vec<u32> = drained.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), drained.len(), "no request drained twice");
+        // Drained requests are un-counted; the retry target re-counts them.
+        assert_eq!(sim.finish().arrived, done.len());
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod table;
 pub mod timeseries;
 
 pub use json::Json;
-pub use parallel::{parallel_map, pool_size};
+pub use parallel::{parallel_map, pool_size, try_parallel_map, CellError};
 pub use rng::Rng;
 pub use sketch::{QuantileSketch, SketchConfig};
 pub use stats::{Dist, Summary, TelemetryMode};

@@ -8,10 +8,18 @@
 //! a pure function of its item — which every sweep point satisfies by
 //! constructing its own seeded `ServerSim`/`E2eSimulator`.
 //!
+//! [`try_parallel_map`] is the poisoning-hardened variant: a panicking
+//! cell is caught (`catch_unwind`) and reported as `CellError { index,
+//! message }` instead of tearing the whole sweep down, so a
+//! thousand-point grid can mark one cell failed and keep going. The plain
+//! [`parallel_map`] keeps its propagate-on-panic contract by re-raising
+//! the first failure.
+//!
 //! `REPRO_THREADS` overrides the pool size globally (`1` forces the serial
 //! path, useful for A/B-ing determinism and measuring parallel speedup).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
 /// Default pool size: `REPRO_THREADS` if set to a positive integer, else
@@ -23,11 +31,71 @@ pub fn pool_size() -> usize {
     }
 }
 
+/// A cell of a sweep that panicked: which input it was, and the panic
+/// payload (downcast to a string when possible).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CellError {
+    /// Index of the failing item in the input order.
+    pub index: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for CellError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cell {} panicked: {}", self.index, self.message)
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Map `f` over `items` on up to `threads` worker threads (`0` = auto via
 /// [`pool_size`]), returning results in input order. Falls back to a plain
 /// serial loop for `threads <= 1` or fewer than two items. A panicking
-/// worker propagates its panic to the caller when the scope joins.
+/// cell propagates its panic to the caller (after every other cell has
+/// finished) — use [`try_parallel_map`] to survive per-cell failures.
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let mut first_err: Option<String> = None;
+    let out: Vec<R> = try_parallel_map(items, threads, f)
+        .into_iter()
+        .filter_map(|r| match r {
+            Ok(v) => Some(v),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e.to_string());
+                }
+                None
+            }
+        })
+        .collect();
+    if let Some(msg) = first_err {
+        resume_unwind(Box::new(msg));
+    }
+    out
+}
+
+/// Panic-isolating [`parallel_map`]: every cell runs under
+/// `catch_unwind`, and the output carries `Err(CellError)` for cells that
+/// panicked instead of poisoning the pool or aborting its siblings.
+/// Output order still matches input order exactly, so sweeps can emit a
+/// loud failure row for the cell's grid coordinates and continue.
+pub fn try_parallel_map<T, R, F>(
+    items: Vec<T>,
+    threads: usize,
+    f: F,
+) -> Vec<Result<R, CellError>>
 where
     T: Send,
     R: Send,
@@ -35,11 +103,15 @@ where
 {
     let threads = if threads == 0 { pool_size() } else { threads };
     let n = items.len();
+    let run_cell = |i: usize, item: T| -> Result<R, CellError> {
+        catch_unwind(AssertUnwindSafe(|| f(item)))
+            .map_err(|payload| CellError { index: i, message: panic_message(payload) })
+    };
     if threads <= 1 || n <= 1 {
-        return items.into_iter().map(f).collect();
+        return items.into_iter().enumerate().map(|(i, item)| run_cell(i, item)).collect();
     }
     let work: Mutex<VecDeque<(usize, T)>> = Mutex::new(items.into_iter().enumerate().collect());
-    let mut slots: Vec<Option<R>> = Vec::new();
+    let mut slots: Vec<Option<Result<R, CellError>>> = Vec::new();
     slots.resize_with(n, || None);
     let results = Mutex::new(slots);
     std::thread::scope(|s| {
@@ -48,7 +120,7 @@ where
                 // Take the next item under the lock, then compute outside it.
                 let next = work.lock().unwrap().pop_front();
                 let Some((i, item)) = next else { break };
-                let r = f(item);
+                let r = run_cell(i, item);
                 results.lock().unwrap()[i] = Some(r);
             });
         }
@@ -96,5 +168,51 @@ mod tests {
     #[test]
     fn pool_size_is_positive() {
         assert!(pool_size() >= 1);
+    }
+
+    #[test]
+    fn try_map_isolates_panics_and_names_the_cell() {
+        for threads in [1, 4] {
+            let out = try_parallel_map((0..8u32).collect(), threads, |x| {
+                if x == 5 {
+                    panic!("boom on {x}");
+                }
+                x * 10
+            });
+            assert_eq!(out.len(), 8);
+            for (i, r) in out.iter().enumerate() {
+                if i == 5 {
+                    let e = r.as_ref().unwrap_err();
+                    assert_eq!(e.index, 5);
+                    assert!(e.message.contains("boom on 5"), "got {:?}", e.message);
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i as u32 * 10, "cell {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn try_map_failure_identity_matches_across_thread_counts() {
+        let run = |threads| {
+            try_parallel_map((0..20u32).collect(), threads, |x| {
+                if x % 7 == 3 {
+                    panic!("cell {x} died");
+                }
+                x + 1
+            })
+        };
+        assert_eq!(run(1), run(6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn plain_map_still_propagates_panics() {
+        parallel_map(vec![1u32, 2, 3], 2, |x| {
+            if x == 2 {
+                panic!("die");
+            }
+            x
+        });
     }
 }

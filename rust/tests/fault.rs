@@ -1,0 +1,226 @@
+//! Acceptance tests for the deterministic fault-injection layer.
+//!
+//! * Zero-fault pin: a `ClusterSim` handed `FaultConfig::default()` is
+//!   byte-identical to one with no fault layer attached at all — every
+//!   counter, cycle count and latency sample vector, on single-package
+//!   pass-through and multi-package routed runs alike. This is what lets
+//!   the fault layer ride inside the simulator without perturbing any
+//!   pre-existing experiment output.
+//! * `repro fault-sweep` emits identical tables for `--threads 1` and
+//!   `--threads N` — fault schedules are pure functions of
+//!   `(config, seed, topology)` and never sample from shared state.
+//! * Conservation: on fault-armed runs every admitted request ends in
+//!   exactly one of {completed, failed-after-retries, shed, unfinished};
+//!   crashes and probed recoveries are both observed.
+//! * Recovery re-probes back off monotonically (delays never shrink as an
+//!   outage drags on) and are capped.
+
+use expert_streaming::cluster::{ClusterMetrics, ClusterSim};
+use expert_streaming::config::{
+    presets, ClusterConfig, Dataset, FaultConfig, RouterKind, ShedPolicy, StrategyKind,
+};
+use expert_streaming::experiments::{fault_sweep, ExpOpts};
+use expert_streaming::fault::{probe_delay_cycles, FaultSchedule};
+use expert_streaming::server::{LoadMode, ServerConfig};
+
+fn server_cfg(mode: LoadMode, seed: u64) -> ServerConfig {
+    ServerConfig { strategy: StrategyKind::FseDpPaired, mode, seed, ..Default::default() }
+}
+
+fn run_cluster(
+    n: usize,
+    router: RouterKind,
+    mode: LoadMode,
+    seed: u64,
+    fault: Option<FaultConfig>,
+) -> ClusterMetrics {
+    let hw = presets::mcm_2x2();
+    let model = presets::tiny_moe();
+    let preset = presets::serve_chat();
+    let cluster = ClusterConfig { n_packages: n, router, ..presets::cluster_pod() };
+    let mut sim =
+        ClusterSim::new(&model, &hw, Dataset::C4, &preset, server_cfg(mode, seed), cluster);
+    if let Some(cfg) = fault {
+        sim.set_faults(cfg);
+    }
+    sim.run()
+}
+
+/// Aggressive fault mix scaled to the short test runs: several crash /
+/// flap / brown-out / slowdown episodes per package over a ~20 ms run.
+fn armed() -> FaultConfig {
+    FaultConfig {
+        pkg_mtbf_s: 2e-3,
+        pkg_mttr_s: 4e-4,
+        link_mtbf_s: 3e-3,
+        link_mttr_s: 5e-4,
+        chiplet_mtbf_s: 4e-3,
+        chiplet_mttr_s: 5e-4,
+        ddr_mtbf_s: 4e-3,
+        ddr_mttr_s: 6e-4,
+        probe_interval_s: 1e-4,
+        ..FaultConfig::default()
+    }
+}
+
+fn assert_bit_identical(plain: &ClusterMetrics, zeroed: &ClusterMetrics, tag: &str) {
+    assert_eq!(plain.arrived, zeroed.arrived, "{tag}: arrived");
+    assert_eq!(plain.completed, zeroed.completed, "{tag}: completed");
+    assert_eq!(plain.iterations, zeroed.iterations, "{tag}: iterations");
+    assert_eq!(plain.end_cycles, zeroed.end_cycles, "{tag}: end_cycles");
+    assert_eq!(plain.routed, zeroed.routed, "{tag}: routed");
+    assert_eq!(plain.migrations, zeroed.migrations, "{tag}: migrations");
+    assert_eq!(plain.handoff_bytes, zeroed.handoff_bytes, "{tag}: handoff");
+    assert_eq!(plain.kv_migration_bytes, zeroed.kv_migration_bytes, "{tag}: kv bytes");
+    assert_eq!(plain.ttft_us.samples(), zeroed.ttft_us.samples(), "{tag}: ttft");
+    assert_eq!(plain.tpot_us.samples(), zeroed.tpot_us.samples(), "{tag}: tpot");
+    assert_eq!(plain.e2e_us.samples(), zeroed.e2e_us.samples(), "{tag}: e2e");
+    assert_eq!(plain.fault, zeroed.fault, "{tag}: fault ledger");
+    for (i, (p, z)) in plain.per_package.iter().zip(&zeroed.per_package).enumerate() {
+        assert_eq!(p.end_cycles, z.end_cycles, "{tag}: pkg {i} end_cycles");
+        assert_eq!(p.busy_cycles, z.busy_cycles, "{tag}: pkg {i} busy_cycles");
+        assert_eq!(p.moe_ddr_bytes, z.moe_ddr_bytes, "{tag}: pkg {i} ddr bytes");
+        assert_eq!(p.moe_d2d_bytes, z.moe_d2d_bytes, "{tag}: pkg {i} d2d bytes");
+    }
+}
+
+#[test]
+fn zero_fault_config_is_byte_identical_to_no_fault_layer() {
+    for mode in [
+        LoadMode::Burst { n_requests: 24 },
+        LoadMode::Open { rate_rps: 600.0, duration_s: 0.05 },
+        // Overloaded: the arrival-cutoff path must agree too.
+        LoadMode::Open { rate_rps: 50_000.0, duration_s: 0.02 },
+    ] {
+        for (n, router) in [(1, RouterKind::PassThrough), (3, RouterKind::Jsq)] {
+            let plain = run_cluster(n, router, mode, 7, None);
+            let zeroed = run_cluster(n, router, mode, 7, Some(FaultConfig::default()));
+            assert_bit_identical(&plain, &zeroed, &format!("{mode:?}/{router:?}"));
+            // The inert ledger still accounts for run-cutoff leftovers,
+            // so conservation holds even with no faults injected.
+            assert!(plain.conserved() && zeroed.conserved(), "{mode:?}/{router:?}");
+        }
+    }
+}
+
+#[test]
+fn fault_sweep_identical_across_thread_counts() {
+    // The acceptance property: `repro fault-sweep --threads 1` and
+    // `--threads N` emit byte-identical tables.
+    let mk = |threads| ExpOpts {
+        quick: true,
+        out_dir: "/tmp/expstr-test-results".into(),
+        threads,
+        ..Default::default()
+    };
+    let serial = fault_sweep::run(&mk(1));
+    let parallel = fault_sweep::run(&mk(4));
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+}
+
+#[test]
+fn armed_runs_crash_recover_and_conserve_every_request() {
+    let mut crashes = 0;
+    let mut recoveries = 0;
+    for seed in [1u64, 7, 13] {
+        for router in [RouterKind::Jsq, RouterKind::ExpertAffinity] {
+            let mode = LoadMode::Open { rate_rps: 1500.0, duration_s: 0.02 };
+            let m = run_cluster(4, router, mode, seed, Some(armed()));
+            assert!(m.arrived > 0 && m.completed > 0, "seed {seed} {router:?}");
+            assert!(
+                m.conserved(),
+                "seed {seed} {router:?}: {} != {} + {} + {} + {}",
+                m.arrived,
+                m.completed,
+                m.fault.failed,
+                m.fault.shed,
+                m.fault.unfinished,
+            );
+            assert!(m.fault.recoveries <= m.fault.crashes, "seed {seed} {router:?}");
+            crashes += m.fault.crashes;
+            recoveries += m.fault.recoveries;
+        }
+    }
+    // With ~8 expected crash episodes per package per run, both edges of
+    // the outage lifecycle must show up across the grid.
+    assert!(crashes >= 1, "no crashes injected across the grid");
+    assert!(recoveries >= 1, "no recoveries observed across the grid");
+}
+
+#[test]
+fn fault_runs_are_deterministic_and_seed_sensitive() {
+    let mode = LoadMode::Open { rate_rps: 1500.0, duration_s: 0.02 };
+    let a = run_cluster(4, RouterKind::Jsq, mode, 7, Some(armed()));
+    let b = run_cluster(4, RouterKind::Jsq, mode, 7, Some(armed()));
+    assert_eq!(a.end_cycles, b.end_cycles);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.routed, b.routed);
+    assert_eq!(a.fault, b.fault);
+    assert_eq!(a.ttft_us.samples(), b.ttft_us.samples());
+    let c = run_cluster(4, RouterKind::Jsq, mode, 8, Some(armed()));
+    assert!(
+        a.end_cycles != c.end_cycles || a.fault != c.fault,
+        "different seed should change the fault trajectory"
+    );
+}
+
+#[test]
+fn zero_retry_budget_fails_requests_instead_of_retrying() {
+    let cfg = FaultConfig { retry_budget: 0, ..armed() };
+    let mode = LoadMode::Open { rate_rps: 1500.0, duration_s: 0.02 };
+    let m = run_cluster(4, RouterKind::Jsq, mode, 7, Some(cfg));
+    // Budget 0 means the first KV loss already exhausts the budget: no
+    // redelivery is ever attempted, every drained request is failed.
+    assert_eq!(m.fault.retries, 0);
+    assert_eq!(m.fault.reprefill_bytes, 0);
+    assert!(m.conserved());
+}
+
+#[test]
+fn shedding_is_accounted_and_conserved() {
+    let cfg = FaultConfig {
+        shed: ShedPolicy::All,
+        shed_soft_load: 0,
+        shed_hard_load: 0,
+        ..FaultConfig::default()
+    };
+    let m = run_cluster(2, RouterKind::Jsq, LoadMode::Burst { n_requests: 20 }, 7, Some(cfg));
+    assert_eq!(m.completed, 0);
+    assert_eq!(m.fault.shed, m.arrived);
+    assert!(m.conserved());
+}
+
+#[test]
+fn fault_schedule_is_a_pure_function_of_config_and_seed() {
+    let cfg = armed();
+    let take = |seed: u64| {
+        let mut s = FaultSchedule::new(&cfg, seed, 4, 4, 800e6);
+        (0..64).map(|_| s.pop().expect("armed schedule is unbounded")).collect::<Vec<_>>()
+    };
+    let a = take(7);
+    assert_eq!(a, take(7));
+    assert_ne!(a, take(8));
+    // Events come out in nondecreasing time order.
+    for w in a.windows(2) {
+        assert!(w[0].at <= w[1].at);
+    }
+}
+
+#[test]
+fn reprobe_backoff_is_monotone_and_capped() {
+    for backoff in [1.0, 1.5, 2.0, 4.0] {
+        let base = 2_000u64;
+        let mut prev = 0;
+        for k in 0..32 {
+            let d = probe_delay_cycles(base, backoff, k);
+            assert!(d >= prev, "backoff {backoff} regressed at k={k}");
+            assert!(d <= 16 * base, "backoff {backoff} exceeds cap at k={k}");
+            prev = d;
+        }
+    }
+    // Sub-1.0 growth factors clamp to a constant cadence, never shrink.
+    assert_eq!(probe_delay_cycles(2_000, 0.5, 5), 2_000);
+}

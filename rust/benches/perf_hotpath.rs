@@ -19,7 +19,9 @@
 //!  7. the streaming-telemetry hot paths (`sketch_push`, `sketch_merge`,
 //!     `summary_quantile`) — ingestion, canonical merging, and the
 //!     dirty-bit quantile cache;
-//!  8. numeric serving latency through PJRT (when artifacts exist).
+//!  8. the attribution folds (`blame_fold`, `health_score`) — the
+//!     per-completion blame accumulation and the report-grid scoring;
+//!  9. numeric serving latency through PJRT (when artifacts exist).
 //!
 //! Besides the human-readable output, results are written to
 //! `BENCH_serve.json` (in the cargo working directory) as
@@ -425,6 +427,70 @@ fn bench_telemetry(records: &mut Vec<BenchRecord>) {
     assert_eq!(summary.sort_count(), 1, "repeated quantiles re-sorted");
 }
 
+/// Record-time attribution folds: per-request blame folding
+/// (`BlameTotals::fold` — runs once per completion on the serve hot
+/// path) and grid health scoring (`health_scores` — the `repro report`
+/// path). Batched per timed op like the other telemetry micro-ops, with
+/// `p99_us` reported per single op.
+fn bench_blame_health(records: &mut Vec<BenchRecord>) {
+    use expert_streaming::config::HealthWeights;
+    use expert_streaming::obs::{health_scores, request_blame, BlameTotals, HealthInput};
+    const BATCH: usize = 4096;
+
+    // A realistic vector: queued, prefilled, decoded, some exposed stalls.
+    let blame = request_blame(
+        1_000,
+        1_500,
+        9_000,
+        40_000,
+        90_000,
+        0,
+        (2_000, 500),
+        (4_000, 1_000),
+    );
+    let mut totals = BlameTotals::default();
+    let (b, p) = measure(reps(500), || {
+        for _ in 0..BATCH {
+            totals.fold(&blame);
+        }
+    });
+    std::hint::black_box(totals.total());
+    let folds_per_s = b * BATCH as f64;
+    let p99_us = p / BATCH as f64;
+    println!(
+        "[perf] telemetry {:<18} {:>12.0} ops/s (p99-batch/{BATCH} {:>9.5} us)",
+        "blame_fold", folds_per_s, p99_us
+    );
+    records.push(BenchRecord { name: "blame_fold".into(), ops_per_s: folds_per_s, p99_us });
+
+    // One op = scoring a 24-cell grid (the full `repro report` grid), so
+    // the record tracks the whole normalize-and-combine pass.
+    let grid: Vec<HealthInput> = (0..24)
+        .map(|i| HealthInput {
+            goodput_rps: 100.0 + i as f64,
+            tail_ms: 10.0 + (i % 7) as f64,
+            overlap_eff: 0.4 + 0.02 * (i % 5) as f64,
+            imbalance: 1.0 + 0.05 * (i % 3) as f64,
+            link_mib: 0.5 * (i % 4) as f64,
+            mem_tokens: 400.0 + 10.0 * i as f64,
+        })
+        .collect();
+    let w = HealthWeights::default();
+    const SCORES: usize = 256;
+    let (b, p) = measure(reps(200), || {
+        for _ in 0..SCORES {
+            std::hint::black_box(health_scores(&grid, &w));
+        }
+    });
+    let scores_per_s = b * SCORES as f64;
+    let p99_us = p / SCORES as f64;
+    println!(
+        "[perf] telemetry {:<18} {:>12.0} ops/s (24-cell grid, p99-batch/{SCORES} {:>9.5} us)",
+        "health_score", scores_per_s, p99_us
+    );
+    records.push(BenchRecord { name: "health_score".into(), ops_per_s: scores_per_s, p99_us });
+}
+
 fn bench_numeric_serving(records: &mut Vec<BenchRecord>) {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
@@ -487,6 +553,7 @@ fn main() {
     bench_router_decisions(&mut records);
     bench_cluster_step(&mut records);
     bench_telemetry(&mut records);
+    bench_blame_health(&mut records);
     bench_numeric_serving(&mut records);
     write_json(&records, memo_hit_rate);
 }

@@ -16,6 +16,7 @@
 
 use crate::config::SloConfig;
 use crate::fault::FaultStats;
+use crate::obs::blame::BlameTotals;
 use crate::server::ServeMetrics;
 use crate::util::Dist;
 
@@ -28,6 +29,8 @@ pub struct ClusterMetrics {
     pub tpot_us: Dist,
     /// Merged end-to-end latency distribution.
     pub e2e_us: Dist,
+    /// Merged per-iteration overlap-efficiency distribution.
+    pub overlap_eff: Dist,
     /// Requests offered to the cluster front-end.
     pub arrived: usize,
     /// Requests completed across all packages.
@@ -45,6 +48,18 @@ pub struct ClusterMetrics {
     pub kv_migration_bytes: u64,
     /// Requests moved between packages by the rebalancer.
     pub migrations: usize,
+    /// Critical-chiplet transfer cycles summed over packages (overlap
+    /// denominator; integer sums commute, so package-permutation
+    /// invariance is free).
+    pub moe_xfer_cycles: u64,
+    /// Portion of `moe_xfer_cycles` hidden under compute (numerator).
+    pub moe_hidden_cycles: u64,
+    /// Exposed DDR cycles summed over packages.
+    pub ddr_stall_cycles: u64,
+    /// Exposed D2D cycles summed over packages.
+    pub d2d_stall_cycles: u64,
+    /// Summed per-request blame vectors over all completed requests.
+    pub blame: BlameTotals,
     /// Fault-injection ledger (all-zero `Default` on fault-free runs; set
     /// by `ClusterSim` after aggregation so `aggregate`'s signature — and
     /// its positional call sites — stay unchanged).
@@ -70,10 +85,15 @@ impl ClusterMetrics {
             let parts: Vec<&Dist> = per_package.iter().map(|m| pick(m)).collect();
             Dist::merge_canonical(&parts)
         };
+        let mut blame = BlameTotals::default();
+        for m in &per_package {
+            blame.merge(&m.blame);
+        }
         ClusterMetrics {
             ttft_us: merge(&|m| &m.ttft_us),
             tpot_us: merge(&|m| &m.tpot_us),
             e2e_us: merge(&|m| &m.e2e_us),
+            overlap_eff: merge(&|m| &m.overlap_eff),
             arrived,
             completed: per_package.iter().map(|m| m.completed).sum(),
             iterations: per_package.iter().map(|m| m.iterations).sum(),
@@ -82,6 +102,11 @@ impl ClusterMetrics {
             handoff_bytes,
             kv_migration_bytes,
             migrations,
+            moe_xfer_cycles: per_package.iter().map(|m| m.moe_xfer_cycles).sum(),
+            moe_hidden_cycles: per_package.iter().map(|m| m.moe_hidden_cycles).sum(),
+            ddr_stall_cycles: per_package.iter().map(|m| m.ddr_stall_cycles).sum(),
+            d2d_stall_cycles: per_package.iter().map(|m| m.d2d_stall_cycles).sum(),
+            blame,
             fault: FaultStats::default(),
             per_package,
         }
@@ -121,6 +146,18 @@ impl ClusterMetrics {
 
     pub fn p99_tpot_ms(&self) -> f64 {
         self.tpot_us.p99() / 1e3
+    }
+
+    /// Cluster-wide overlap efficiency: hidden over total critical-chiplet
+    /// transfer cycles across every package (1.0 when nothing moved).
+    pub fn overlap_efficiency(&self) -> f64 {
+        crate::obs::blame::overlap_efficiency(self.moe_xfer_cycles, self.moe_hidden_cycles)
+    }
+
+    /// Largest summed blame component across the cluster (`"-"` when no
+    /// request completed).
+    pub fn dominant_blame(&self) -> &'static str {
+        self.blame.dominant()
     }
 
     /// The single-package SLO predicate lifted to the cluster: the tails
@@ -207,9 +244,17 @@ mod tests {
 
     #[test]
     fn aggregation_is_package_order_invariant() {
-        let a = pkg(123, 999, 3, &[5.0, 0.25, 7.5]);
-        let b = pkg(456, 400, 2, &[1.0, 9.0]);
-        let c = pkg(789, 650, 1, &[4.0]);
+        let mut a = pkg(123, 999, 3, &[5.0, 0.25, 7.5]);
+        let mut b = pkg(456, 400, 2, &[1.0, 9.0]);
+        let mut c = pkg(789, 650, 1, &[4.0]);
+        for (m, x) in [(&mut a, 11u64), (&mut b, 29), (&mut c, 3)] {
+            m.moe_xfer_cycles = 10 * x;
+            m.moe_hidden_cycles = 4 * x;
+            m.ddr_stall_cycles = 5 * x;
+            m.d2d_stall_cycles = x;
+            m.blame.merge(&BlameTotals { n: 1, queue: x, ddr_stall: 2 * x, ..Default::default() });
+            m.overlap_eff.push(x as f64 / 30.0);
+        }
         let fwd = ClusterMetrics::aggregate(
             vec![a.clone(), b.clone(), c.clone()],
             vec![3, 2, 1],
@@ -224,6 +269,21 @@ mod tests {
         assert_eq!(fwd.completed, rev.completed);
         assert!((fwd.busy_imbalance() - rev.busy_imbalance()).abs() == 0.0);
         assert!((fwd.routed_cv() - rev.routed_cv()).abs() == 0.0);
+        // Blame/overlap aggregation commutes too (integer sums + the
+        // canonical Dist merge).
+        assert_eq!(fwd.blame, rev.blame);
+        assert_eq!(fwd.blame.n, 3);
+        assert_eq!(fwd.overlap_eff.samples(), rev.overlap_eff.samples());
+        assert_eq!(
+            (fwd.moe_xfer_cycles, fwd.moe_hidden_cycles),
+            (rev.moe_xfer_cycles, rev.moe_hidden_cycles)
+        );
+        assert_eq!(
+            (fwd.ddr_stall_cycles, fwd.d2d_stall_cycles),
+            (rev.ddr_stall_cycles, rev.d2d_stall_cycles)
+        );
+        assert!((fwd.overlap_efficiency() - rev.overlap_efficiency()).abs() == 0.0);
+        assert_eq!(fwd.dominant_blame(), "ddr_stall");
     }
 
     #[test]

@@ -616,6 +616,14 @@ impl<'a> ClusterSim<'a> {
     /// fault runtime the alive set is the identity, so the fault-free
     /// path is byte-identical to the pre-fault-layer delivery.
     fn deliver_at(&mut self, mut r: Request, now: u64, fresh: bool) {
+        if !fresh {
+            // Crash-recovery redelivery (or parked release): everything
+            // between the last time this request was made ready and now
+            // is outage loss — wasted progress plus parked waiting. The
+            // ledger feeds the `fault_retry` blame component; the link
+            // transfer charged below stays separate (`link`).
+            r.fault_blame_cycles += now.saturating_sub(r.ready_cycles);
+        }
         if fresh && self.should_shed(&r) {
             self.fault.as_mut().unwrap().stats.shed += 1;
             self.trace_fault_instant("req_shed", now, vec![("req", r.id as u64)]);

@@ -1,0 +1,98 @@
+//! Serving health-score weights: how `obs::health` combines a sweep
+//! cell's goodput, tail latency, overlap efficiency, load imbalance,
+//! link traffic, and memory occupancy into one score.
+//!
+//! Pure data, like the rest of `config` — the normalization and scoring
+//! logic lives in `obs::health`, and the CLI override allowlist in
+//! `config::parse::Overrides::apply_health`.
+
+/// Relative weights of the six health axes. Only ratios matter (scores
+/// divide by the weight sum); a zero weight drops that axis entirely.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HealthWeights {
+    /// Goodput (completed RPS) — higher is better.
+    pub goodput: f64,
+    /// Tail latency (p99 TTFT ms) — lower is better.
+    pub tail: f64,
+    /// Overlap efficiency (fraction of transfer cycles hidden under
+    /// compute) — higher is better.
+    pub overlap: f64,
+    /// Busy imbalance (max/mean package busy) — lower is better.
+    pub imbalance: f64,
+    /// Inter-package link traffic per completed request — lower is
+    /// better.
+    pub link: f64,
+    /// Memory occupancy (mean in-flight batch tokens) — lower is better.
+    pub memory: f64,
+}
+
+impl Default for HealthWeights {
+    /// Serving-first defaults: goodput and tails dominate, the
+    /// efficiency/footprint axes break ties.
+    fn default() -> Self {
+        HealthWeights {
+            goodput: 0.30,
+            tail: 0.25,
+            overlap: 0.15,
+            imbalance: 0.10,
+            link: 0.10,
+            memory: 0.10,
+        }
+    }
+}
+
+impl HealthWeights {
+    /// Weights in the canonical axis order (matches
+    /// `obs::health::HealthInput`'s fields).
+    pub fn as_array(&self) -> [f64; 6] {
+        [self.goodput, self.tail, self.overlap, self.imbalance, self.link, self.memory]
+    }
+
+    /// Every weight finite and non-negative, at least one positive.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, w) in [
+            ("goodput", self.goodput),
+            ("tail", self.tail),
+            ("overlap", self.overlap),
+            ("imbalance", self.imbalance),
+            ("link", self.link),
+            ("memory", self.memory),
+        ] {
+            if !w.is_finite() || w < 0.0 {
+                return Err(format!("health weight '{name}' must be finite and >= 0, got {w}"));
+            }
+        }
+        if self.as_array().iter().sum::<f64>() <= 0.0 {
+            return Err("health weights must not all be zero".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates_and_sums_to_one() {
+        let w = HealthWeights::default();
+        w.validate().unwrap();
+        assert!((w.as_array().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_negative_and_all_zero() {
+        let mut w = HealthWeights::default();
+        w.tail = -0.1;
+        assert!(w.validate().unwrap_err().contains("tail"));
+        let z = HealthWeights {
+            goodput: 0.0,
+            tail: 0.0,
+            overlap: 0.0,
+            imbalance: 0.0,
+            link: 0.0,
+            memory: 0.0,
+        };
+        assert!(z.validate().is_err());
+    }
+}

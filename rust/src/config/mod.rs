@@ -5,6 +5,7 @@
 pub mod cluster;
 pub mod fault;
 pub mod hardware;
+pub mod health;
 pub mod model;
 pub mod parse;
 pub mod presets;
@@ -12,6 +13,7 @@ pub mod serve;
 
 pub use cluster::{ClusterConfig, RouterKind};
 pub use fault::{FaultConfig, ShedPolicy};
+pub use health::HealthWeights;
 pub use hardware::{DdrConfig, D2dConfig, HardwareConfig, SchedulerCost};
 pub use model::{Dataset, MoeModelConfig};
 pub use parse::Overrides;

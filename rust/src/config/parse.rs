@@ -6,6 +6,7 @@
 use super::cluster::{ClusterConfig, RouterKind};
 use super::fault::{FaultConfig, ShedPolicy};
 use super::hardware::HardwareConfig;
+use super::health::HealthWeights;
 use std::collections::BTreeMap;
 
 /// Keys `apply_hardware` callers understand (hardware knobs, run-shape
@@ -39,6 +40,13 @@ fn known_cluster_key(key: &str) -> bool {
 /// instead of becoming silent no-ops.
 pub fn known_fault_key(key: &str) -> bool {
     matches!(key, "mtbf_s" | "mttr_s" | "link_flap" | "retry_budget" | "shed_policy")
+}
+
+/// Keys `apply_health` owns (`repro report` and `--report` weight
+/// overrides). Disjoint from every other allowlist — an unknown weight
+/// key is a loud one-line error, never a silent no-op knob.
+pub fn known_health_key(key: &str) -> bool {
+    matches!(key, "goodput" | "tail" | "overlap" | "imbalance" | "link" | "memory")
 }
 
 #[derive(Clone, Debug, Default)]
@@ -206,6 +214,37 @@ impl Overrides {
         fault.validate();
         Ok(())
     }
+
+    /// Apply health-score weight overrides in place (`repro report
+    /// key=value`, or `--report` on the sweeps). Keys name the six
+    /// axes directly (`goodput=0.5 tail=0.3 ...`); unknown keys error.
+    pub fn apply_health(&self, w: &mut HealthWeights) -> Result<(), String> {
+        for key in self.map.keys() {
+            if !known_health_key(key) {
+                return Err(format!("unknown health weight key '{key}'"));
+            }
+        }
+        if let Some(v) = self.get_f64("goodput")? {
+            w.goodput = v;
+        }
+        if let Some(v) = self.get_f64("tail")? {
+            w.tail = v;
+        }
+        if let Some(v) = self.get_f64("overlap")? {
+            w.overlap = v;
+        }
+        if let Some(v) = self.get_f64("imbalance")? {
+            w.imbalance = v;
+        }
+        if let Some(v) = self.get_f64("link")? {
+            w.link = v;
+        }
+        if let Some(v) = self.get_f64("memory")? {
+            w.memory = v;
+        }
+        w.validate()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -293,5 +332,35 @@ mod tests {
         assert!(ov(&["shed_policy=maybe"]).apply_fault(&mut f).is_err());
         assert!(ov(&["mttr_s=0"]).apply_fault(&mut f).is_err());
         assert!(ov(&["retry_budgt=1"]).apply_fault(&mut f).is_err());
+    }
+
+    #[test]
+    fn health_overrides_apply_and_stay_disjoint() {
+        let o = ov(&["goodput=0.5", "tail=0.2", "overlap=0.3", "imbalance=0", "link=0", "memory=0"]);
+        let mut w = HealthWeights::default();
+        o.apply_health(&mut w).unwrap();
+        assert!((w.goodput - 0.5).abs() < 1e-12);
+        assert!((w.tail - 0.2).abs() < 1e-12);
+        assert!((w.overlap - 0.3).abs() < 1e-12);
+        assert_eq!((w.imbalance, w.link, w.memory), (0.0, 0.0, 0.0));
+        // Disjoint from the other allowlists, in both directions.
+        assert!(ov(&["mtbf_s=0.5"]).apply_health(&mut w).is_err());
+        assert!(ov(&["packages=2"]).apply_health(&mut w).is_err());
+        assert!(ov(&["mesh=3x3"]).apply_health(&mut w).is_err());
+        let mut f = FaultConfig::default();
+        assert!(ov(&["goodput=1"]).apply_fault(&mut f).is_err());
+        let mut c = presets::cluster_pod();
+        assert!(ov(&["overlap=1"]).apply_cluster(&mut c).is_err());
+        let mut hw = presets::mcm_2x2();
+        assert!(ov(&["memory=1"]).apply_hardware(&mut hw).is_err());
+        // Bad values fail loudly: typo, negative, all-zero.
+        assert!(ov(&["goodpt=1"]).apply_health(&mut w).is_err());
+        assert!(ov(&["tail=-1"]).apply_health(&mut w).is_err());
+        let mut z = HealthWeights::default();
+        assert!(ov(&[
+            "goodput=0", "tail=0", "overlap=0", "imbalance=0", "link=0", "memory=0"
+        ])
+        .apply_health(&mut z)
+        .is_err());
     }
 }

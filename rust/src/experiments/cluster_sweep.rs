@@ -238,21 +238,33 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             "handoff MiB",
             "KV-mig MiB",
             "migrations",
+            "overlap eff",
+            "dominant blame",
         ],
     );
     let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
     for (&(si, ni, ri), res) in cells.iter().zip(&results) {
         let row = match res {
             Ok(cell) => {
-                let (imb, cv, hand, kv, mig) = match &cell.knee {
+                let (imb, cv, hand, kv, mig, ovl, blame) = match &cell.knee {
                     Some(m) => (
                         format!("{:.3}", m.busy_imbalance()),
                         format!("{:.3}", m.routed_cv()),
                         format!("{:.2}", mib(m.handoff_bytes)),
                         format!("{:.2}", mib(m.kv_migration_bytes)),
                         format!("{}", m.migrations),
+                        format!("{:.4}", m.overlap_efficiency()),
+                        m.dominant_blame().to_string(),
                     ),
-                    None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+                    None => (
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ),
                 };
                 vec![
                     SCHEMES[si].name().into(),
@@ -265,6 +277,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
                     hand,
                     kv,
                     mig,
+                    ovl,
+                    blame,
                 ]
             }
             // Failed cell: same column shape, unmistakable content (only
@@ -276,6 +290,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
                 ROUTERS[ri].name().into(),
                 "CELL-PANIC".into(),
                 "CELL-PANIC".into(),
+                "-".into(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -360,6 +376,56 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         }
     }
     super::save(&ts_t, opts, "cluster_sweep_timeseries");
+
+    // `--report`: score every cell's knee run under the weighted serving
+    //    health score. All six axes are live here (unlike serve_sweep's
+    //    single package): imbalance and link traffic come from the knee
+    //    metrics, memory is the cluster-total mean in-flight tokens.
+    if opts.report {
+        let w = super::resolve_health_weights(opts);
+        let mut hcells: Vec<crate::obs::HealthCell> = Vec::new();
+        for (&(si, ni, ri), res) in cells.iter().zip(&results) {
+            let knee = match res.as_ref().ok().and_then(|c| c.knee.as_ref()) {
+                Some(m) => m,
+                None => continue, // panicked or never-passing cell: nothing to score
+            };
+            let link_mib = if knee.completed > 0 {
+                mib(knee.handoff_bytes) / knee.completed as f64
+            } else {
+                0.0
+            };
+            let mem_tokens: f64 =
+                knee.per_package.iter().map(|p| p.batch_tokens.mean()).sum();
+            hcells.push(crate::obs::HealthCell {
+                label: vec![
+                    SCHEMES[si].name().into(),
+                    ROUTERS[ri].name().into(),
+                    format!("{}", PACKAGES[ni]),
+                ],
+                input: crate::obs::HealthInput {
+                    goodput_rps: knee.goodput_rps(hw.freq_hz),
+                    tail_ms: knee.p99_ttft_ms(),
+                    overlap_eff: knee.overlap_efficiency(),
+                    imbalance: knee.busy_imbalance(),
+                    link_mib,
+                    mem_tokens,
+                },
+                dominant: knee.dominant_blame(),
+            });
+        }
+        let (report_t, best_t) = crate::obs::health_tables(
+            "cluster_sweep health: SLO-knee run of every (scheme x packages x router) cell",
+            &["scheme", "router", "packages"],
+            &hcells,
+            &w,
+        );
+        report_t.print();
+        println!();
+        best_t.print();
+        println!();
+        super::save(&report_t, opts, "health_cluster");
+        super::save(&best_t, opts, "health_cluster_best");
+    }
 
     // 5. `--trace-cell`: re-run the representative cell at its sustained
     //    load with the span recorder attached and export the Perfetto

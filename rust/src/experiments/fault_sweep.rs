@@ -223,6 +223,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             "shed",
             "unfinished",
             "conserved",
+            "overlap eff",
+            "dominant blame",
         ],
     );
     let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
@@ -272,12 +274,14 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
                     format!("{}", m.fault.shed),
                     format!("{}", m.fault.unfinished),
                     conserved.to_string(),
+                    format!("{:.4}", m.overlap_efficiency()),
+                    m.dominant_blame().to_string(),
                 ]);
                 r
             }
             Err(_) => {
                 let mut r = head;
-                r.extend(vec!["CELL-PANIC".to_string(); 13]);
+                r.extend(vec!["CELL-PANIC".to_string(); 15]);
                 r
             }
         };
@@ -343,6 +347,55 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         sim.attach_trace(handle.clone());
         sim.run();
         super::save_trace_artifacts(&handle, hw.freq_hz, path);
+    }
+
+    // `--report`: score every cell under the weighted serving health
+    //    score. The grid axis here is fault intensity (packages are fixed),
+    //    so the label column is intensity — the winner names the design
+    //    that degrades most gracefully under the chosen priorities.
+    if opts.report {
+        let w = super::resolve_health_weights(opts);
+        let mut hcells: Vec<crate::obs::HealthCell> = Vec::new();
+        for (&(si, ri, ii), res) in cells.iter().zip(&results) {
+            let m = match res {
+                Ok(m) => m,
+                Err(_) => continue, // CELL-PANIC rows carry nothing to score
+            };
+            let link_mib = if m.completed > 0 {
+                mib(m.handoff_bytes) / m.completed as f64
+            } else {
+                0.0
+            };
+            let mem_tokens: f64 = m.per_package.iter().map(|p| p.batch_tokens.mean()).sum();
+            hcells.push(crate::obs::HealthCell {
+                label: vec![
+                    SCHEMES[si].name().into(),
+                    routers[ri].name().into(),
+                    format!("{}", intensities[ii]),
+                ],
+                input: crate::obs::HealthInput {
+                    goodput_rps: m.goodput_rps(hw.freq_hz),
+                    tail_ms: m.p99_ttft_ms(),
+                    overlap_eff: m.overlap_efficiency(),
+                    imbalance: m.busy_imbalance(),
+                    link_mib,
+                    mem_tokens,
+                },
+                dominant: m.dominant_blame(),
+            });
+        }
+        let (report_t, best_t) = crate::obs::health_tables(
+            "fault_sweep health: every (scheme x router x intensity) cell",
+            &["scheme", "router", "intensity"],
+            &hcells,
+            &w,
+        );
+        report_t.print();
+        println!();
+        best_t.print();
+        println!();
+        super::save(&report_t, opts, "health_fault");
+        super::save(&best_t, opts, "health_fault_best");
     }
 
     super::save(&detail, opts, "fault_sweep");

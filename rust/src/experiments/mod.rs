@@ -27,6 +27,7 @@
 
 pub mod cluster_sweep;
 pub mod fault_sweep;
+pub mod report;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
@@ -82,6 +83,14 @@ pub struct ExpOpts {
     /// (`mtbf_s`/`mttr_s`/`link_flap`/`retry_budget`/`shed_policy`) is
     /// disjoint from the cluster/hardware appliers; unknown keys error.
     pub fault_overrides: Vec<String>,
+    /// `--report`: after a sweep, also emit the weighted serving health
+    /// tables (`health_report` + `best_config`) from the sweep's own grid
+    /// cells. `repro report` runs the dedicated cross-design grid instead.
+    pub report: bool,
+    /// Raw `key=value` health-weight overrides (`goodput`/`tail`/
+    /// `overlap`/`imbalance`/`link`/`memory`), applied via
+    /// `Overrides::apply_health`; unknown keys error loudly.
+    pub health_overrides: Vec<String>,
 }
 
 impl Default for ExpOpts {
@@ -96,13 +105,15 @@ impl Default for ExpOpts {
             exact_tails: false,
             trace_cell: None,
             fault_overrides: Vec::new(),
+            report: false,
+            health_overrides: Vec::new(),
         }
     }
 }
 
-pub const ALL_IDS: [&str; 14] = [
+pub const ALL_IDS: [&str; 15] = [
     "table1", "fig2", "fig9", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "serve_sweep", "cluster_sweep", "fault_sweep",
+    "fig18", "serve_sweep", "cluster_sweep", "fault_sweep", "report",
 ];
 
 /// Run one experiment by id; returns the rendered tables.
@@ -122,6 +133,7 @@ pub fn run_by_id(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
         "serve_sweep" | "serve-sweep" => serve_sweep::run(opts),
         "cluster_sweep" | "cluster-sweep" => cluster_sweep::run(opts),
         "fault_sweep" | "fault-sweep" => fault_sweep::run(opts),
+        "report" => report::run(opts),
         other => return Err(format!("unknown experiment '{other}' (see `repro list`)")),
     };
     for t in &tables {
@@ -129,6 +141,19 @@ pub fn run_by_id(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
         println!();
     }
     Ok(tables)
+}
+
+/// Resolve the health-score weights for `--report` / `repro report`:
+/// defaults plus `opts.health_overrides`. The CLI validates the override
+/// strings up front (mirroring the fault-override pattern), so a failure
+/// here is a programming error and panics loudly rather than silently
+/// scoring under the wrong weights.
+pub(crate) fn resolve_health_weights(opts: &ExpOpts) -> crate::config::HealthWeights {
+    let mut w = crate::config::HealthWeights::default();
+    crate::config::Overrides::parse(&opts.health_overrides)
+        .and_then(|ov| ov.apply_health(&mut w))
+        .expect("invalid health weight overrides (the CLI validates these up front)");
+    w
 }
 
 pub(crate) fn save(table: &Table, opts: &ExpOpts, name: &str) {
@@ -222,6 +247,6 @@ mod tests {
         let tables = run_by_id("table1", &opts).unwrap();
         assert!(!tables.is_empty());
         assert!(run_by_id("fig99", &opts).is_err());
-        assert_eq!(ALL_IDS.len(), 14);
+        assert_eq!(ALL_IDS.len(), 15);
     }
 }

@@ -1,0 +1,258 @@
+//! `repro report`: the serving health report — one weighted score per
+//! (scheme × router × packages) design cell, plus a `best_config` row
+//! naming the winner and its dominant blame term.
+//!
+//! Method:
+//! 1. **Calibrate** on a single-package EP burst (the same anchors as
+//!    every sweep): closed-loop service capacity sets the per-package
+//!    RPS unit.
+//! 2. **Fixed-load grid**: every (scheme × router × packages) cell
+//!    serves the same seeded open-loop stream at 60% of its fleet's
+//!    fault-free capacity — a "healthy but loaded" operating point, so
+//!    the score compares designs rather than saturation artifacts.
+//! 3. **Score**: each cell's goodput, p99 TTFT, overlap efficiency,
+//!    busy imbalance, link traffic per request, and memory occupancy
+//!    feed `obs::health` under `HealthWeights` (defaults, or
+//!    `key=value` overrides with a loud allowlist — see
+//!    `config::parse::known_health_key`). Axes are min-max normalized
+//!    across this grid, so the score ranks these cells against each
+//!    other.
+//!
+//! Cells are independent seeded `ClusterSim` runs fanned across the
+//! worker pool under panic isolation; the tables assemble from
+//! index-ordered results, so output is identical at any thread count.
+
+use super::ExpOpts;
+use crate::cluster::{ClusterMetrics, ClusterSim};
+use crate::config::{
+    presets, ClusterConfig, Dataset, MoeModelConfig, RouterKind, ServePreset, StrategyKind,
+};
+use crate::obs::{health_tables, HealthCell, HealthInput};
+use crate::server::{LoadMode, ServerConfig, ServerSim};
+use crate::util::{try_parallel_map, CellError, Table, TelemetryMode};
+
+const SCHEMES: [StrategyKind; 2] = [StrategyKind::FseDpPaired, StrategyKind::Ep];
+const ROUTERS: [RouterKind; 2] = [RouterKind::Jsq, RouterKind::PowerOfTwo];
+const PACKAGES: [usize; 3] = [1, 2, 4];
+
+struct Grid {
+    model: MoeModelConfig,
+    preset: ServePreset,
+    base: ClusterConfig,
+    seed: u64,
+    requests_per_package: usize,
+    base_rps: f64,
+    telemetry: TelemetryMode,
+}
+
+impl Grid {
+    fn run_cell(
+        &self,
+        scheme: StrategyKind,
+        router: RouterKind,
+        n_packages: usize,
+    ) -> ClusterMetrics {
+        let hw = presets::mcm_2x2();
+        // Same fleet-relative operating point for every cell: 60% of the
+        // calibrated fault-free capacity, like fault_sweep's fixed load.
+        let rate_rps = 0.6 * self.base_rps * n_packages as f64;
+        let total_requests = self.requests_per_package * n_packages;
+        let cfg = ServerConfig {
+            strategy: scheme,
+            mode: LoadMode::Open { rate_rps, duration_s: total_requests as f64 / rate_rps },
+            seed: self.seed,
+            telemetry: self.telemetry,
+            ..Default::default()
+        };
+        let cluster = ClusterConfig { n_packages, router, ..self.base.clone() };
+        ClusterSim::new(&self.model, &hw, Dataset::C4, &self.preset, cfg, cluster).run()
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Vec<Table> {
+    let hw = presets::mcm_2x2();
+    let w = super::resolve_health_weights(opts);
+    let grid = {
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        // Calibration: single-package EP closed-loop capacity.
+        let cfg = ServerConfig {
+            strategy: StrategyKind::Ep,
+            mode: LoadMode::Burst { n_requests: 4 * preset.max_batch },
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let capacity = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg).run();
+        let base_rps = capacity.service_rps(hw.freq_hz);
+        assert!(base_rps > 0.0, "calibration produced no completions");
+        Grid {
+            model,
+            preset,
+            base: opts.cluster.clone().unwrap_or_else(presets::cluster_pod),
+            seed: opts.seed,
+            requests_per_package: opts.requests.unwrap_or(if opts.quick { 10 } else { 24 }),
+            base_rps,
+            telemetry: if opts.exact_tails {
+                TelemetryMode::Exact
+            } else {
+                TelemetryMode::Sketch
+            },
+        }
+    };
+    let routers: &[RouterKind] = if opts.quick { &ROUTERS[..1] } else { &ROUTERS };
+    let packages: &[usize] = if opts.quick { &PACKAGES[..2] } else { &PACKAGES };
+
+    let cells: Vec<(usize, usize, usize)> = (0..SCHEMES.len())
+        .flat_map(|si| {
+            (0..routers.len())
+                .flat_map(move |ri| (0..packages.len()).map(move |ni| (si, ri, ni)))
+        })
+        .collect();
+    let results: Vec<Result<ClusterMetrics, CellError>> =
+        try_parallel_map(cells.clone(), opts.threads, |(si, ri, ni)| {
+            grid.run_cell(SCHEMES[si], routers[ri], packages[ni])
+        });
+
+    let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
+    let mut hcells: Vec<HealthCell> = Vec::new();
+    for (&(si, ri, ni), res) in cells.iter().zip(&results) {
+        let m = match res {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!(
+                    "report: CELL-PANIC at (scheme {}, router {}, packages {}): {}",
+                    SCHEMES[si].name(),
+                    routers[ri].name(),
+                    packages[ni],
+                    e
+                );
+                continue;
+            }
+        };
+        let link_mib = if m.completed > 0 {
+            mib(m.handoff_bytes) / m.completed as f64
+        } else {
+            0.0
+        };
+        // Memory occupancy: cluster-total mean in-flight batch tokens —
+        // the footprint grows with package count, and the axis is
+        // lower-better, so fleet size pays its memory bill here.
+        let mem_tokens: f64 = m.per_package.iter().map(|p| p.batch_tokens.mean()).sum();
+        hcells.push(HealthCell {
+            label: vec![
+                SCHEMES[si].name().into(),
+                routers[ri].name().into(),
+                format!("{}", packages[ni]),
+            ],
+            input: HealthInput {
+                goodput_rps: m.goodput_rps(hw.freq_hz),
+                tail_ms: m.p99_ttft_ms(),
+                overlap_eff: m.overlap_efficiency(),
+                imbalance: m.busy_imbalance(),
+                link_mib,
+                mem_tokens,
+            },
+            dominant: m.dominant_blame(),
+        });
+    }
+    assert!(!hcells.is_empty(), "report: every grid cell panicked");
+
+    let (report_t, best_t) = health_tables(
+        &format!(
+            "serving health report: {} / preset '{}' / 60% fleet capacity, {} req/pkg",
+            grid.model.name, grid.preset.name, grid.requests_per_package
+        ),
+        &["scheme", "router", "packages"],
+        &hcells,
+        &w,
+    );
+    super::save(&report_t, opts, "health_report");
+    super::save(&best_t, opts, "health_best_config");
+    vec![report_t, best_t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(threads: usize) -> ExpOpts {
+        ExpOpts {
+            quick: true,
+            out_dir: "/tmp/expstr-test-results".into(),
+            threads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn quick_report_scores_every_cell_no_nan() {
+        let tables = run(&opts(0));
+        assert_eq!(tables.len(), 2);
+        // quick: 2 schemes × 1 router × 2 package counts.
+        assert_eq!(tables[0].n_rows(), 4);
+        assert_eq!(tables[1].n_rows(), 1);
+        let csv = tables[0].to_csv();
+        assert!(!csv.to_lowercase().contains("nan"), "NaN leaked into report:\n{csv}");
+        // Health (col 10 of 11) and overlap (col 6) within [0, 1] on
+        // every data row.
+        for line in csv.lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            assert_eq!(cols.len(), 11, "unexpected arity: {line}");
+            for i in [5, 9] {
+                let v: f64 = cols[i].parse().unwrap_or(-1.0);
+                assert!((0.0..=1.0).contains(&v), "col {i} out of [0,1]: {line}");
+            }
+        }
+        // best_config names a real grid cell and a real blame term.
+        let best = tables[1].to_csv();
+        let named = SCHEMES.iter().any(|s| best.contains(s.name()));
+        assert!(named, "best_config names no scheme:\n{best}");
+    }
+
+    #[test]
+    fn report_is_thread_invariant_and_deterministic() {
+        let serial = run(&opts(1));
+        let parallel = run(&opts(4));
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.to_csv(), b.to_csv());
+        }
+        let again = run(&opts(1));
+        assert_eq!(serial[0].to_csv(), again[0].to_csv());
+    }
+
+    #[test]
+    fn weight_overrides_steer_the_score_and_bad_keys_panic() {
+        // All weight on goodput: the winner must be a highest-goodput cell.
+        let mut o = opts(0);
+        o.health_overrides = vec![
+            "goodput=1".into(),
+            "tail=0".into(),
+            "overlap=0".into(),
+            "imbalance=0".into(),
+            "link=0".into(),
+            "memory=0".into(),
+        ];
+        let tables = run(&o);
+        let report = tables[0].to_csv();
+        let best = tables[1].to_csv();
+        let mut top_goodput = f64::NEG_INFINITY;
+        let mut top_line = String::new();
+        for line in report.lines().skip(1) {
+            let g: f64 = line.split(',').nth(3).and_then(|v| v.parse().ok()).unwrap_or(-1.0);
+            if g > top_goodput {
+                top_goodput = g;
+                top_line = line.into();
+            }
+        }
+        let winner_label: Vec<&str> = top_line.split(',').take(3).collect();
+        assert!(
+            best.contains(&winner_label.join(",")),
+            "goodput-only weights must pick the top-goodput cell;\nbest:\n{best}\nreport:\n{report}"
+        );
+        // Unknown weight keys fail loudly, Overrides-style.
+        let mut bad = opts(0);
+        bad.health_overrides = vec!["goodpt=1".into()];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(&bad)));
+        assert!(r.is_err(), "unknown health weight key must fail loudly");
+    }
+}

@@ -193,6 +193,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             "completed",
             "mean queue",
             "SLO",
+            "overlap eff",
+            "dominant blame",
         ],
     );
     // All grid points are independent seeded runs: fan the whole
@@ -217,6 +219,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             format!("{}/{}", m.completed, m.arrived),
             format!("{:.1}", m.queue_depth.mean()),
             if ok { "ok".into() } else { "VIOLATED".to_string() },
+            format!("{:.4}", m.overlap_efficiency()),
+            m.dominant_blame().into(),
         ]);
     }
 
@@ -332,6 +336,46 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
         }
     }
     super::save(&ts_t, opts, "serve_sweep_timeseries");
+
+    // `--report`: score the 0.80x grid cells (the standing "healthy but
+    //    loaded" operating point) under the weighted serving health score.
+    //    serve_sweep is a single package with no inter-package links, so
+    //    the imbalance/link axes are pinned neutral (1.0 / 0) and the
+    //    score discriminates on goodput, tails, overlap, and memory.
+    if opts.report {
+        let w = super::resolve_health_weights(opts);
+        let cells: Vec<crate::obs::HealthCell> = SCHEMES
+            .iter()
+            .enumerate()
+            .map(|(si, scheme)| {
+                let m = &grid_metrics[gi * SCHEMES.len() + si];
+                crate::obs::HealthCell {
+                    label: vec![scheme.name().into(), "-".into(), "1".into()],
+                    input: crate::obs::HealthInput {
+                        goodput_rps: m.goodput_rps(hw.freq_hz),
+                        tail_ms: m.p99_ttft_ms(),
+                        overlap_eff: m.overlap_efficiency(),
+                        imbalance: 1.0,
+                        link_mib: 0.0,
+                        mem_tokens: m.batch_tokens.mean(),
+                    },
+                    dominant: m.dominant_blame(),
+                }
+            })
+            .collect();
+        let (report_t, best_t) = crate::obs::health_tables(
+            "serve_sweep health: schemes at 0.80x EP capacity",
+            &["scheme", "router", "packages"],
+            &cells,
+            &w,
+        );
+        report_t.print();
+        println!();
+        best_t.print();
+        println!();
+        super::save(&report_t, opts, "health_serve");
+        super::save(&best_t, opts, "health_serve_best");
+    }
 
     // 6. `--trace-cell`: re-run the 0.80x FSE-DP+paired grid cell with the
     //    span recorder attached and export the Perfetto trace + accounting

@@ -12,6 +12,8 @@
 //!                                      L5 scaling sweep: packages x router x RPS
 //!   repro fault-sweep [--quick] [key=value ...]
 //!                                      robustness sweep: fault intensity x scheme x router
+//!   repro report [--quick] [key=value ...]
+//!                                      weighted serving health report + best_config
 //!
 //! `serve-sweep` drives the L4 serving subsystem (`server::ServerSim`):
 //! seeded Poisson arrivals are continuous-batched onto the simulated
@@ -32,8 +34,8 @@
 
 use expert_streaming::cluster::ClusterSim;
 use expert_streaming::config::{
-    presets, ClusterConfig, Dataset, FaultConfig, HardwareConfig, MoeModelConfig, Overrides,
-    RouterKind, StrategyKind,
+    presets, ClusterConfig, Dataset, FaultConfig, HardwareConfig, HealthWeights, MoeModelConfig,
+    Overrides, RouterKind, StrategyKind,
 };
 use expert_streaming::coordinator::{make_strategy, LayerCtx};
 use expert_streaming::engine::serve::NumericEngine;
@@ -48,7 +50,7 @@ use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n            [--trace OUT.json] [requests=N] [rps=F]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--trace-cell OUT.json]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails] [--trace-cell OUT.json]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n  repro fault-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--trace-cell OUT.json]\n                    [mtbf_s=F] [mttr_s=F] [link_flap=F] [retry_budget=N]\n                    [shed_policy=none|tail|all]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick.\n\n--trace OUT.json runs a small traced cluster serve and writes a Perfetto-\nviewable Chrome trace plus trace_accounting.csv / trace_expert_heatmap.csv\nnext to it; --trace-cell does the same for one representative sweep cell.\n\nfault-sweep sweeps an MTBF grid over seeded package crashes, serdes\nflapping, chiplet brown-outs and DDR slowdowns, reporting goodput\nretention vs the pinned fault-free baseline (fault_sweep.csv)."
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n            [--trace OUT.json] [requests=N] [rps=F]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n  repro fault-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n                    [mtbf_s=F] [mttr_s=F] [link_flap=F] [retry_budget=N]\n                    [shed_policy=none|tail|all]\n  repro report [--quick] [--seed N] [--out DIR] [--threads N] [--requests N]\n               [goodput=F] [tail=F] [overlap=F] [imbalance=F] [link=F] [memory=F]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick.\n\n--trace OUT.json runs a small traced cluster serve and writes a Perfetto-\nviewable Chrome trace plus trace_accounting.csv / trace_expert_heatmap.csv\nnext to it; --trace-cell does the same for one representative sweep cell.\n\nfault-sweep sweeps an MTBF grid over seeded package crashes, serdes\nflapping, chiplet brown-outs and DDR slowdowns, reporting goodput\nretention vs the pinned fault-free baseline (fault_sweep.csv).\n\nreport scores a fixed-load (scheme x router x packages) grid under the\nweighted serving health score (health_report.csv + health_best_config.csv);\nkey=value pairs override the axis weights. --report on the sweeps emits the\nsame tables from the sweep's own cells (health_*.csv)."
     );
     ExitCode::FAILURE
 }
@@ -102,6 +104,7 @@ fn parse_opts(args: &[String]) -> (ExpOpts, Vec<String>) {
                 opts.requests = args.get(i).and_then(|s| s.parse().ok());
             }
             "--exact-tails" => opts.exact_tails = true,
+            "--report" => opts.report = true,
             "--trace-cell" => {
                 i += 1;
                 opts.trace_cell = args.get(i).cloned();
@@ -379,6 +382,23 @@ fn main() -> ExitCode {
                     check_trace_cell(&opts).and_then(|()| {
                         experiments::run_by_id("fault_sweep", &opts).map(|_| ())
                     })
+                }
+                Err(e) => Err(e),
+            }
+        }
+        "report" => {
+            let (mut opts, rest) = parse_opts(&args[1..]);
+            // Validate the weight keys/values up front against a scratch
+            // config (the fault-sweep pattern): a typo like `goodpt=1` is
+            // a one-line allowlist error, not a mid-run panic.
+            let validated = Overrides::parse(&rest).and_then(|ov| {
+                let mut probe = HealthWeights::default();
+                ov.apply_health(&mut probe)
+            });
+            match validated {
+                Ok(()) => {
+                    opts.health_overrides = rest;
+                    experiments::run_by_id("report", &opts).map(|_| ())
                 }
                 Err(e) => Err(e),
             }

@@ -1,0 +1,492 @@
+//! Bottleneck attribution: overlap-efficiency accounting and per-request
+//! blame vectors.
+//!
+//! Like `obs::profile`, everything here is folded **at record time** from
+//! exact integer cycle counts — plain adds, independent of the trace
+//! ring's retention — so attribution stays exact even when (or whether)
+//! the event buffer drops spans. Two attributions:
+//!
+//! * **Overlap efficiency** ([`layer_overlap`] / [`OverlapStats`]): of
+//!   all D2D + DDR cycles on a MoE layer's *critical chiplet* (the one
+//!   with the most total activity), the fraction hidden under compute.
+//!   1.0 = fully overlapped (the paper's adaptive compute–communication
+//!   overlap worked), 0.0 = fully serial. Derived from the flow-engine
+//!   [`Timeline`] spans via interval-set algebra on the critical
+//!   chiplet: `xfer = |union(ddr ∪ d2d)|`, `hidden = |xfer ∩ compute|`,
+//!   and the exposed remainder split DDR-first so
+//!   `xfer == hidden + ddr_exposed + d2d_exposed` exactly.
+//! * **Blame vector** ([`request_blame`] / [`BlameVec`]): one completed
+//!   request's end-to-end latency decomposed into queue / link /
+//!   prefill-compute / decode-compute / DDR-stall / D2D-stall /
+//!   fault-retry, with a pinned telescoping invariant — the components
+//!   sum to `finish - arrival` **exactly** (integer cycles, no float
+//!   residue), extending `obs::profile`'s four-phase telescoping.
+//!
+//! [`BlameTotals`] is the `PhaseTotals`-style fold that lands on
+//! `ServeMetrics` / `ClusterMetrics`; its sums are package-permutation
+//! invariant by construction (integer adds commute).
+
+use crate::sim::Timeline;
+use crate::sim::trace::ActivityKind;
+
+/// Blame component names, in the canonical (tie-break) order used by
+/// [`BlameVec::dominant`] and the CSV columns.
+pub const BLAME_COMPONENTS: [&str; 7] = [
+    "queue",
+    "link",
+    "prefill_compute",
+    "decode_compute",
+    "ddr_stall",
+    "d2d_stall",
+    "fault_retry",
+];
+
+/// Overlap accounting of one MoE layer on its critical chiplet. All
+/// fields are exact cycle counts (plus the compute-activity bitmask), so
+/// the struct is `Copy + Eq` and can ride in the layer memo: a memo hit
+/// replays the same overlap stats the miss computed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OverlapStats {
+    /// `|union(ddr ∪ d2d)|` on the critical chiplet.
+    pub xfer: u64,
+    /// Portion of `xfer` covered by compute spans (hidden latency).
+    pub hidden: u64,
+    /// DDR cycles not covered by compute.
+    pub ddr_exposed: u64,
+    /// D2D cycles not covered by compute *or* DDR (DDR takes precedence
+    /// where both are exposed, keeping the three parts disjoint).
+    pub d2d_exposed: u64,
+    /// Bit `c` set iff chiplet `c` did any compute this layer (chiplets
+    /// ≥ 64 fold into the idle count conservatively).
+    pub active_mask: u64,
+}
+
+impl OverlapStats {
+    /// `hidden / xfer`; a layer with no transfer traffic is perfectly
+    /// overlapped by definition.
+    pub fn efficiency(&self) -> f64 {
+        overlap_efficiency(self.xfer, self.hidden)
+    }
+
+    pub fn accumulate(&mut self, o: &OverlapStats) {
+        self.xfer += o.xfer;
+        self.hidden += o.hidden;
+        self.ddr_exposed += o.ddr_exposed;
+        self.d2d_exposed += o.d2d_exposed;
+        self.active_mask |= o.active_mask;
+    }
+}
+
+/// The shared efficiency convention: 1.0 when there was nothing to hide.
+pub fn overlap_efficiency(xfer: u64, hidden: u64) -> f64 {
+    if xfer == 0 {
+        1.0
+    } else {
+        hidden as f64 / xfer as f64
+    }
+}
+
+/// Fold one layer's [`Timeline`] (recorded with spans) into its critical
+/// chiplet's overlap stats. Pure integer interval algebra — bit-stable
+/// at any thread count. The critical chiplet is the one with the largest
+/// total span time (compute + transfers), lowest index on ties.
+pub fn layer_overlap(tl: &Timeline) -> OverlapStats {
+    let mut active_mask = 0u64;
+    for c in 0..tl.n_chiplets().min(64) {
+        if tl.compute_busy(c) > 0 {
+            active_mask |= 1 << c;
+        }
+    }
+    let mut totals = vec![0u64; tl.n_chiplets()];
+    for s in &tl.spans {
+        totals[s.chiplet] += s.end - s.start;
+    }
+    let mut crit = 0usize;
+    let mut best = 0u64;
+    for (c, &t) in totals.iter().enumerate() {
+        if t > best {
+            best = t;
+            crit = c;
+        }
+    }
+    if best == 0 {
+        return OverlapStats { active_mask, ..Default::default() };
+    }
+    let mut compute = Vec::new();
+    let mut ddr = Vec::new();
+    let mut d2d = Vec::new();
+    for s in tl.spans.iter().filter(|s| s.chiplet == crit) {
+        match s.kind {
+            ActivityKind::Compute => compute.push((s.start, s.end)),
+            ActivityKind::DdrLoad => ddr.push((s.start, s.end)),
+            ActivityKind::D2dSend | ActivityKind::D2dRecv => d2d.push((s.start, s.end)),
+        }
+    }
+    let compute = normalize(compute);
+    let ddr = normalize(ddr);
+    let d2d = normalize(d2d);
+    let all_xfer = normalize(ddr.iter().chain(d2d.iter()).copied().collect());
+    let xfer = measure(&all_xfer);
+    let exposed_iv = subtract(&all_xfer, &compute);
+    let exposed = measure(&exposed_iv);
+    let hidden = xfer - exposed;
+    let ddr_exposed = measure(&subtract(&ddr, &compute));
+    // D2D gets the rest of the exposed set, so the split stays disjoint
+    // even where DDR and D2D transfers themselves overlap in time.
+    let d2d_exposed = exposed - ddr_exposed.min(exposed);
+    OverlapStats { xfer, hidden, ddr_exposed: ddr_exposed.min(exposed), d2d_exposed, active_mask }
+}
+
+/// Merge an interval list into sorted, disjoint, non-empty form.
+fn normalize(mut iv: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    iv.retain(|&(s, e)| e > s);
+    iv.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(iv.len());
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+fn measure(iv: &[(u64, u64)]) -> u64 {
+    iv.iter().map(|&(s, e)| e - s).sum()
+}
+
+/// Set difference `a \ b` of two normalized interval lists.
+fn subtract(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut bi = 0usize;
+    for &(start, end) in a {
+        let mut s = start;
+        while bi < b.len() && b[bi].1 <= s {
+            bi += 1;
+        }
+        let mut j = bi;
+        while s < end {
+            if j >= b.len() || b[j].0 >= end {
+                out.push((s, end));
+                break;
+            }
+            let (bs, be) = b[j];
+            if bs > s {
+                out.push((s, bs));
+            }
+            s = s.max(be);
+            j += 1;
+        }
+    }
+    out
+}
+
+/// One completed request's end-to-end latency, decomposed. Invariant
+/// (pinned by tests): the seven components sum **exactly** to
+/// `finish - arrival` in integer cycles.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlameVec {
+    /// Admission wait: ready → first scheduled into a batch.
+    pub queue: u64,
+    /// Front-end hand-off (link transfer) before the package saw it.
+    pub link: u64,
+    /// Prefill-window cycles not attributable to exposed stalls.
+    pub prefill_compute: u64,
+    /// Decode-window cycles not attributable to exposed stalls.
+    pub decode_compute: u64,
+    /// Exposed DDR cycles (critical-chiplet loads + DDR-slowdown
+    /// penalties) during the request's active windows.
+    pub ddr_stall: u64,
+    /// Exposed D2D cycles during the request's active windows.
+    pub d2d_stall: u64,
+    /// Cycles lost to crash-recovery redelivery (KV-loss retries and
+    /// parked waits), accrued by the cluster front-end.
+    pub fault_retry: u64,
+}
+
+impl BlameVec {
+    pub fn components(&self) -> [u64; 7] {
+        [
+            self.queue,
+            self.link,
+            self.prefill_compute,
+            self.decode_compute,
+            self.ddr_stall,
+            self.d2d_stall,
+            self.fault_retry,
+        ]
+    }
+
+    /// Equals the request's end-to-end latency in cycles.
+    pub fn total(&self) -> u64 {
+        self.components().iter().sum()
+    }
+
+    /// Largest component's name, lowest [`BLAME_COMPONENTS`] index on
+    /// ties; `"-"` for an all-zero vector.
+    pub fn dominant(&self) -> &'static str {
+        dominant_of(&self.components())
+    }
+}
+
+fn dominant_of(c: &[u64; 7]) -> &'static str {
+    let mut best = 0usize;
+    for (i, &v) in c.iter().enumerate() {
+        if v > c[best] {
+            best = i;
+        }
+    }
+    if c[best] == 0 {
+        "-"
+    } else {
+        BLAME_COMPONENTS[best]
+    }
+}
+
+/// Decompose one completed request. All arguments are absolute cycle
+/// stamps except `fault_cycles` (total redelivery loss accrued by the
+/// front-end) and the two `(ddr, d2d)` pairs — cumulative exposed-stall
+/// counter deltas over the prefill window `[first_sched, first_token]`
+/// and the decode window `[first_token, finish]` respectively.
+///
+/// Every subtraction is clamped so the telescoping holds for any input;
+/// in a well-formed run the clamps are no-ops (stall deltas can never
+/// exceed the clock delta they accrued under).
+pub fn request_blame(
+    arrival: u64,
+    ready: u64,
+    first_sched: u64,
+    first_token: u64,
+    finish: u64,
+    fault_cycles: u64,
+    prefill_stall: (u64, u64),
+    decode_stall: (u64, u64),
+) -> BlameVec {
+    let ready = ready.clamp(arrival, finish.max(arrival));
+    let fs = first_sched.clamp(ready, finish.max(ready));
+    let ft = first_token.clamp(fs, finish.max(fs));
+    let pre = ready - arrival;
+    let fault_retry = fault_cycles.min(pre);
+    let link = pre - fault_retry;
+    let queue = fs - ready;
+    let w1 = ft - fs;
+    let ddr1 = prefill_stall.0.min(w1);
+    let d2d1 = prefill_stall.1.min(w1 - ddr1);
+    let w2 = finish.max(ft) - ft;
+    let ddr2 = decode_stall.0.min(w2);
+    let d2d2 = decode_stall.1.min(w2 - ddr2);
+    BlameVec {
+        queue,
+        link,
+        prefill_compute: w1 - ddr1 - d2d1,
+        decode_compute: w2 - ddr2 - d2d2,
+        ddr_stall: ddr1 + ddr2,
+        d2d_stall: d2d1 + d2d2,
+        fault_retry,
+    }
+}
+
+/// Summed blame over all completed requests — the fold that lands on
+/// `ServeMetrics::blame` / `ClusterMetrics::blame`. Integer adds, so
+/// merging per-package totals is order-invariant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlameTotals {
+    /// Completed requests folded in.
+    pub n: u64,
+    pub queue: u64,
+    pub link: u64,
+    pub prefill_compute: u64,
+    pub decode_compute: u64,
+    pub ddr_stall: u64,
+    pub d2d_stall: u64,
+    pub fault_retry: u64,
+}
+
+impl BlameTotals {
+    pub fn fold(&mut self, v: &BlameVec) {
+        self.n += 1;
+        self.queue += v.queue;
+        self.link += v.link;
+        self.prefill_compute += v.prefill_compute;
+        self.decode_compute += v.decode_compute;
+        self.ddr_stall += v.ddr_stall;
+        self.d2d_stall += v.d2d_stall;
+        self.fault_retry += v.fault_retry;
+    }
+
+    pub fn merge(&mut self, o: &BlameTotals) {
+        self.n += o.n;
+        self.queue += o.queue;
+        self.link += o.link;
+        self.prefill_compute += o.prefill_compute;
+        self.decode_compute += o.decode_compute;
+        self.ddr_stall += o.ddr_stall;
+        self.d2d_stall += o.d2d_stall;
+        self.fault_retry += o.fault_retry;
+    }
+
+    pub fn components(&self) -> [u64; 7] {
+        [
+            self.queue,
+            self.link,
+            self.prefill_compute,
+            self.decode_compute,
+            self.ddr_stall,
+            self.d2d_stall,
+            self.fault_retry,
+        ]
+    }
+
+    /// Equals the sum of end-to-end latencies of the folded requests.
+    pub fn total(&self) -> u64 {
+        self.components().iter().sum()
+    }
+
+    /// Largest summed component, lowest index on ties; `"-"` when empty.
+    pub fn dominant(&self) -> &'static str {
+        dominant_of(&self.components())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::trace::Span;
+
+    fn tl(spans: &[(usize, ActivityKind, u64, u64)], n: usize) -> Timeline {
+        let mut t = Timeline::new(n, true);
+        for &(c, kind, s, e) in spans {
+            t.record(Span { chiplet: c, kind, start: s, end: e, expert: 0 });
+        }
+        t
+    }
+
+    #[test]
+    fn interval_algebra_measures() {
+        let a = normalize(vec![(0, 10), (5, 20), (30, 40)]);
+        assert_eq!(a, vec![(0, 20), (30, 40)]);
+        assert_eq!(measure(&a), 30);
+        let b = normalize(vec![(15, 35)]);
+        let d = subtract(&a, &b);
+        assert_eq!(d, vec![(0, 15), (35, 40)]);
+        assert_eq!(measure(&d), 20);
+        // Subtract nothing / everything.
+        assert_eq!(measure(&subtract(&a, &[])), 30);
+        assert_eq!(measure(&subtract(&a, &[(0, 100)])), 0);
+    }
+
+    #[test]
+    fn overlap_fully_hidden_and_fully_exposed() {
+        // DDR under compute: hidden. D2D after compute: exposed.
+        let t = tl(
+            &[
+                (0, ActivityKind::Compute, 0, 100),
+                (0, ActivityKind::DdrLoad, 0, 50),
+                (0, ActivityKind::D2dSend, 100, 130),
+            ],
+            1,
+        );
+        let o = layer_overlap(&t);
+        assert_eq!((o.xfer, o.hidden), (80, 50));
+        assert_eq!((o.ddr_exposed, o.d2d_exposed), (0, 30));
+        assert_eq!(o.xfer, o.hidden + o.ddr_exposed + o.d2d_exposed);
+        assert!((o.efficiency() - 0.625).abs() < 1e-12);
+        assert_eq!(o.active_mask, 0b1);
+    }
+
+    #[test]
+    fn overlap_picks_critical_chiplet_lowest_index_ties() {
+        // Chiplet 1 has the most activity; its fully-serial DDR load
+        // drives efficiency to 0.
+        let t = tl(
+            &[
+                (0, ActivityKind::Compute, 0, 10),
+                (1, ActivityKind::Compute, 0, 10),
+                (1, ActivityKind::DdrLoad, 10, 30),
+            ],
+            2,
+        );
+        let o = layer_overlap(&t);
+        assert_eq!((o.xfer, o.hidden), (20, 0));
+        assert_eq!(o.efficiency(), 0.0);
+        assert_eq!(o.active_mask, 0b11);
+        // No transfers at all: efficiency 1.0 by convention.
+        let t = tl(&[(0, ActivityKind::Compute, 0, 10)], 2);
+        let o = layer_overlap(&t);
+        assert_eq!(o.xfer, 0);
+        assert_eq!(o.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn overlap_hidden_bounded_by_compute_busy() {
+        let t = tl(
+            &[
+                (0, ActivityKind::Compute, 10, 40),
+                (0, ActivityKind::DdrLoad, 0, 25),
+                (0, ActivityKind::D2dRecv, 20, 60),
+            ],
+            1,
+        );
+        let o = layer_overlap(&t);
+        assert!(o.hidden <= t.compute_busy(0));
+        assert!(o.hidden <= o.xfer);
+        assert_eq!(o.xfer, o.hidden + o.ddr_exposed + o.d2d_exposed);
+    }
+
+    #[test]
+    fn blame_telescopes_exactly() {
+        let v = request_blame(100, 150, 180, 400, 900, 20, (30, 10), (100, 0));
+        assert_eq!(v.total(), 800);
+        assert_eq!(v.link, 30);
+        assert_eq!(v.fault_retry, 20);
+        assert_eq!(v.queue, 30);
+        assert_eq!(v.prefill_compute, 220 - 40);
+        assert_eq!(v.decode_compute, 500 - 100);
+        assert_eq!(v.ddr_stall, 130);
+        assert_eq!(v.d2d_stall, 10);
+    }
+
+    #[test]
+    fn blame_clamps_degenerate_inputs() {
+        // Stall deltas larger than their windows, milestones out of
+        // order: the telescoping must still hold exactly.
+        for (a, r, fs, ft, f) in
+            [(0, 10, 5, 50, 40), (7, 7, 7, 7, 7), (0, 100, 100, 100, 90)]
+        {
+            let v = request_blame(a, r, fs, ft, f, u64::MAX, (u64::MAX, u64::MAX), (1, 1));
+            assert_eq!(v.total(), f.max(a) - a, "telescoping broke for {:?}", (a, r, fs, ft, f));
+        }
+    }
+
+    #[test]
+    fn dominant_is_tie_broken_by_component_order() {
+        let mut t = BlameTotals::default();
+        assert_eq!(t.dominant(), "-");
+        t.fold(&BlameVec { queue: 5, decode_compute: 5, ..Default::default() });
+        assert_eq!(t.dominant(), "queue");
+        t.fold(&BlameVec { decode_compute: 1, ..Default::default() });
+        assert_eq!(t.dominant(), "decode_compute");
+        assert_eq!(t.n, 2);
+        assert_eq!(t.total(), 11);
+    }
+
+    #[test]
+    fn totals_merge_is_order_invariant() {
+        let a = {
+            let mut t = BlameTotals::default();
+            t.fold(&request_blame(0, 10, 20, 40, 80, 4, (3, 2), (5, 0)));
+            t
+        };
+        let b = {
+            let mut t = BlameTotals::default();
+            t.fold(&request_blame(5, 5, 9, 9, 9, 0, (0, 0), (0, 0)));
+            t
+        };
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.total(), a.total() + b.total());
+    }
+}

@@ -81,6 +81,9 @@ pub fn chrome_trace(rec: &TraceRecorder) -> Json {
             EventKind::Instant => {
                 events.push(base("i", vec![("s", Json::Str("t".into()))]));
             }
+            EventKind::Counter => {
+                events.push(base("C", vec![]));
+            }
             EventKind::Async { id, dur } => {
                 events.push(base("b", vec![("id", Json::Num(id as f64))]));
                 // End event: same (cat, id) pairing, no args.
@@ -157,6 +160,23 @@ mod tests {
         assert_eq!(evs[4].get("id").unwrap(), evs[5].get("id").unwrap());
         assert_eq!(evs[4].get("cat").unwrap(), evs[5].get("cat").unwrap());
         assert_eq!(evs[5].get("ts").unwrap().as_f64().unwrap(), 90.0);
+    }
+
+    #[test]
+    fn counter_samples_export_as_ph_c() {
+        let mut r = TraceRecorder::new();
+        r.set_freq(1e6);
+        r.counter(1, 0, "counter", "queue_depth", 42, 7);
+        let s = chrome_trace_string(&r);
+        let j = Json::parse(&s).expect("counter trace must parse");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("ph").unwrap().as_str().unwrap(), "C");
+        assert_eq!(evs[0].get("ts").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(
+            evs[0].get("args").unwrap().get("value").unwrap().as_f64().unwrap(),
+            7.0
+        );
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! The weighted serving health score: "which design wins, and why".
+//!
+//! [`health_scores`] turns a grid of sweep cells into comparable scores
+//! in `[0, 1]`: each axis is min-max normalized **across the grid**
+//! (lower-is-better axes inverted, degenerate axes pinned to a neutral
+//! 0.5), then combined as a weighted mean under
+//! [`HealthWeights`](crate::config::HealthWeights). Normalizing across
+//! the grid makes the score a *ranking* device — it answers "which cell
+//! wins under these priorities", not "is this cell good in absolute
+//! terms".
+//!
+//! [`health_tables`] renders the standard `health_report` /
+//! `best_config` pair every consumer (`repro report`, `--report` on the
+//! sweeps) shares, so the CSV schema is defined in exactly one place.
+//!
+//! Determinism: scores are a pure fold over the input slice in order —
+//! no maps, no RNG — so any caller that builds its grid in a fixed order
+//! (all sweeps do) gets bit-identical output at any thread count.
+
+use crate::config::HealthWeights;
+use crate::util::Table;
+
+/// One sweep cell's raw health axes, in the canonical order of
+/// [`HealthWeights::as_array`]. Directions: `goodput_rps` and
+/// `overlap_eff` are higher-better; the rest are lower-better.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HealthInput {
+    pub goodput_rps: f64,
+    /// p99 TTFT in ms (the sweep's SLO-defining tail).
+    pub tail_ms: f64,
+    /// Fraction of critical-chiplet transfer cycles hidden under
+    /// compute, from `obs::blame`.
+    pub overlap_eff: f64,
+    /// Busy imbalance (max/mean; 1.0 = even).
+    pub imbalance: f64,
+    /// Link traffic per completed request, MiB.
+    pub link_mib: f64,
+    /// Mean in-flight batch tokens (memory-occupancy proxy until the
+    /// L4.5 allocator lands).
+    pub mem_tokens: f64,
+}
+
+impl HealthInput {
+    fn axes(&self) -> [f64; 6] {
+        [
+            self.goodput_rps,
+            self.tail_ms,
+            self.overlap_eff,
+            self.imbalance,
+            self.link_mib,
+            self.mem_tokens,
+        ]
+    }
+}
+
+/// Whether each axis is higher-better, in canonical order.
+const HIGHER_BETTER: [bool; 6] = [true, false, true, false, false, false];
+
+/// Score every cell of a grid. Returns one score in `[0, 1]` per input,
+/// in input order. Non-finite axis values score 0 on that axis (worst),
+/// so a NaN never propagates into the report. Weights must pass
+/// [`HealthWeights::validate`]; this asserts it.
+pub fn health_scores(inputs: &[HealthInput], w: &HealthWeights) -> Vec<f64> {
+    w.validate().expect("invalid health weights");
+    if inputs.is_empty() {
+        return Vec::new();
+    }
+    let weights = w.as_array();
+    let wsum: f64 = weights.iter().sum();
+    // Per-axis finite min/max across the grid.
+    let mut lo = [f64::INFINITY; 6];
+    let mut hi = [f64::NEG_INFINITY; 6];
+    for i in inputs {
+        for (a, &v) in i.axes().iter().enumerate() {
+            if v.is_finite() {
+                lo[a] = lo[a].min(v);
+                hi[a] = hi[a].max(v);
+            }
+        }
+    }
+    inputs
+        .iter()
+        .map(|i| {
+            let mut score = 0.0;
+            for (a, &v) in i.axes().iter().enumerate() {
+                let n = if !v.is_finite() {
+                    0.0
+                } else if hi[a] > lo[a] {
+                    let m = (v - lo[a]) / (hi[a] - lo[a]);
+                    if HIGHER_BETTER[a] { m } else { 1.0 - m }
+                } else {
+                    0.5
+                };
+                score += weights[a] * n;
+            }
+            score / wsum
+        })
+        .collect()
+}
+
+/// One labeled grid cell for the report tables.
+#[derive(Clone, Debug)]
+pub struct HealthCell {
+    /// Values for the caller's label columns (e.g. scheme, router,
+    /// packages) — must match `label_cols` in length.
+    pub label: Vec<String>,
+    pub input: HealthInput,
+    /// The cell's dominant blame component (`BlameTotals::dominant`).
+    pub dominant: &'static str,
+}
+
+/// Build the shared `(health_report, best_config)` table pair: every
+/// cell with its raw axes, score, and dominant blame term, plus a
+/// one-row table naming the winner (highest score, lowest index ties).
+pub fn health_tables(
+    title: &str,
+    label_cols: &[&str],
+    cells: &[HealthCell],
+    w: &HealthWeights,
+) -> (Table, Table) {
+    let scores = health_scores(&cells.iter().map(|c| c.input).collect::<Vec<_>>(), w);
+    let mut cols: Vec<&str> = label_cols.to_vec();
+    cols.extend([
+        "goodput_rps",
+        "tail_ms",
+        "overlap_eff",
+        "imbalance",
+        "link_mib_per_req",
+        "mem_tokens",
+        "health",
+        "dominant_blame",
+    ]);
+    let mut report = Table::new(title, &cols);
+    for (c, &s) in cells.iter().zip(&scores) {
+        assert_eq!(c.label.len(), label_cols.len(), "health cell label arity");
+        let mut row = c.label.clone();
+        row.extend([
+            format!("{:.2}", c.input.goodput_rps),
+            format!("{:.2}", c.input.tail_ms),
+            format!("{:.4}", c.input.overlap_eff),
+            format!("{:.3}", c.input.imbalance),
+            format!("{:.3}", c.input.link_mib),
+            format!("{:.1}", c.input.mem_tokens),
+            format!("{s:.4}"),
+            c.dominant.to_string(),
+        ]);
+        report.row(row);
+    }
+    let mut best_cols: Vec<&str> = label_cols.to_vec();
+    best_cols.extend(["health", "dominant_blame"]);
+    let mut best_t = Table::new(
+        &format!(
+            "best_config: weights goodput={} tail={} overlap={} imbalance={} link={} memory={}",
+            w.goodput, w.tail, w.overlap, w.imbalance, w.link, w.memory
+        ),
+        &best_cols,
+    );
+    let mut best = None;
+    for (i, &s) in scores.iter().enumerate() {
+        if best.map_or(true, |(_, bs)| s > bs) {
+            best = Some((i, s));
+        }
+    }
+    if let Some((i, s)) = best {
+        let mut row = cells[i].label.clone();
+        row.extend([format!("{s:.4}"), cells[i].dominant.to_string()]);
+        best_t.row(row);
+    }
+    (report, best_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> HealthInput {
+        HealthInput {
+            goodput_rps: 100.0,
+            tail_ms: 10.0,
+            overlap_eff: 0.5,
+            imbalance: 1.2,
+            link_mib: 2.0,
+            mem_tokens: 500.0,
+        }
+    }
+
+    #[test]
+    fn scores_in_unit_interval_and_deterministic() {
+        let grid = vec![
+            base(),
+            HealthInput { goodput_rps: 200.0, tail_ms: 30.0, ..base() },
+            HealthInput { overlap_eff: 0.9, mem_tokens: 900.0, ..base() },
+        ];
+        let w = HealthWeights::default();
+        let s = health_scores(&grid, &w);
+        assert_eq!(s.len(), 3);
+        for &v in &s {
+            assert!((0.0..=1.0).contains(&v), "score out of range: {v}");
+        }
+        assert_eq!(s, health_scores(&grid, &w));
+    }
+
+    #[test]
+    fn monotone_in_each_weighted_axis() {
+        // Improving any single axis of one cell (others fixed) never
+        // lowers that cell's score.
+        let grid = vec![base(), HealthInput { goodput_rps: 150.0, tail_ms: 20.0, ..base() }];
+        let w = HealthWeights {
+            goodput: 1.0,
+            tail: 1.0,
+            overlap: 1.0,
+            imbalance: 1.0,
+            link: 1.0,
+            memory: 1.0,
+        };
+        let before = health_scores(&grid, &w)[0];
+        let improvements = [
+            HealthInput { goodput_rps: 500.0, ..base() },
+            HealthInput { tail_ms: 1.0, ..base() },
+            HealthInput { overlap_eff: 1.0, ..base() },
+            HealthInput { imbalance: 1.0, ..base() },
+            HealthInput { link_mib: 0.0, ..base() },
+            HealthInput { mem_tokens: 10.0, ..base() },
+        ];
+        for (axis, better) in improvements.into_iter().enumerate() {
+            let s = health_scores(&[better, grid[1]], &w)[0];
+            assert!(s >= before - 1e-12, "axis {axis} not monotone: {s} < {before}");
+        }
+    }
+
+    #[test]
+    fn degenerate_axis_is_neutral_and_nan_scores_worst() {
+        // Single cell: every axis degenerates to 0.5 → score 0.5.
+        let s = health_scores(&[base()], &HealthWeights::default());
+        assert!((s[0] - 0.5).abs() < 1e-12);
+        // NaN tail scores 0 on that axis, and no NaN escapes.
+        let grid = vec![HealthInput { tail_ms: f64::NAN, ..base() }, base()];
+        let s = health_scores(&grid, &HealthWeights::default());
+        assert!(s.iter().all(|v| v.is_finite()));
+        assert!(s[0] < s[1]);
+    }
+
+    #[test]
+    fn zero_weight_drops_an_axis() {
+        let w = HealthWeights {
+            goodput: 1.0,
+            tail: 0.0,
+            overlap: 0.0,
+            imbalance: 0.0,
+            link: 0.0,
+            memory: 0.0,
+        };
+        // Worse tail but equal goodput: identical scores.
+        let grid = vec![base(), HealthInput { tail_ms: 99.0, ..base() }];
+        let s = health_scores(&grid, &w);
+        assert_eq!(s[0], s[1]);
+    }
+
+    #[test]
+    fn tables_name_the_winner_lowest_index_ties() {
+        let cells = vec![
+            HealthCell {
+                label: vec!["EP".into(), "jsq".into(), "2".into()],
+                input: base(),
+                dominant: "queue",
+            },
+            HealthCell {
+                label: vec!["FSE-DP".into(), "jsq".into(), "4".into()],
+                input: HealthInput { goodput_rps: 400.0, ..base() },
+                dominant: "decode_compute",
+            },
+        ];
+        let (report, best) = health_tables(
+            "t",
+            &["scheme", "router", "packages"],
+            &cells,
+            &HealthWeights::default(),
+        );
+        assert_eq!(report.n_rows(), 2);
+        assert_eq!(best.n_rows(), 1);
+        let csv = best.to_csv();
+        assert!(csv.contains("FSE-DP"), "winner missing: {csv}");
+        assert!(csv.contains("decode_compute"), "dominant blame missing: {csv}");
+    }
+}

@@ -12,6 +12,11 @@
 //!   `ServerSim::attach_trace` / `ClusterSim::attach_trace`.
 //! * [`profile`] — [`Accounting`]: record-time cycle attribution, exact
 //!   regardless of event-buffer retention, rendered via `util::table`.
+//! * [`blame`] — bottleneck attribution: per-layer overlap efficiency
+//!   (how much D2D/DDR latency compute actually hid) and per-request
+//!   blame vectors whose components telescope exactly to e2e.
+//! * [`health`] — the weighted serving health score + `best_config`
+//!   report over any sweep grid.
 //! * [`export`] — Chrome-trace-event JSON (`{"traceEvents":[...]}`),
 //!   byte-stable across identical runs.
 //!
@@ -19,11 +24,18 @@
 //! any simulation result bit — recording reads sim state, it never
 //! mutates it, and all timestamps are simulated cycles.
 
+pub mod blame;
 pub mod export;
+pub mod health;
 pub mod profile;
 pub mod trace;
 
+pub use blame::{
+    layer_overlap, overlap_efficiency, request_blame, BlameTotals, BlameVec, OverlapStats,
+    BLAME_COMPONENTS,
+};
 pub use export::{chrome_trace, chrome_trace_string, save_chrome_trace};
+pub use health::{health_scores, health_tables, HealthCell, HealthInput};
 pub use profile::{Accounting, ChipletBusy, Heat, PhaseTotals};
 pub use trace::{
     chiplet_tid, package_pid, EventKind, Pid, RequestSpan, Tid, TraceEvent, TraceHandle,

@@ -81,6 +81,10 @@ pub enum EventKind {
     /// `(cat, id)` — used where intervals overlap on one track
     /// (request lifecycles, link transfers).
     Async { id: u32, dur: u64 },
+    /// Counter sample (`ph:"C"`): Perfetto plots each named series from
+    /// the sample's `args` values (queue depth, batch tokens, idle
+    /// chiplets, overlap efficiency).
+    Counter,
 }
 
 /// One recorded event. `name`/`cat` are `&'static str` by design: record
@@ -233,6 +237,31 @@ impl TraceRecorder {
             return;
         }
         self.push(TraceEvent { pid, tid, cat, name, start: at, kind: EventKind::Instant, args });
+    }
+
+    /// Record one counter sample at `at`. Integer values only, so the
+    /// exported series is byte-stable (no float formatting drift).
+    pub fn counter(
+        &mut self,
+        pid: Pid,
+        tid: Tid,
+        cat: &'static str,
+        name: &'static str,
+        at: SimTime,
+        value: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent {
+            pid,
+            tid,
+            cat,
+            name,
+            start: at,
+            kind: EventKind::Counter,
+            args: vec![("value", value)],
+        });
     }
 
     /// Record an async (overlappable) span; allocates a fresh async id.
@@ -414,6 +443,7 @@ mod tests {
         let mut r = TraceRecorder::disabled();
         r.span(0, 0, "c", "n", 0, 10, vec![]);
         r.instant(0, 0, "c", "n", 5, vec![]);
+        r.counter(0, 0, "c", "n", 5, 1);
         r.name_process(0, "p");
         let mut tl = Timeline::new(1, true);
         tl.record(Span { chiplet: 0, kind: ActivityKind::Compute, start: 0, end: 9, expert: 2 });

@@ -29,16 +29,21 @@
 //! `tests/perf_fastpath.rs`). Eviction is deterministic FIFO on insertion
 //! order, so the hit/miss sequence is reproducible run-to-run as well.
 
+use crate::obs::blame::OverlapStats;
 use crate::workload::LayerWorkload;
 use std::collections::{HashMap, VecDeque};
 
 /// Timing/traffic outcome of one memoized MoE layer — exactly the fields
-/// the serving loop consumes from `LayerResult`.
+/// the serving loop consumes from `LayerResult`, plus the critical-chiplet
+/// overlap stats `obs::blame` derives from the timeline on the miss (all
+/// exact integers, so a memo hit replays the same overlap accounting the
+/// fresh run produced — the memo-on/off bit-identity pin covers them).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerOutcome {
     pub makespan: u64,
     pub ddr_bytes: u64,
     pub d2d_bytes: u64,
+    pub overlap: OverlapStats,
 }
 
 /// Bounded exact-key memo with FIFO eviction and hit/miss accounting.
@@ -154,24 +159,45 @@ mod tests {
         assert_eq!(a, LayerMemo::key_of(&wl(&[&[4, 0, 0, 0]])));
     }
 
+    fn outcome(makespan: u64, ddr_bytes: u64, d2d_bytes: u64) -> LayerOutcome {
+        LayerOutcome { makespan, ddr_bytes, d2d_bytes, overlap: OverlapStats::default() }
+    }
+
     #[test]
     fn hit_and_miss_accounting() {
         let mut m = LayerMemo::new(8);
         let k = LayerMemo::key_of(&wl(&[&[1, 2]]));
         assert_eq!(m.get(&k), None);
-        m.insert(k.clone(), LayerOutcome { makespan: 10, ddr_bytes: 20, d2d_bytes: 30 });
-        assert_eq!(
-            m.get(&k),
-            Some(LayerOutcome { makespan: 10, ddr_bytes: 20, d2d_bytes: 30 })
-        );
+        m.insert(k.clone(), outcome(10, 20, 30));
+        assert_eq!(m.get(&k), Some(outcome(10, 20, 30)));
         assert_eq!((m.hits, m.misses), (1, 1));
+    }
+
+    #[test]
+    fn hit_replays_overlap_stats() {
+        let mut m = LayerMemo::new(8);
+        let k = LayerMemo::key_of(&wl(&[&[1, 2]]));
+        let v = LayerOutcome {
+            makespan: 10,
+            ddr_bytes: 20,
+            d2d_bytes: 30,
+            overlap: OverlapStats {
+                xfer: 8,
+                hidden: 5,
+                ddr_exposed: 2,
+                d2d_exposed: 1,
+                active_mask: 0b11,
+            },
+        };
+        m.insert(k.clone(), v);
+        assert_eq!(m.get(&k), Some(v));
     }
 
     #[test]
     fn fifo_eviction_bounds_size() {
         let mut m = LayerMemo::new(2);
         for i in 0..5u32 {
-            m.insert(vec![i], LayerOutcome { makespan: i as u64, ddr_bytes: 0, d2d_bytes: 0 });
+            m.insert(vec![i], outcome(i as u64, 0, 0));
         }
         assert_eq!(m.len(), 2);
         // Oldest evicted, newest present.
@@ -182,10 +208,10 @@ mod tests {
     #[test]
     fn reinsert_does_not_duplicate_order() {
         let mut m = LayerMemo::new(2);
-        m.insert(vec![1], LayerOutcome { makespan: 1, ddr_bytes: 0, d2d_bytes: 0 });
-        m.insert(vec![1], LayerOutcome { makespan: 1, ddr_bytes: 0, d2d_bytes: 0 });
-        m.insert(vec![2], LayerOutcome { makespan: 2, ddr_bytes: 0, d2d_bytes: 0 });
-        m.insert(vec![3], LayerOutcome { makespan: 3, ddr_bytes: 0, d2d_bytes: 0 });
+        m.insert(vec![1], outcome(1, 0, 0));
+        m.insert(vec![1], outcome(1, 0, 0));
+        m.insert(vec![2], outcome(2, 0, 0));
+        m.insert(vec![3], outcome(3, 0, 0));
         assert_eq!(m.len(), 2);
         assert!(m.get(&[3]).is_some());
     }

@@ -8,6 +8,7 @@
 
 use super::request::Request;
 use crate::config::{HardwareConfig, SloConfig};
+use crate::obs::blame::BlameTotals;
 use crate::util::{Dist, SeriesSet, TelemetryMode};
 
 /// Aggregated metrics of one serving run. Latencies are recorded in
@@ -24,6 +25,10 @@ pub struct ServeMetrics {
     pub queue_depth: Dist,
     /// Tokens scheduled per iteration (batch efficiency).
     pub batch_tokens: Dist,
+    /// Per-iteration overlap efficiency: the fraction of critical-chiplet
+    /// D2D+DDR cycles hidden under compute, from `obs::blame` (1.0 when
+    /// an iteration moved no transfer traffic).
+    pub overlap_eff: Dist,
     /// Bounded per-iteration traces ("queue_depth", "batch_tokens",
     /// "busy_frac", "memo_hit_rate") for time-series CSV export; fixed
     /// capacity via stride-doubling decimation.
@@ -48,6 +53,18 @@ pub struct ServeMetrics {
     pub memo_hits: u64,
     /// Layer-memo cache misses (every layer simulated live counts once).
     pub memo_misses: u64,
+    /// Critical-chiplet transfer cycles across all MoE layers (the
+    /// overlap-efficiency denominator; exact integer fold).
+    pub moe_xfer_cycles: u64,
+    /// Portion of `moe_xfer_cycles` hidden under compute (numerator).
+    pub moe_hidden_cycles: u64,
+    /// Exposed DDR cycles (un-hidden loads + DDR-slowdown penalties).
+    pub ddr_stall_cycles: u64,
+    /// Exposed D2D cycles.
+    pub d2d_stall_cycles: u64,
+    /// Summed per-request blame vectors over completed requests; each
+    /// vector telescopes exactly to that request's e2e cycles.
+    pub blame: BlameTotals,
 }
 
 impl ServeMetrics {
@@ -59,6 +76,7 @@ impl ServeMetrics {
             e2e_us: Dist::new(mode),
             queue_depth: Dist::new(mode),
             batch_tokens: Dist::new(mode),
+            overlap_eff: Dist::new(mode),
             ..Default::default()
         }
     }
@@ -68,7 +86,7 @@ impl ServeMetrics {
         self.ttft_us.mode()
     }
 
-    /// Retained distribution memory cells across all five recorders —
+    /// Retained distribution memory cells across all six recorders —
     /// O(completed requests) in exact mode, constant in sketch mode.
     pub fn dist_mem_cells(&self) -> usize {
         self.ttft_us.mem_cells()
@@ -76,6 +94,7 @@ impl ServeMetrics {
             + self.e2e_us.mem_cells()
             + self.queue_depth.mem_cells()
             + self.batch_tokens.mem_cells()
+            + self.overlap_eff.mem_cells()
     }
 
     pub fn record_completion(&mut self, r: &Request, freq_hz: f64) {
@@ -124,6 +143,19 @@ impl ServeMetrics {
             return 0.0;
         }
         self.memo_hits as f64 / total as f64
+    }
+
+    /// Aggregate overlap efficiency over the whole run: the exact ratio
+    /// of hidden to total critical-chiplet transfer cycles (1.0 when no
+    /// MoE layer moved transfer traffic). Always within `[0, 1]`.
+    pub fn overlap_efficiency(&self) -> f64 {
+        crate::obs::blame::overlap_efficiency(self.moe_xfer_cycles, self.moe_hidden_cycles)
+    }
+
+    /// Largest summed blame component of completed requests (`"-"` when
+    /// none completed).
+    pub fn dominant_blame(&self) -> &'static str {
+        self.blame.dominant()
     }
 
     pub fn p99_ttft_ms(&self) -> f64 {

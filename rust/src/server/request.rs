@@ -49,6 +49,12 @@ pub struct Request {
     /// front-end when a crashed package wipes this request's KV); once it
     /// exceeds the fault retry budget the request is accounted as failed.
     pub retries: u32,
+    /// Cycles this request has lost to crash-recovery redelivery (wasted
+    /// progress + parked waits), accrued by the cluster front-end at each
+    /// non-fresh redelivery. Feeds the `fault_retry` component of the
+    /// `obs::blame` vector; survives [`Request::lose_kv`] — it is the
+    /// across-retries ledger.
+    pub fault_blame_cycles: u64,
 }
 
 impl Request {
@@ -66,6 +72,7 @@ impl Request {
             first_token_cycles: None,
             finish_cycles: None,
             retries: 0,
+            fault_blame_cycles: 0,
         }
     }
 
@@ -138,12 +145,14 @@ mod tests {
         r.state = RequestState::Decode;
         r.first_token_cycles = Some(9000);
         r.retries = 1;
+        r.fault_blame_cycles = 7500;
         r.lose_kv();
         assert_eq!(r.state, RequestState::Queued);
         assert_eq!((r.prefilled, r.decoded), (0, 0));
         assert_eq!(r.first_token_cycles, None);
         // Identity and accounting anchors survive the wipe.
         assert_eq!((r.id, r.arrival_cycles, r.retries), (3, 500, 1));
+        assert_eq!(r.fault_blame_cycles, 7500);
         assert_eq!(r.remaining_prefill(), 32);
     }
 

@@ -135,6 +135,21 @@ impl ContinuousBatcher {
         plan
     }
 
+    /// Ids of still-running requests whose first output token completed
+    /// exactly at `now` — i.e. the prefill-completing iteration just ran.
+    /// In admission order. The blame accounting snapshots its cumulative
+    /// stall counters here, splitting each request's active time into a
+    /// prefill window and a decode window. Requests that *finish* in the
+    /// same iteration are not listed (they left `running`); their decode
+    /// window is empty, so no snapshot is needed.
+    pub fn crossed_first_token(&self, now: u64) -> Vec<u32> {
+        self.running
+            .iter()
+            .filter(|r| r.first_token_cycles == Some(now))
+            .map(|r| r.id)
+            .collect()
+    }
+
     /// Advance request state after the iteration carrying `plan` finished
     /// at `now` (cycles). Returns the requests completed this iteration.
     pub fn complete_iteration(&mut self, plan: &[RequestChunk], now: u64) -> Vec<Request> {
@@ -289,6 +304,23 @@ mod tests {
         assert_eq!(drained[2].prefilled, 32); // progress intact; caller wipes it
         assert!(!b.has_work());
         assert_eq!(b.unfinished(), 0);
+    }
+
+    #[test]
+    fn crossed_first_token_lists_prefill_completions_only() {
+        let mut b = batcher();
+        b.enqueue(Request::new(1, 0, 3, 3)); // will keep decoding
+        b.enqueue(Request::new(2, 0, 3, 1)); // finishes at first token
+        let p = b.next_batch();
+        b.complete_iteration(&p, 100);
+        // Request 1 crossed first-token and stays running; request 2
+        // finished in the same iteration and already left.
+        assert_eq!(b.crossed_first_token(100), vec![1]);
+        assert_eq!(b.crossed_first_token(999), Vec::<u32>::new());
+        let p = b.next_batch();
+        b.complete_iteration(&p, 200);
+        // Decode iterations never re-report the crossing.
+        assert_eq!(b.crossed_first_token(200), Vec::<u32>::new());
     }
 
     #[test]

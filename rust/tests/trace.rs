@@ -149,7 +149,7 @@ fn exported_chrome_trace_parses_and_spans_nest() {
                 let (_, bts) = begins.remove(b.expect("async end without begin"));
                 assert!(ts >= bts, "async span ends before it starts");
             }
-            "i" | "M" => {}
+            "i" | "M" | "C" => {}
             other => panic!("unexpected ph {other}"),
         }
     }
@@ -265,6 +265,47 @@ fn recorder_is_bounded_and_counts_drops() {
         assert!(rec.dropped() > 0, "tiny cap should have dropped events");
         // Accounting is folded at record time: still complete.
         assert_eq!(rec.acct.requests.n as usize, m.completed);
+    });
+}
+
+#[test]
+fn per_iteration_counter_tracks_are_recorded_and_sane() {
+    let (m, handle) = run_serve(LoadMode::Burst { n_requests: 8 }, true);
+    handle.unwrap().with(|rec| {
+        let hw = presets::mcm_2x2();
+        for name in ["queue_depth", "batch_tokens", "idle_chiplets", "overlap_pct"] {
+            let samples: Vec<u64> = rec
+                .events()
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Counter) && e.name == name)
+                .map(|e| e.args[0].1)
+                .collect();
+            // One sample per scheduler iteration, on every track.
+            assert_eq!(
+                samples.len(),
+                m.iterations,
+                "counter '{name}' missing iterations"
+            );
+            match name {
+                "idle_chiplets" => {
+                    assert!(samples.iter().all(|&v| v <= hw.n_chiplets() as u64))
+                }
+                "overlap_pct" => assert!(samples.iter().all(|&v| v <= 100)),
+                _ => {}
+            }
+        }
+        // The exported trace carries them as Perfetto "C" samples.
+        let s = chrome_trace_string(rec);
+        let j = Json::parse(&s).unwrap();
+        let n_c = j
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "C")
+            .count();
+        assert_eq!(n_c, 4 * m.iterations);
     });
 }
 

@@ -19,8 +19,10 @@ REGRESSION_FRAC = 0.10
 # give them a wider noise floor so they track the trajectory without
 # crying wolf. `trace_disabled_overhead` rides the same floor: it exists to
 # catch the disabled-trace Option branch growing real work, not scheduler
-# noise in an 8-request burst.
-MICRO_OP_PREFIXES = ("sketch_", "summary_quantile", "trace_disabled_overhead")
+# noise in an 8-request burst. `blame_fold` and `health_score` are pure
+# arithmetic folds of the same sub-microsecond scale.
+MICRO_OP_PREFIXES = ("sketch_", "summary_quantile", "trace_disabled_overhead",
+                     "blame_fold", "health_score")
 MICRO_OP_FRAC = 0.25
 
 

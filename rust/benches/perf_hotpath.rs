@@ -21,7 +21,10 @@
 //!     dirty-bit quantile cache;
 //!  8. the attribution folds (`blame_fold`, `health_score`) — the
 //!     per-completion blame accumulation and the report-grid scoring;
-//!  9. numeric serving latency through PJRT (when artifacts exist).
+//!  9. the decision-log paths (`decision_fold`, `replay_layer`) — the
+//!     per-stream fold into the bounded log and a full layer sim with
+//!     trajectory recording on (the `repro explain` replay unit);
+//! 10. numeric serving latency through PJRT (when artifacts exist).
 //!
 //! Besides the human-readable output, results are written to
 //! `BENCH_serve.json` (in the cargo working directory) as
@@ -491,6 +494,62 @@ fn bench_blame_health(records: &mut Vec<BenchRecord>) {
     records.push(BenchRecord { name: "health_score".into(), ops_per_s: scores_per_s, p99_us });
 }
 
+/// Decision-log hot paths: the fold-at-record-time accumulation
+/// (`decision_fold` — per-stream cost of `DecisionLog::fold`, batched
+/// like `blame_fold`) and a full layer simulation with trajectory
+/// recording on (`replay_layer` — the per-layer unit of `repro explain`'s
+/// counterfactual replay; compare against `flow_engine/FSE-DP+paired` to
+/// see the recording overhead).
+fn bench_decision_replay(records: &mut Vec<BenchRecord>) {
+    use expert_streaming::obs::DecisionLog;
+    const BATCH: usize = 4096;
+    let hw = presets::mcm_2x2();
+    let model = presets::qwen3_a3b();
+    let slices = default_num_slices(&model, &hw);
+    let geom = ExpertGeometry::new(&model, &hw, slices);
+    let mut gen = TraceGenerator::new(&model, Dataset::C4, 7);
+    let it = gen.iteration(0, 64);
+    let wl = shard_layer(
+        &it.layers[0],
+        model.n_experts,
+        hw.n_chiplets(),
+        &HashSet::new(),
+    );
+    let ctx = LayerCtx { hw: &hw, geom: &geom, workload: &wl, record_spans: false };
+
+    // 1. replay_layer: one recorded-trajectory layer sim per op.
+    let mut strategy = make_strategy(StrategyKind::FseDpPaired, slices);
+    strategy.set_record_decisions(true);
+    let recs = strategy.run_layer(&ctx).decisions; // warm-up, keeps records
+    assert!(!recs.is_empty(), "recording produced no decision records");
+    let (ops, p99) = measure(reps(200), || {
+        std::hint::black_box(strategy.run_layer(&ctx).decisions.len());
+    });
+    println!(
+        "[perf] replay layer (decisions on): {ops:>7.0} layer-sims/s   p99 {p99:>7.1} us/layer"
+    );
+    records.push(BenchRecord { name: "replay_layer".into(), ops_per_s: ops, p99_us: p99 });
+
+    // 2. decision_fold: per-stream fold cost into a capped log. The log is
+    //    rebuilt per batch so retention (the common case) stays on the
+    //    measured path instead of saturating into the dropped counter.
+    let one = &recs[..1];
+    let (b, p) = measure(reps(200), || {
+        let mut log = DecisionLog::default();
+        for _ in 0..BATCH {
+            log.fold(1, 0, 0, one);
+        }
+        std::hint::black_box(log.compute_cycles);
+    });
+    let folds_per_s = b * BATCH as f64;
+    let p99_us = p / BATCH as f64;
+    println!(
+        "[perf] telemetry {:<18} {:>12.0} ops/s (p99-batch/{BATCH} {:>9.5} us)",
+        "decision_fold", folds_per_s, p99_us
+    );
+    records.push(BenchRecord { name: "decision_fold".into(), ops_per_s: folds_per_s, p99_us });
+}
+
 fn bench_numeric_serving(records: &mut Vec<BenchRecord>) {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
@@ -554,6 +613,7 @@ fn main() {
     bench_cluster_step(&mut records);
     bench_telemetry(&mut records);
     bench_blame_health(&mut records);
+    bench_decision_replay(&mut records);
     bench_numeric_serving(&mut records);
     write_json(&records, memo_hit_rate);
 }

@@ -226,6 +226,7 @@ fn simulate_ep_layer(hw: &HardwareConfig, ctx: &LayerCtx, owner: &[usize]) -> La
         scheduler_cycles: 0,
         bound_cycles: crate::coordinator::roofline_bound_cycles(hw, ctx.geom, ctx.workload),
         timeline,
+        decisions: Vec::new(),
     }
 }
 

@@ -144,6 +144,7 @@ impl Strategy for NaiveFseDpStrategy {
             scheduler_cycles: 0,
             bound_cycles: crate::coordinator::roofline_bound_cycles(hw, geom, ctx.workload),
             timeline,
+            decisions: Vec::new(),
         }
     }
 }

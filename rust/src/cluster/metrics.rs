@@ -17,6 +17,7 @@
 use crate::config::SloConfig;
 use crate::fault::FaultStats;
 use crate::obs::blame::BlameTotals;
+use crate::obs::gating::GatingStats;
 use crate::server::ServeMetrics;
 use crate::util::Dist;
 
@@ -60,6 +61,12 @@ pub struct ClusterMetrics {
     pub d2d_stall_cycles: u64,
     /// Summed per-request blame vectors over all completed requests.
     pub blame: BlameTotals,
+    /// Measured gating histograms merged over packages (elementwise
+    /// integer adds — canonical under package permutation).
+    pub gating: GatingStats,
+    /// Per-package total expert-popularity histograms, package order —
+    /// the measured placement view `RouterKind::MeasuredAffinity` scored.
+    pub package_gating: Vec<Vec<u64>>,
     /// Fault-injection ledger (all-zero `Default` on fault-free runs; set
     /// by `ClusterSim` after aggregation so `aggregate`'s signature — and
     /// its positional call sites — stay unchanged).
@@ -86,9 +93,13 @@ impl ClusterMetrics {
             Dist::merge_canonical(&parts)
         };
         let mut blame = BlameTotals::default();
+        let mut gating = GatingStats::default();
         for m in &per_package {
             blame.merge(&m.blame);
+            gating.merge(&m.gating);
         }
+        let package_gating =
+            per_package.iter().map(|m| m.gating.histogram().to_vec()).collect();
         ClusterMetrics {
             ttft_us: merge(&|m| &m.ttft_us),
             tpot_us: merge(&|m| &m.tpot_us),
@@ -107,9 +118,20 @@ impl ClusterMetrics {
             ddr_stall_cycles: per_package.iter().map(|m| m.ddr_stall_cycles).sum(),
             d2d_stall_cycles: per_package.iter().map(|m| m.d2d_stall_cycles).sum(),
             blame,
+            gating,
+            package_gating,
             fault: FaultStats::default(),
             per_package,
         }
+    }
+
+    /// Cluster-wide gating-skew accessors (merged histograms).
+    pub fn gating_entropy(&self) -> f64 {
+        self.gating.entropy()
+    }
+
+    pub fn gating_top8_share(&self) -> f64 {
+        self.gating.top_share(8)
     }
 
     /// Request conservation under faults: every admitted request is
@@ -254,6 +276,8 @@ mod tests {
             m.d2d_stall_cycles = x;
             m.blame.merge(&BlameTotals { n: 1, queue: x, ddr_stall: 2 * x, ..Default::default() });
             m.overlap_eff.push(x as f64 / 30.0);
+            m.gating.fold(0, (x % 4) as usize, x);
+            m.gating.fold(1, 0, 2 * x);
         }
         let fwd = ClusterMetrics::aggregate(
             vec![a.clone(), b.clone(), c.clone()],
@@ -284,6 +308,13 @@ mod tests {
         );
         assert!((fwd.overlap_efficiency() - rev.overlap_efficiency()).abs() == 0.0);
         assert_eq!(fwd.dominant_blame(), "ddr_stall");
+        // Gating merges canonically; the per-package view permutes with
+        // the package list (it is positional by construction).
+        assert_eq!(fwd.gating, rev.gating);
+        assert_eq!(fwd.gating.total_tokens, 3 * (11 + 29 + 3));
+        assert!((fwd.gating_entropy() - rev.gating_entropy()).abs() == 0.0);
+        assert_eq!(fwd.package_gating.len(), 3);
+        assert_eq!(fwd.package_gating[0], rev.package_gating[2]);
     }
 
     #[test]

@@ -26,6 +26,17 @@ pub trait RouterPolicy {
     /// Pick a package for `req`; `loads[p]` is package p's outstanding
     /// request count. `loads` is never empty.
     fn route(&mut self, req: &Request, loads: &[usize]) -> usize;
+
+    /// True when the policy scores measured gating histograms — the
+    /// cluster sim then feeds `observe_gating` before each `route` call.
+    /// Default: no feed (zero overhead for the classic policies).
+    fn wants_measured_gating(&self) -> bool {
+        false
+    }
+
+    /// Latest measured per-expert popularity histogram of one package
+    /// (`ServeMetrics::gating`, summed over layers). Default: ignored.
+    fn observe_gating(&mut self, _package_idx: usize, _hist: &[u64]) {}
 }
 
 /// Build the policy a `ClusterConfig` names. `model` parameterizes the
@@ -42,6 +53,9 @@ pub fn make_router(
         RouterKind::Jsq => Box::new(JsqRouter),
         RouterKind::PowerOfTwo => Box::new(PowerOfTwoRouter::new(seed)),
         RouterKind::ExpertAffinity => Box::new(AffinityRouter::new(cluster, model, seed)),
+        RouterKind::MeasuredAffinity => {
+            Box::new(MeasuredAffinityRouter::new(cluster, model, seed))
+        }
     }
 }
 
@@ -214,6 +228,93 @@ impl RouterPolicy for AffinityRouter {
     }
 }
 
+/// Expert-affinity routing against **measured** per-package gating
+/// histograms (closes the L5 roadmap follow-up).
+///
+/// Same scoring shape as [`AffinityRouter`] — normalized histogram
+/// overlap minus a load penalty, strict-`>` lowest-index tie-break — but
+/// the per-package histogram is the package's *actual* measured expert
+/// popularity (`ServeMetrics::gating`, fed via `observe_gating` by the
+/// cluster sim at delivery time), not a router-owned sampled EMA. The
+/// router therefore reacts to where experts really ran, including drift
+/// the EMA model cannot see (memo churn, migration, fault re-shards).
+pub struct MeasuredAffinityRouter {
+    rng: Rng,
+    /// Zipf weights the request hints are drawn from (the front-end's
+    /// stand-in for a session's recent gating histogram).
+    hint_weights: Vec<f64>,
+    hint_k: usize,
+    /// Latest measured histogram per package, replaced on every feed.
+    measured: Vec<Vec<u64>>,
+    load_weight: f64,
+}
+
+impl MeasuredAffinityRouter {
+    pub fn new(
+        cluster: &ClusterConfig,
+        model: &MoeModelConfig,
+        seed: u64,
+    ) -> MeasuredAffinityRouter {
+        let hint_weights =
+            (0..model.n_experts).map(|e| 1.0 / (e + 1) as f64).collect();
+        MeasuredAffinityRouter {
+            // Distinct stream from AffinityRouter so the two policies
+            // draw independent hint sequences under one cluster seed.
+            rng: Rng::new(seed ^ 0x0AFF_1E5D_0AFF_1E5D),
+            hint_weights,
+            hint_k: model.top_k.max(1),
+            measured: Vec::new(),
+            load_weight: cluster.affinity_load_weight,
+        }
+    }
+}
+
+impl RouterPolicy for MeasuredAffinityRouter {
+    fn kind(&self) -> RouterKind {
+        RouterKind::MeasuredAffinity
+    }
+
+    fn wants_measured_gating(&self) -> bool {
+        true
+    }
+
+    fn observe_gating(&mut self, package_idx: usize, hist: &[u64]) {
+        if self.measured.len() <= package_idx {
+            self.measured.resize(package_idx + 1, Vec::new());
+        }
+        self.measured[package_idx].clear();
+        self.measured[package_idx].extend_from_slice(hist);
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[usize]) -> usize {
+        let n = loads.len();
+        if self.measured.len() < n {
+            self.measured.resize(n, Vec::new());
+        }
+        let hint = sample_topk(&mut self.rng, &self.hint_weights, self.hint_k);
+        let mean_load = loads.iter().sum::<usize>() as f64 / n as f64;
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..n {
+            let h = &self.measured[p];
+            let total: f64 = h.iter().sum::<u64>() as f64;
+            let overlap: f64 = hint
+                .iter()
+                .map(|&e| h.get(e as usize).copied().unwrap_or(0) as f64)
+                .sum::<f64>()
+                / (1e-9 + total);
+            let score =
+                overlap - self.load_weight * loads[p] as f64 / (1.0 + mean_load);
+            // Strict `>` keeps the lowest index on exact ties.
+            if score > best_score {
+                best_score = score;
+                best = p;
+            }
+        }
+        best
+    }
+}
+
 /// Lowest index of the minimum load.
 fn argmin(loads: &[usize]) -> usize {
     let mut best = 0usize;
@@ -261,6 +362,42 @@ mod tests {
         };
         assert_eq!(run(7), run(7));
         assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn measured_affinity_follows_fed_histograms_but_respects_load() {
+        let model = presets::tiny_moe();
+        let cluster = presets::cluster_pod();
+        let mut r = MeasuredAffinityRouter::new(&cluster, &model, 7);
+        assert!(r.wants_measured_gating());
+        // Package 1 measured hot on the popular low-id experts (the hint
+        // distribution's head), the rest cold: balanced loads must steer
+        // the bulk of traffic to package 1.
+        let n_e = model.n_experts;
+        let mut hot = vec![0u64; n_e];
+        for e in 0..n_e {
+            hot[e] = 1000 / (e as u64 + 1);
+        }
+        r.observe_gating(0, &vec![0; n_e]);
+        r.observe_gating(1, &hot);
+        r.observe_gating(2, &vec![0; n_e]);
+        r.observe_gating(3, &vec![0; n_e]);
+        let mut counts = [0usize; 4];
+        for _ in 0..200 {
+            counts[r.route(&req(), &[2, 2, 2, 2])] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 200);
+        assert!(
+            counts[1] > 150,
+            "measured histograms ignored: {counts:?}"
+        );
+        // Overloading the hot package flips the decision (load term).
+        let p = r.route(&req(), &[0, 1000, 0, 0]);
+        assert_ne!(p, 1, "load term ignored");
+        // No histograms at all: every score ties at 0 − load-term, so the
+        // lowest-index least-loaded package wins deterministically.
+        let mut cold = MeasuredAffinityRouter::new(&cluster, &model, 7);
+        assert_eq!(cold.route(&req(), &[5, 3, 3, 9]), 1);
     }
 
     #[test]

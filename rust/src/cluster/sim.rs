@@ -639,6 +639,14 @@ impl<'a> ClusterSim<'a> {
             return;
         }
         let loads: Vec<usize> = alive.iter().map(|&i| self.packages[i].load()).collect();
+        // Measured-affinity feed: hand the policy each alive package's
+        // current measured gating histogram (indexed within the alive
+        // list, matching `loads`). One bool check for every other policy.
+        if self.router.wants_measured_gating() {
+            for (ai, &i) in alive.iter().enumerate() {
+                self.router.observe_gating(ai, self.packages[i].measured_gating());
+            }
+        }
         let p = alive[self.router.route(&r, &loads).min(alive.len() - 1)];
         self.routed[p] += 1;
         if let Some(h) = &self.trace {

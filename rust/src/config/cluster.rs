@@ -28,6 +28,11 @@ pub enum RouterKind {
     /// memos stay hot; a load term keeps the specialization from
     /// collapsing onto one package.
     ExpertAffinity,
+    /// Expert-affinity scored against each package's *measured* gating
+    /// histogram (`ServeMetrics::gating`, fed back by the cluster sim at
+    /// delivery time) instead of the router's own sampled EMA — the
+    /// closed observability loop the decision-log PR adds.
+    MeasuredAffinity,
 }
 
 impl RouterKind {
@@ -38,6 +43,7 @@ impl RouterKind {
             RouterKind::Jsq => "JSQ",
             RouterKind::PowerOfTwo => "p2c",
             RouterKind::ExpertAffinity => "affinity",
+            RouterKind::MeasuredAffinity => "measured",
         }
     }
 
@@ -48,6 +54,7 @@ impl RouterKind {
             RouterKind::Jsq,
             RouterKind::PowerOfTwo,
             RouterKind::ExpertAffinity,
+            RouterKind::MeasuredAffinity,
         ]
     }
 
@@ -58,6 +65,7 @@ impl RouterKind {
             "jsq" | "shortest" => Some(RouterKind::Jsq),
             "p2c" | "power-of-two" | "po2" => Some(RouterKind::PowerOfTwo),
             "affinity" | "expert-affinity" => Some(RouterKind::ExpertAffinity),
+            "measured" | "measured-affinity" => Some(RouterKind::MeasuredAffinity),
             _ => None,
         }
     }
@@ -115,6 +123,11 @@ mod tests {
         assert_eq!(RouterKind::parse("round-robin"), Some(RouterKind::RoundRobin));
         assert_eq!(RouterKind::parse("affinity"), Some(RouterKind::ExpertAffinity));
         assert_eq!(RouterKind::parse("pass"), Some(RouterKind::PassThrough));
+        assert_eq!(RouterKind::parse("measured"), Some(RouterKind::MeasuredAffinity));
+        assert_eq!(
+            RouterKind::parse("measured-affinity"),
+            Some(RouterKind::MeasuredAffinity)
+        );
         assert_eq!(RouterKind::parse("bogus"), None);
     }
 

@@ -161,7 +161,9 @@ impl Overrides {
         }
         if let Some(v) = self.get("router") {
             cluster.router = RouterKind::parse(v)
-                .ok_or_else(|| format!("unknown router '{v}' (pass/rr/jsq/p2c/affinity)"))?;
+                .ok_or_else(|| {
+                    format!("unknown router '{v}' (pass/rr/jsq/p2c/affinity/measured)")
+                })?;
         }
         if let Some(v) = self.get_f64("serdes_gbps")? {
             cluster.serdes_gbps = v;

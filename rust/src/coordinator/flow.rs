@@ -40,13 +40,16 @@
 //! assignment changed.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use crate::config::HardwareConfig;
 use crate::coordinator::hw_scheduler::{mask_of, ChipletMask, Eit, Icv, SchedulerMeter};
 use crate::coordinator::paired_load::ExpertGroup;
 use crate::coordinator::trajectory::Trajectory;
 use crate::moe::{ExpertGeometry, ExpertId};
+use crate::obs::decision::{
+    intervals_intersect_measure, intervals_measure, union_intervals, DecisionRecord, HopRecord,
+};
 use crate::sim::{
     ActivityKind, BufferTracker, ChipletId, Mesh, SerialResource, SimTime, Span, Timeline,
 };
@@ -60,6 +63,11 @@ pub struct FlowConfig {
     pub rule5: bool,
     /// Record full activity spans (Fig 11/13) — costs memory.
     pub record_spans: bool,
+    /// Record one [`DecisionRecord`] per expert stream (trajectory, per-hop
+    /// queue-wait/transfer/compute, hidden-vs-exposed split). Off the
+    /// recording path this costs one bool check per hook site; recording
+    /// never changes event order, so results stay bit-identical.
+    pub record_decisions: bool,
 }
 
 /// Result of simulating one MoE layer under the flow engine.
@@ -75,6 +83,9 @@ pub struct LayerRun {
     pub d2d_bytes: u64,
     pub scheduler_cycles: u64,
     pub scheduler_decisions: u64,
+    /// One record per expert stream, in flow (group construction) order.
+    /// Empty unless `FlowConfig::record_decisions` was set.
+    pub decisions: Vec<DecisionRecord>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -152,6 +163,30 @@ struct SliceAt {
     slice: usize,
     /// Trajectory position (index into flow.traj) where the slice sits.
     pos: usize,
+    /// Cycle the slice became available at this station (load/arrival
+    /// time) — queue wait is compute-start minus this. Maintained
+    /// unconditionally (a `Copy` field costs nothing and keeps recording
+    /// off the decision path).
+    avail: SimTime,
+}
+
+/// Per-hop cycle accumulators of one recorded expert stream.
+#[derive(Clone, Copy, Debug, Default)]
+struct HopAcc {
+    wait: u64,
+    transfer: u64,
+    compute: u64,
+}
+
+/// Recording-only per-flow state (fresh per layer — the recording path is
+/// the traced path, so per-layer allocation is acceptable there).
+#[derive(Clone, Debug, Default)]
+struct FlowDec {
+    hops: Vec<HopAcc>,
+    /// Compute intervals of this stream, for the hidden/exposed split.
+    compute_iv: Vec<(u64, u64)>,
+    /// D2D transfer intervals of this stream.
+    xfer_iv: Vec<(u64, u64)>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -349,6 +384,12 @@ pub struct FlowEngine<'a> {
     makespan: SimTime,
     ddr_bytes: u64,
     d2d_bytes: u64,
+    /// Decision recording (`Some` iff `cfg.record_decisions`): one
+    /// accumulator per flow, indexed like `a.flows`.
+    decs: Option<Vec<FlowDec>>,
+    /// Park start times of blocked forwards, recording-only, keyed by
+    /// (flow, slice, src chiplet) like the forwards table.
+    parked_rec: BTreeMap<(usize, usize, ChipletId), SimTime>,
 }
 
 impl<'a> FlowEngine<'a> {
@@ -397,6 +438,16 @@ impl<'a> FlowEngine<'a> {
             arena.groups.push_back((gi, flow_ids));
         }
         arena.forwards.reset(arena.flows.len(), cfg.num_slices, n);
+        let decs = cfg.record_decisions.then(|| {
+            arena
+                .flows
+                .iter()
+                .map(|f| FlowDec {
+                    hops: vec![HopAcc::default(); f.traj.len()],
+                    ..FlowDec::default()
+                })
+                .collect()
+        });
         FlowEngine {
             hw,
             geom,
@@ -409,6 +460,8 @@ impl<'a> FlowEngine<'a> {
             makespan: 0,
             ddr_bytes: 0,
             d2d_bytes: 0,
+            decs,
+            parked_rec: BTreeMap::new(),
         }
     }
 
@@ -459,6 +512,7 @@ impl<'a> FlowEngine<'a> {
         debug_assert!(self.a.flows.iter().all(|f| f.done()), "layer did not drain");
         debug_assert!(self.a.buffers.drained(), "buffer bytes leaked");
         debug_assert_eq!(self.a.forwards.live, 0, "in-flight forwards leaked");
+        let decisions = self.finish_decisions();
         LayerRun {
             makespan: self.makespan,
             package_peak_weight_bytes: self.a.buffers.package_peak(),
@@ -469,7 +523,49 @@ impl<'a> FlowEngine<'a> {
             scheduler_cycles: self.meter.cycles,
             scheduler_decisions: self.meter.decisions,
             timeline: self.timeline,
+            decisions,
         }
+    }
+
+    /// Materialize the per-flow accumulators into [`DecisionRecord`]s, in
+    /// flow-index (group construction) order — deterministic because flow
+    /// indices are assigned at engine construction, never by event order.
+    /// Per-hop compute uses the exact expression charged to the
+    /// `Timeline`, so grouping hop compute by chiplet telescopes to
+    /// `Timeline::compute_busy`. `hidden`/`exposed` come from interval
+    /// unions: `hidden + exposed` can undershoot the per-hop transfer sum
+    /// when a stream's transfers overlap each other in wall time.
+    fn finish_decisions(&mut self) -> Vec<DecisionRecord> {
+        let Some(decs) = self.decs.take() else {
+            return Vec::new();
+        };
+        debug_assert!(self.parked_rec.is_empty(), "parked recording leaked");
+        let mut out = Vec::with_capacity(decs.len());
+        for (f, d) in self.a.flows.iter().zip(decs) {
+            let cu = union_intervals(&d.compute_iv);
+            let xu = union_intervals(&d.xfer_iv);
+            let hidden = intervals_intersect_measure(&cu, &xu);
+            let exposed = intervals_measure(&xu) - hidden;
+            out.push(DecisionRecord {
+                expert: f.expert,
+                tokens: f.traj.total_tokens(),
+                slices: f.n_slices() as u32,
+                hops: d
+                    .hops
+                    .iter()
+                    .enumerate()
+                    .map(|(i, h)| HopRecord {
+                        chiplet: f.traj.chiplets[i],
+                        queue_wait: h.wait,
+                        transfer: h.transfer,
+                        compute: h.compute,
+                    })
+                    .collect(),
+                hidden,
+                exposed,
+            });
+        }
+        out
     }
 
     fn handle(&mut self, now: SimTime, ev: Ev) {
@@ -477,12 +573,12 @@ impl<'a> FlowEngine<'a> {
             Ev::Loaded { chip, flow, slice } => {
                 self.a.chips[chip].loading = false;
                 let pos = self.a.flows[flow].traj.position_of(chip).expect("home on trajectory");
-                self.a.chips[chip].pending.push(SliceAt { flow, slice, pos });
+                self.a.chips[chip].pending.push(SliceAt { flow, slice, pos, avail: now });
                 self.try_start_load(chip, now);
                 self.try_start_compute(chip, now);
             }
             Ev::Arrived { chip, flow, slice, pos } => {
-                self.a.chips[chip].pending.push(SliceAt { flow, slice, pos });
+                self.a.chips[chip].pending.push(SliceAt { flow, slice, pos, avail: now });
                 self.try_start_compute(chip, now);
             }
             Ev::ComputeDone { chip, flow, slice, last } => {
@@ -748,7 +844,7 @@ impl<'a> FlowEngine<'a> {
                 .rposition(|s| a.flows[s.flow].state == FlowState::Active)
         };
         let Some(idx) = idx else { return };
-        let SliceAt { flow, slice, pos } = self.a.chips[chip].pending.remove(idx);
+        let SliceAt { flow, slice, pos, avail } = self.a.chips[chip].pending.remove(idx);
 
         let tokens = self.a.flows[flow].traj.tokens[pos] as u64;
         let dur = self.geom.slice_compute_cycles(self.hw, tokens);
@@ -760,6 +856,16 @@ impl<'a> FlowEngine<'a> {
             end: now + dur,
             expert: self.a.flows[flow].expert,
         });
+        if let Some(decs) = self.decs.as_mut() {
+            // Queue wait = available-but-unserved time at this station
+            // (includes pre-launch wait while the flow sat un-launched —
+            // that is scheduler queue time by definition). Compute uses
+            // the same `dur` just charged to the timeline.
+            let d = &mut decs[flow];
+            d.hops[pos].wait += now - avail;
+            d.hops[pos].compute += dur;
+            d.compute_iv.push((now, now + dur));
+        }
 
         // Eager forward (Fig 4(b)): ship the slice onward at compute start
         // unless this is its final trajectory station (Rule 3). The station
@@ -784,6 +890,9 @@ impl<'a> FlowEngine<'a> {
         } else {
             self.a.forwards.insert(flow, slice, src, FwdState::Parked);
             self.a.chips[dest].waiting_in.push_back((flow, slice, dest_pos, src));
+            if self.decs.is_some() {
+                self.parked_rec.insert((flow, slice, src), now);
+            }
         }
     }
 
@@ -801,6 +910,13 @@ impl<'a> FlowEngine<'a> {
         self.a.buffers.reserve(dest, self.geom.slice_bytes, now);
         let arrival = self.a.mesh.transfer(src, dest, self.geom.slice_bytes, now);
         self.d2d_bytes += self.geom.slice_bytes;
+        if let Some(decs) = self.decs.as_mut() {
+            // Transfer cycles are charged to the *destination* hop: they
+            // are the cost of getting the slice there.
+            let d = &mut decs[flow];
+            d.hops[dest_pos].transfer += arrival - now;
+            d.xfer_iv.push((now, arrival));
+        }
         self.timeline.record(Span {
             chiplet: src,
             kind: ActivityKind::D2dSend,
@@ -835,6 +951,13 @@ impl<'a> FlowEngine<'a> {
             .forwards
             .remove(flow, slice, src)
             .expect("parked transfer without forward state");
+        if let Some(decs) = self.decs.as_mut() {
+            // Backpressure park time counts as the destination hop's queue
+            // wait: the slice was ready to move but the buffer was full.
+            if let Some(t0) = self.parked_rec.remove(&(flow, slice, src)) {
+                decs[flow].hops[dest_pos].wait += now - t0;
+            }
+        }
         let arrival = self.start_transfer(src, dest, flow, slice, dest_pos, now);
         match prior {
             FwdState::ParkedComputeDone => {
@@ -943,6 +1066,7 @@ pub fn run_layer_in(
             d2d_bytes: 0,
             scheduler_cycles: 0,
             scheduler_decisions: 0,
+            decisions: Vec::new(),
         };
     }
     FlowEngine::new(hw, geom, workload, groups, cfg, arena).run()
@@ -972,7 +1096,7 @@ mod tests {
     }
 
     fn cfg(slices: usize) -> FlowConfig {
-        FlowConfig { num_slices: slices, rule5: false, record_spans: true }
+        FlowConfig { num_slices: slices, rule5: false, record_spans: true, record_decisions: false }
     }
 
     fn run(counts: Vec<Vec<u32>>, slices: usize) -> LayerRun {
@@ -1078,7 +1202,8 @@ mod tests {
         let geom = ExpertGeometry::new(&model, &hw, 4);
         let wl = workload(vec![vec![5, 3, 1, 0], vec![1, 1, 4, 4]]);
         let groups = paired_order(&wl);
-        let c = FlowConfig { num_slices: 4, rule5: true, record_spans: false };
+        let c =
+            FlowConfig { num_slices: 4, rule5: true, record_spans: false, record_decisions: false };
         let r = run_layer(&hw, &geom, &wl, &groups, c);
         assert_eq!(r.ddr_bytes, 2 * 4 * geom.slice_bytes);
     }
@@ -1122,7 +1247,12 @@ mod tests {
                 let geom = ExpertGeometry::new(&model, &hw, slices);
                 let wl = workload(counts.clone());
                 let groups = paired_order(&wl);
-                let c = FlowConfig { num_slices: slices, rule5, record_spans: true };
+                let c = FlowConfig {
+                    num_slices: slices,
+                    rule5,
+                    record_spans: true,
+                    record_decisions: round == 1,
+                };
                 let warm = run_layer_in(&mut arena, &hw, &geom, &wl, &groups, c);
                 let fresh = run_layer(&hw, &geom, &wl, &groups, c);
                 assert_eq!(warm.makespan, fresh.makespan, "layer {i} round {round}");
@@ -1166,6 +1296,70 @@ mod tests {
             (0..4).map(|c| r.timeline.compute_busy(c)).sum()
         };
         assert_eq!(compute(&paired), compute(&seq));
+    }
+
+    #[test]
+    fn decisions_reconcile_and_recording_is_bit_neutral() {
+        let hw = presets::mcm_2x2();
+        let model = presets::qwen3_a3b();
+        let geom = ExpertGeometry::new(&model, &hw, 4);
+        let wl = workload(vec![vec![3, 1, 4, 1], vec![5, 9, 2, 6], vec![0, 0, 7, 0]]);
+        let groups = paired_order(&wl);
+        let mut rc = cfg(4);
+        rc.record_decisions = true;
+        let rec = run_layer(&hw, &geom, &wl, &groups, rc);
+        let plain = run_layer(&hw, &geom, &wl, &groups, cfg(4));
+
+        // Bit-neutral: recording never perturbs any output.
+        assert_eq!(rec.makespan, plain.makespan);
+        assert_eq!(rec.ddr_bytes, plain.ddr_bytes);
+        assert_eq!(rec.d2d_bytes, plain.d2d_bytes);
+        assert_eq!(rec.package_peak_weight_bytes, plain.package_peak_weight_bytes);
+        assert_eq!(rec.scheduler_cycles, plain.scheduler_cycles);
+        assert_eq!(rec.timeline.spans.len(), plain.timeline.spans.len());
+        for (a, b) in rec.timeline.spans.iter().zip(&plain.timeline.spans) {
+            assert_eq!(
+                (a.chiplet, a.kind, a.start, a.end, a.expert),
+                (b.chiplet, b.kind, b.start, b.end, b.expert)
+            );
+        }
+        assert!(plain.decisions.is_empty());
+
+        // One record per expert stream, hop chiplets = trajectory.
+        assert_eq!(rec.decisions.len(), 3);
+        // Per-hop compute telescopes exactly to the timeline, per chiplet.
+        for c in 0..4 {
+            let dec: u64 = rec
+                .decisions
+                .iter()
+                .flat_map(|d| d.hops.iter())
+                .filter(|h| h.chiplet == c)
+                .map(|h| h.compute)
+                .sum();
+            assert_eq!(dec, rec.timeline.compute_busy(c), "chiplet {c}");
+        }
+        // Transfer cycles telescope to the recorded D2D spans.
+        let dec_xfer: u64 = rec
+            .decisions
+            .iter()
+            .flat_map(|d| d.hops.iter())
+            .map(|h| h.transfer)
+            .sum();
+        let tl_xfer: u64 = rec
+            .timeline
+            .spans
+            .iter()
+            .filter(|s| s.kind == ActivityKind::D2dSend)
+            .map(|s| s.end - s.start)
+            .sum();
+        assert_eq!(dec_xfer, tl_xfer);
+        for d in &rec.decisions {
+            // hidden + exposed is the wall-clock union measure, bounded by
+            // the per-hop transfer sum (overlapping transfers collapse).
+            assert!(d.hidden + d.exposed <= d.total_transfer());
+            assert_eq!(d.slices, 4);
+            assert!(d.tokens > 0);
+        }
     }
 
     #[test]

@@ -49,6 +49,11 @@ pub struct LayerResult {
     pub scheduler_cycles: u64,
     /// Roofline lower bound for this layer (see `roofline_bound_cycles`).
     pub bound_cycles: u64,
+    /// Expert-trajectory decision records (`obs::decision`), one per
+    /// expert stream. Empty unless decision recording is enabled via
+    /// [`Strategy::set_record_decisions`]; only the flow engine emits
+    /// them today (baselines return none).
+    pub decisions: Vec<crate::obs::DecisionRecord>,
 }
 
 impl LayerResult {
@@ -103,6 +108,13 @@ pub trait Strategy {
     /// Reset cross-layer state between independent runs.
     fn reset(&mut self) {}
 
+    /// Enable/disable expert-trajectory decision recording
+    /// (`obs::decision`). Default no-op: strategies without a flow engine
+    /// have no trajectories to record and always return empty
+    /// `LayerResult::decisions`. Recording must be bit-neutral — it may
+    /// never change any other field of the result.
+    fn set_record_decisions(&mut self, _on: bool) {}
+
     /// Whether `run_layer` is a pure function of its `LayerCtx` — i.e. the
     /// strategy carries no *semantic* cross-layer state (scratch arenas
     /// don't count). Memoization layers (the serving layer-memo cache) may
@@ -122,6 +134,9 @@ pub struct FseDpStrategy {
     /// Scratch arena reused across `run_layer` calls (§Perf iteration 4);
     /// purely an allocation cache, never semantic state.
     arena: FlowArena,
+    /// Emit `obs::decision` records from the flow engine (bit-neutral;
+    /// not semantic state — it only controls observability output).
+    record_decisions: bool,
 }
 
 impl FseDpStrategy {
@@ -133,7 +148,7 @@ impl FseDpStrategy {
                 | StrategyKind::FseDpRule5
                 | StrategyKind::FseDpBuffered
         ));
-        FseDpStrategy { kind, num_slices, arena: FlowArena::new() }
+        FseDpStrategy { kind, num_slices, arena: FlowArena::new(), record_decisions: false }
     }
 }
 
@@ -151,6 +166,7 @@ impl Strategy for FseDpStrategy {
             num_slices: self.num_slices,
             rule5: self.kind == StrategyKind::FseDpRule5,
             record_spans: ctx.record_spans,
+            record_decisions: self.record_decisions,
         };
         let run = flow::run_layer_in(&mut self.arena, ctx.hw, ctx.geom, ctx.workload, &groups, cfg);
         // FSE-DP keeps exactly one copy of each token package-wide: the
@@ -165,7 +181,12 @@ impl Strategy for FseDpStrategy {
             scheduler_cycles: run.scheduler_cycles,
             bound_cycles: roofline_bound_cycles(ctx.hw, ctx.geom, ctx.workload),
             timeline: run.timeline,
+            decisions: run.decisions,
         }
+    }
+
+    fn set_record_decisions(&mut self, on: bool) {
+        self.record_decisions = on;
     }
 }
 

@@ -240,13 +240,15 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             "migrations",
             "overlap eff",
             "dominant blame",
+            "gating entropy",
+            "top8 share",
         ],
     );
     let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
     for (&(si, ni, ri), res) in cells.iter().zip(&results) {
         let row = match res {
             Ok(cell) => {
-                let (imb, cv, hand, kv, mig, ovl, blame) = match &cell.knee {
+                let (imb, cv, hand, kv, mig, ovl, blame, gent, g8) = match &cell.knee {
                     Some(m) => (
                         format!("{:.3}", m.busy_imbalance()),
                         format!("{:.3}", m.routed_cv()),
@@ -255,8 +257,12 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
                         format!("{}", m.migrations),
                         format!("{:.4}", m.overlap_efficiency()),
                         m.dominant_blame().to_string(),
+                        format!("{:.4}", m.gating_entropy()),
+                        format!("{:.4}", m.gating_top8_share()),
                     ),
                     None => (
+                        "-".into(),
+                        "-".into(),
                         "-".into(),
                         "-".into(),
                         "-".into(),
@@ -279,6 +285,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
                     mig,
                     ovl,
                     blame,
+                    gent,
+                    g8,
                 ]
             }
             // Failed cell: same column shape, unmistakable content (only
@@ -290,6 +298,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
                 ROUTERS[ri].name().into(),
                 "CELL-PANIC".into(),
                 "CELL-PANIC".into(),
+                "-".into(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),

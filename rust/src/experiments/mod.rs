@@ -24,8 +24,13 @@
 //! robustness yardstick: fault intensity × scheme × router under the
 //! seeded fault-injection layer (see `crate::fault`), reporting goodput
 //! retention and recovery accounting against the fault-free baseline.
+//! `explain` is the observability yardstick: record one serve run's
+//! gating trace + expert-trajectory decision log, then counterfactually
+//! replay the identical gatings under alternative strategies and a greedy
+//! oracle placement, reporting per-layer regret (see `obs::decision`).
 
 pub mod cluster_sweep;
+pub mod explain;
 pub mod fault_sweep;
 pub mod report;
 pub mod fig11;
@@ -111,9 +116,9 @@ impl Default for ExpOpts {
     }
 }
 
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "table1", "fig2", "fig9", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "serve_sweep", "cluster_sweep", "fault_sweep", "report",
+    "fig18", "serve_sweep", "cluster_sweep", "fault_sweep", "report", "explain",
 ];
 
 /// Run one experiment by id; returns the rendered tables.
@@ -134,6 +139,7 @@ pub fn run_by_id(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
         "cluster_sweep" | "cluster-sweep" => cluster_sweep::run(opts),
         "fault_sweep" | "fault-sweep" => fault_sweep::run(opts),
         "report" => report::run(opts),
+        "explain" => explain::run(opts),
         other => return Err(format!("unknown experiment '{other}' (see `repro list`)")),
     };
     for t in &tables {
@@ -247,6 +253,6 @@ mod tests {
         let tables = run_by_id("table1", &opts).unwrap();
         assert!(!tables.is_empty());
         assert!(run_by_id("fig99", &opts).is_err());
-        assert_eq!(ALL_IDS.len(), 15);
+        assert_eq!(ALL_IDS.len(), 16);
     }
 }

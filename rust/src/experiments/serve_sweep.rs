@@ -195,6 +195,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             "SLO",
             "overlap eff",
             "dominant blame",
+            "gating entropy",
+            "top8 share",
         ],
     );
     // All grid points are independent seeded runs: fan the whole
@@ -221,6 +223,8 @@ pub fn run(opts: &ExpOpts) -> Vec<Table> {
             if ok { "ok".into() } else { "VIOLATED".to_string() },
             format!("{:.4}", m.overlap_efficiency()),
             m.dominant_blame().into(),
+            format!("{:.4}", m.gating_entropy()),
+            format!("{:.4}", m.gating_top8_share()),
         ]);
     }
 

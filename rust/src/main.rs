@@ -14,6 +14,7 @@
 //!                                      robustness sweep: fault intensity x scheme x router
 //!   repro report [--quick] [key=value ...]
 //!                                      weighted serving health report + best_config
+//!   repro explain [--quick]            decision log + counterfactual strategy replay
 //!
 //! `serve-sweep` drives the L4 serving subsystem (`server::ServerSim`):
 //! seeded Poisson arrivals are continuous-batched onto the simulated
@@ -50,7 +51,7 @@ use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n            [--trace OUT.json] [requests=N] [rps=F]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n  repro fault-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n                    [mtbf_s=F] [mttr_s=F] [link_flap=F] [retry_budget=N]\n                    [shed_policy=none|tail|all]\n  repro report [--quick] [--seed N] [--out DIR] [--threads N] [--requests N]\n               [goodput=F] [tail=F] [overlap=F] [imbalance=F] [link=F] [memory=F]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick.\n\n--trace OUT.json runs a small traced cluster serve and writes a Perfetto-\nviewable Chrome trace plus trace_accounting.csv / trace_expert_heatmap.csv\nnext to it; --trace-cell does the same for one representative sweep cell.\n\nfault-sweep sweeps an MTBF grid over seeded package crashes, serdes\nflapping, chiplet brown-outs and DDR slowdowns, reporting goodput\nretention vs the pinned fault-free baseline (fault_sweep.csv).\n\nreport scores a fixed-load (scheme x router x packages) grid under the\nweighted serving health score (health_report.csv + health_best_config.csv);\nkey=value pairs override the axis weights. --report on the sweeps emits the\nsame tables from the sweep's own cells (health_*.csv)."
+        "usage:\n  repro list\n  repro experiment <id> [--quick] [--seed N] [--out DIR] [--threads N]\n  repro all [--quick]\n  repro run [model=NAME] [dataset=NAME] [strategy=NAME] [key=value ...]\n            [--trace OUT.json] [requests=N] [rps=F]\n  repro serve [tokens=N] [layers=N] [seed=N]\n  repro serve-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n  repro cluster-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                      [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n                      [serdes_gbps=F] [serdes_lat_us=F] [rebalance_delta=N]\n  repro fault-sweep [--quick] [--seed N] [--out DIR] [--threads N]\n                    [--requests N] [--exact-tails] [--report] [--trace-cell OUT.json]\n                    [mtbf_s=F] [mttr_s=F] [link_flap=F] [retry_budget=N]\n                    [shed_policy=none|tail|all]\n  repro report [--quick] [--seed N] [--out DIR] [--threads N] [--requests N]\n               [goodput=F] [tail=F] [overlap=F] [imbalance=F] [link=F] [memory=F]\n  repro explain [--quick] [--seed N] [--out DIR] [--threads N]\n\n--threads N fans independent sweep points over N workers (0 = all cores,\n1 = serial); results are identical for any value. --requests N raises the\nper-point (serve) / per-package (cluster) request horizon — telemetry is\nfixed-memory quantile sketches, so long horizons cost no extra memory;\n--exact-tails records exact sample vectors instead (pre-sketch outputs,\nbit for bit). REPRO_QUICK=1 implies --quick.\n\n--trace OUT.json runs a small traced cluster serve and writes a Perfetto-\nviewable Chrome trace plus trace_accounting.csv / trace_expert_heatmap.csv\nnext to it; --trace-cell does the same for one representative sweep cell.\n\nfault-sweep sweeps an MTBF grid over seeded package crashes, serdes\nflapping, chiplet brown-outs and DDR slowdowns, reporting goodput\nretention vs the pinned fault-free baseline (fault_sweep.csv).\n\nreport scores a fixed-load (scheme x router x packages) grid under the\nweighted serving health score (health_report.csv + health_best_config.csv);\nkey=value pairs override the axis weights. --report on the sweeps emits the\nsame tables from the sweep's own cells (health_*.csv).\n\nexplain records one traced serve run (expert-trajectory decision log +\ngating capture), replays the identical gatings under alternative\nstrategies plus a greedy oracle placement, and writes explain_regret.csv /\nexplain_decisions.csv / explain_gating.csv / explain_trace.json."
     );
     ExitCode::FAILURE
 }
@@ -338,6 +339,14 @@ fn main() -> ExitCode {
             } else {
                 check_trace_cell(&opts)
                     .and_then(|()| experiments::run_by_id("serve_sweep", &opts).map(|_| ()))
+            }
+        }
+        "explain" => {
+            let (opts, rest) = parse_opts(&args[1..]);
+            if let Some(stray) = rest.first() {
+                Err(format!("explain takes no positional args (got '{stray}')"))
+            } else {
+                experiments::run_by_id("explain", &opts).map(|_| ())
             }
         }
         "cluster-sweep" => {

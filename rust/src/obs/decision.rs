@@ -1,0 +1,303 @@
+//! Expert-trajectory decision log: *why* the flow engine's schedule cost
+//! what it did, one record per (layer × expert stream).
+//!
+//! The flow engine already proves *what* happened (`Timeline` spans,
+//! `Accounting` folds); this module records the *decision*: the chosen
+//! trajectory (chiplet hop sequence), the tokens/slices that rode it, and
+//! where each hop's cycles went — queue wait vs D2D transfer vs compute —
+//! plus how much of the stream's transfer was hidden under its own
+//! compute vs exposed on the critical path.
+//!
+//! Discipline mirrors `obs::profile::Accounting`: totals fold at record
+//! time with plain integer adds (always exact, never sampled), while the
+//! retained per-stream entries are bounded by a cap with a `dropped`
+//! counter. Per-hop compute cycles are taken from the same expression the
+//! engine feeds the `Timeline`, so grouping hop compute by chiplet
+//! telescopes exactly to `Timeline::compute_busy` — a reconciliation the
+//! tests pin.
+
+use crate::obs::trace::Pid;
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Default retained-entry bound (~64k streams; totals stay exact beyond).
+pub const DEFAULT_DECISION_CAP: usize = 1 << 16;
+
+/// One hop of a recorded expert stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HopRecord {
+    /// Station chiplet (hop `i` is the trajectory's `i`-th chiplet).
+    pub chiplet: usize,
+    /// Cycles slices sat available-but-unserved at this station: input
+    /// queue wait plus parked-forward wait, summed over slices. The
+    /// head hop also counts pre-launch wait (slice ready before the
+    /// scheduler launched the stream) as scheduler queue wait.
+    pub queue_wait: u64,
+    /// D2D transfer cycles spent moving slices *into* this hop
+    /// (0 for the trajectory head).
+    pub transfer: u64,
+    /// Compute cycles at this station, summed over slices — same
+    /// expression the engine charges the `Timeline` with.
+    pub compute: u64,
+}
+
+/// One (layer × expert stream) decision: the trajectory the scheduler
+/// chose and where its cycles went.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecisionRecord {
+    pub expert: u16,
+    pub tokens: u32,
+    pub slices: u32,
+    /// Hop sequence in trajectory order; `hops[0]` is the stream head.
+    pub hops: Vec<HopRecord>,
+    /// Transfer cycles overlapped by this stream's own compute. Computed
+    /// from interval unions, so `hidden + exposed` can undershoot the
+    /// per-hop transfer sum when the stream's transfers overlap each
+    /// other (concurrent sends collapse into one wall-clock interval).
+    pub hidden: u64,
+    /// Union-of-transfer wall cycles not covered by compute.
+    pub exposed: u64,
+}
+
+impl DecisionRecord {
+    pub fn total_compute(&self) -> u64 {
+        self.hops.iter().map(|h| h.compute).sum()
+    }
+
+    pub fn total_transfer(&self) -> u64 {
+        self.hops.iter().map(|h| h.transfer).sum()
+    }
+
+    pub fn total_queue_wait(&self) -> u64 {
+        self.hops.iter().map(|h| h.queue_wait).sum()
+    }
+
+    /// Trajectory rendered as a hop chain, e.g. `"0>1>3"`.
+    pub fn trajectory_string(&self) -> String {
+        let mut s = String::new();
+        for (i, h) in self.hops.iter().enumerate() {
+            if i > 0 {
+                s.push('>');
+            }
+            s.push_str(&h.chiplet.to_string());
+        }
+        s
+    }
+}
+
+/// One retained entry: a decision record plus where/when it was adopted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecisionEntry {
+    pub pid: Pid,
+    /// Model layer index.
+    pub layer: u32,
+    /// Cycle offset of the layer's start in the serve timeline.
+    pub offset: SimTime,
+    pub rec: DecisionRecord,
+}
+
+/// Bounded decision log with fold-at-record-time totals.
+#[derive(Clone, Debug)]
+pub struct DecisionLog {
+    cap: usize,
+    entries: Vec<DecisionEntry>,
+    dropped: u64,
+    /// Expert streams folded (records seen, retained or not).
+    pub streams: u64,
+    /// Total hops across all folded streams.
+    pub hops: u64,
+    pub compute_cycles: u64,
+    pub transfer_cycles: u64,
+    pub queue_wait_cycles: u64,
+    pub hidden_cycles: u64,
+    pub exposed_cycles: u64,
+    /// `(pid, chiplet) -> compute cycles`; reconciles with
+    /// `Timeline::compute_busy` / `Accounting::compute_busy`.
+    pub per_chiplet_compute: BTreeMap<(Pid, usize), u64>,
+}
+
+impl Default for DecisionLog {
+    fn default() -> Self {
+        Self::with_cap(DEFAULT_DECISION_CAP)
+    }
+}
+
+impl DecisionLog {
+    pub fn with_cap(cap: usize) -> Self {
+        DecisionLog {
+            cap,
+            entries: Vec::new(),
+            dropped: 0,
+            streams: 0,
+            hops: 0,
+            compute_cycles: 0,
+            transfer_cycles: 0,
+            queue_wait_cycles: 0,
+            hidden_cycles: 0,
+            exposed_cycles: 0,
+            per_chiplet_compute: BTreeMap::new(),
+        }
+    }
+
+    /// Retained entries, in adoption order (deterministic: the flow
+    /// engine emits records in flow-index order, which is group
+    /// construction order).
+    pub fn entries(&self) -> &[DecisionEntry] {
+        &self.entries
+    }
+
+    /// Records folded into totals but not retained (cap overflow).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Fold one layer's decision records. Totals are always exact;
+    /// retention is bounded by the cap.
+    pub fn fold(&mut self, pid: Pid, layer: u32, offset: SimTime, recs: &[DecisionRecord]) {
+        for rec in recs {
+            self.streams += 1;
+            self.hops += rec.hops.len() as u64;
+            self.hidden_cycles += rec.hidden;
+            self.exposed_cycles += rec.exposed;
+            for h in &rec.hops {
+                self.compute_cycles += h.compute;
+                self.transfer_cycles += h.transfer;
+                self.queue_wait_cycles += h.queue_wait;
+                *self.per_chiplet_compute.entry((pid, h.chiplet)).or_insert(0) += h.compute;
+            }
+            if self.entries.len() < self.cap {
+                self.entries.push(DecisionEntry {
+                    pid,
+                    layer,
+                    offset,
+                    rec: rec.clone(),
+                });
+            } else {
+                self.dropped += 1;
+            }
+        }
+    }
+
+    /// Folded compute cycles attributed to `(pid, chiplet)`.
+    pub fn compute_busy(&self, pid: Pid, chiplet: usize) -> u64 {
+        self.per_chiplet_compute
+            .get(&(pid, chiplet))
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+/// Sort-and-merge a list of half-open `[start, end)` cycle intervals into
+/// a disjoint ascending union (empty intervals removed).
+pub fn union_intervals(iv: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut v: Vec<(u64, u64)> = iv.iter().copied().filter(|&(s, e)| e > s).collect();
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Total measure of a disjoint ascending interval union.
+pub fn intervals_measure(iv: &[(u64, u64)]) -> u64 {
+    iv.iter().map(|&(s, e)| e - s).sum()
+}
+
+/// Measure of the intersection of two disjoint ascending unions.
+pub fn intervals_intersect_measure(a: &[(u64, u64)], b: &[(u64, u64)]) -> u64 {
+    let (mut i, mut j, mut acc) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            acc += hi - lo;
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(expert: u16, hops: Vec<HopRecord>) -> DecisionRecord {
+        DecisionRecord {
+            expert,
+            tokens: 8,
+            slices: 2,
+            hops,
+            hidden: 3,
+            exposed: 1,
+        }
+    }
+
+    fn hop(chiplet: usize, queue_wait: u64, transfer: u64, compute: u64) -> HopRecord {
+        HopRecord {
+            chiplet,
+            queue_wait,
+            transfer,
+            compute,
+        }
+    }
+
+    #[test]
+    fn fold_totals_are_exact_and_per_chiplet_tracks() {
+        let mut log = DecisionLog::default();
+        let r0 = rec(0, vec![hop(0, 5, 0, 10), hop(1, 2, 7, 11)]);
+        let r1 = rec(1, vec![hop(1, 1, 0, 4)]);
+        log.fold(1, 0, 100, &[r0.clone(), r1.clone()]);
+        assert_eq!(log.streams, 2);
+        assert_eq!(log.hops, 3);
+        assert_eq!(log.compute_cycles, 25);
+        assert_eq!(log.transfer_cycles, 7);
+        assert_eq!(log.queue_wait_cycles, 8);
+        assert_eq!(log.hidden_cycles, 6);
+        assert_eq!(log.exposed_cycles, 2);
+        assert_eq!(log.compute_busy(1, 0), 10);
+        assert_eq!(log.compute_busy(1, 1), 15);
+        assert_eq!(log.compute_busy(2, 0), 0);
+        assert_eq!(log.entries().len(), 2);
+        assert_eq!(log.entries()[0].rec, r0);
+        assert_eq!(log.entries()[1].offset, 100);
+    }
+
+    #[test]
+    fn cap_bounds_entries_but_not_totals() {
+        let mut log = DecisionLog::with_cap(2);
+        let recs: Vec<DecisionRecord> =
+            (0..5).map(|e| rec(e, vec![hop(0, 0, 0, 3)])).collect();
+        log.fold(0, 0, 0, &recs);
+        assert_eq!(log.entries().len(), 2);
+        assert_eq!(log.dropped(), 3);
+        assert_eq!(log.streams, 5);
+        assert_eq!(log.compute_cycles, 15);
+    }
+
+    #[test]
+    fn trajectory_string_renders_hop_chain() {
+        let r = rec(3, vec![hop(0, 0, 0, 1), hop(1, 0, 1, 1), hop(3, 0, 1, 1)]);
+        assert_eq!(r.trajectory_string(), "0>1>3");
+        assert_eq!(r.total_compute(), 3);
+        assert_eq!(r.total_transfer(), 2);
+    }
+
+    #[test]
+    fn interval_union_and_intersection() {
+        let u = union_intervals(&[(5, 9), (0, 3), (2, 4), (9, 9)]);
+        assert_eq!(u, vec![(0, 4), (5, 9)]);
+        assert_eq!(intervals_measure(&u), 8);
+        let v = union_intervals(&[(3, 6), (8, 12)]);
+        // [0,4)∪[5,9) ∩ [3,6)∪[8,12) = [3,4) ∪ [5,6) ∪ [8,9) → 3 cycles.
+        assert_eq!(intervals_intersect_measure(&u, &v), 3);
+        assert_eq!(intervals_intersect_measure(&u, &[]), 0);
+    }
+}

@@ -84,6 +84,22 @@ pub fn chrome_trace(rec: &TraceRecorder) -> Json {
             EventKind::Counter => {
                 events.push(base("C", vec![]));
             }
+            EventKind::FlowPoint { id, start } => {
+                // Flow endpoints: ph "s" starts the arrow at the send
+                // span's start; ph "f" with bp:"e" binds the arrowhead to
+                // the enclosing slice ending at ts (the d2d_recv span).
+                if start {
+                    events.push(base("s", vec![("id", Json::Num(id as f64))]));
+                } else {
+                    events.push(base(
+                        "f",
+                        vec![
+                            ("bp", Json::Str("e".into())),
+                            ("id", Json::Num(id as f64)),
+                        ],
+                    ));
+                }
+            }
             EventKind::Async { id, dur } => {
                 events.push(base("b", vec![("id", Json::Num(id as f64))]));
                 // End event: same (cat, id) pairing, no args.
@@ -177,6 +193,29 @@ mod tests {
             evs[0].get("args").unwrap().get("value").unwrap().as_f64().unwrap(),
             7.0
         );
+    }
+
+    #[test]
+    fn flow_points_export_as_s_f_pair_with_binding_point() {
+        use crate::sim::trace::{ActivityKind, Span, Timeline};
+        let mut r = TraceRecorder::new();
+        r.set_freq(1e6);
+        let mut tl = Timeline::new(2, true);
+        tl.record(Span { chiplet: 0, kind: ActivityKind::D2dSend, start: 5, end: 9, expert: 1 });
+        tl.record(Span { chiplet: 1, kind: ActivityKind::D2dRecv, start: 5, end: 9, expert: 1 });
+        r.adopt_timeline(1, 0, &tl);
+        let s = chrome_trace_string(&r);
+        let j = Json::parse(&s).expect("flow trace must parse");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 X spans + s/f pair.
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[2].get("ph").unwrap().as_str().unwrap(), "s");
+        assert_eq!(evs[3].get("ph").unwrap().as_str().unwrap(), "f");
+        assert_eq!(evs[3].get("bp").unwrap().as_str().unwrap(), "e");
+        assert_eq!(evs[2].get("id").unwrap(), evs[3].get("id").unwrap());
+        assert_eq!(evs[2].get("cat").unwrap().as_str().unwrap(), "flow");
+        assert_eq!(evs[2].get("ts").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(evs[3].get("ts").unwrap().as_f64().unwrap(), 9.0);
     }
 
     #[test]

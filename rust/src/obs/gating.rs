@@ -1,0 +1,260 @@
+//! Gating-skew telemetry: per-layer expert-popularity histograms with the
+//! skew statistics (entropy, coefficient of variation, top-k share) that
+//! the paper's trajectory scheduler implicitly reacts to, plus the
+//! captured gating trace that `repro explain` replays counterfactually.
+//!
+//! [`GatingStats`] is folded at record time from plain integer adds — the
+//! same exactness discipline as `obs::profile::Accounting` — and merges
+//! canonically: histograms are integer counters, so the cluster-level
+//! merge commutes bit-for-bit under any package permutation. The fold is
+//! unconditional on the serving hot path (one `Vec` index add per routed
+//! expert per layer), which is what lets the measured-histogram router
+//! (`RouterKind::MeasuredAffinity`) read live per-package popularity
+//! without a recorder attached.
+//!
+//! [`GatingTrace`] / [`CapturedLayer`] are the record side of the
+//! counterfactual replay: one entry per simulated MoE layer, carrying the
+//! exact [`LayerGating`] the scheduler saw plus the outcome numbers the
+//! recorded strategy achieved — enough for `repro explain` to re-shard
+//! the identical gatings under any strategy and report per-layer regret.
+
+use crate::workload::LayerGating;
+
+/// Per-layer expert-popularity histograms plus running totals.
+///
+/// `fold(layer, expert, tokens)` is exact and bounded: the per-layer
+/// vector grows to the model's layer count and each histogram to the
+/// routed expert count (`ensure`), never per-iteration.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GatingStats {
+    /// `per_layer[l][e]` = token-activations of expert `e` at layer `l`.
+    per_layer: Vec<Vec<u64>>,
+    /// Histogram summed over layers (the router's popularity view).
+    totals: Vec<u64>,
+    /// Total token-expert assignments folded (Σ totals).
+    pub total_tokens: u64,
+}
+
+impl GatingStats {
+    /// Pre-size to the model shape so skew statistics are normalized by
+    /// the real expert count even when cold experts never activate.
+    pub fn ensure(&mut self, n_layers: usize, n_experts: usize) {
+        if self.per_layer.len() < n_layers {
+            self.per_layer.resize(n_layers, Vec::new());
+        }
+        for h in self.per_layer.iter_mut() {
+            if h.len() < n_experts {
+                h.resize(n_experts, 0);
+            }
+        }
+        if self.totals.len() < n_experts {
+            self.totals.resize(n_experts, 0);
+        }
+    }
+
+    /// Fold `tokens` activations of `expert` at `layer` (auto-growing).
+    pub fn fold(&mut self, layer: usize, expert: usize, tokens: u64) {
+        self.ensure(layer + 1, expert + 1);
+        self.per_layer[layer][expert] += tokens;
+        self.totals[expert] += tokens;
+        self.total_tokens += tokens;
+    }
+
+    /// Canonical merge: elementwise integer adds, so folding packages in
+    /// any order yields bit-identical statistics.
+    pub fn merge(&mut self, other: &GatingStats) {
+        self.ensure(other.per_layer.len(), other.totals.len());
+        for (l, h) in other.per_layer.iter().enumerate() {
+            self.ensure(l + 1, h.len());
+            for (e, &t) in h.iter().enumerate() {
+                self.per_layer[l][e] += t;
+            }
+        }
+        for (e, &t) in other.totals.iter().enumerate() {
+            self.totals[e] += t;
+        }
+        self.total_tokens += other.total_tokens;
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.per_layer.len()
+    }
+
+    /// Histogram summed over layers.
+    pub fn histogram(&self) -> &[u64] {
+        &self.totals
+    }
+
+    pub fn layer_histogram(&self, layer: usize) -> &[u64] {
+        &self.per_layer[layer]
+    }
+
+    /// Normalized Shannon entropy of the total histogram: 1.0 = uniform
+    /// over all experts, 0.0 = everything on one expert (or no data).
+    pub fn entropy(&self) -> f64 {
+        entropy_of(&self.totals)
+    }
+
+    pub fn layer_entropy(&self, layer: usize) -> f64 {
+        entropy_of(&self.per_layer[layer])
+    }
+
+    /// Coefficient of variation of the total histogram (0 = uniform).
+    pub fn cv(&self) -> f64 {
+        cv_of(&self.totals)
+    }
+
+    /// Fraction of all activations landing on the `k` hottest experts.
+    pub fn top_share(&self, k: usize) -> f64 {
+        top_share_of(&self.totals, k)
+    }
+
+    pub fn layer_top_share(&self, layer: usize, k: usize) -> f64 {
+        top_share_of(&self.per_layer[layer], k)
+    }
+
+    pub fn layer_cv(&self, layer: usize) -> f64 {
+        cv_of(&self.per_layer[layer])
+    }
+}
+
+/// Shannon entropy of a histogram, normalized by `ln(len)` so 1.0 means
+/// uniform over every bin; 0.0 for degenerate inputs (≤ 1 bin or empty).
+pub fn entropy_of(hist: &[u64]) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 || hist.len() < 2 {
+        return 0.0;
+    }
+    let mut h = 0.0f64;
+    for &c in hist {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.ln();
+        }
+    }
+    h / (hist.len() as f64).ln()
+}
+
+/// Population coefficient of variation (σ/µ) over all bins, zeros
+/// included; 0.0 for empty or all-zero histograms.
+pub fn cv_of(hist: &[u64]) -> f64 {
+    if hist.is_empty() {
+        return 0.0;
+    }
+    let n = hist.len() as f64;
+    let mean = hist.iter().sum::<u64>() as f64 / n;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = hist.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+/// Fraction of mass on the `k` largest bins (1.0 when the histogram has
+/// at most `k` nonzero bins; 0.0 when empty).
+pub fn top_share_of(hist: &[u64], k: usize) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<u64> = hist.to_vec();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    let top: u64 = v.iter().take(k).sum();
+    top as f64 / total as f64
+}
+
+/// One MoE layer as the recorded serve run saw it: the exact gating plus
+/// the outcome the recorded strategy achieved on it. Memo hits capture
+/// the cached outcome, which is bit-identical to a fresh run by the
+/// memo's own contract — so the capture stream is memo-invariant.
+#[derive(Clone, Debug)]
+pub struct CapturedLayer {
+    /// Scheduler iteration the layer ran in.
+    pub iter: u32,
+    /// Model layer index (0-based).
+    pub layer: u32,
+    pub gating: LayerGating,
+    /// Recorded MoE makespan of this layer, in cycles.
+    pub makespan: u64,
+    pub ddr_bytes: u64,
+    pub d2d_bytes: u64,
+}
+
+/// The captured gating trace of one serve run, in simulation order.
+#[derive(Clone, Debug, Default)]
+pub struct GatingTrace {
+    pub layers: Vec<CapturedLayer>,
+}
+
+impl GatingTrace {
+    pub fn total_moe_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.makespan).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_grows_and_totals_track() {
+        let mut g = GatingStats::default();
+        g.fold(0, 2, 5);
+        g.fold(1, 0, 3);
+        g.fold(0, 2, 1);
+        assert_eq!(g.n_layers(), 2);
+        assert_eq!(g.histogram(), &[3, 0, 6]);
+        assert_eq!(g.layer_histogram(0), &[0, 0, 6]);
+        assert_eq!(g.total_tokens, 9);
+    }
+
+    #[test]
+    fn merge_is_permutation_invariant() {
+        let mut a = GatingStats::default();
+        a.fold(0, 1, 4);
+        a.fold(2, 3, 7);
+        let mut b = GatingStats::default();
+        b.fold(1, 0, 2);
+        b.fold(0, 3, 9);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.total_tokens, 22);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        assert_eq!(entropy_of(&[]), 0.0);
+        assert_eq!(entropy_of(&[10]), 0.0);
+        assert_eq!(entropy_of(&[10, 0, 0, 0]), 0.0);
+        let uniform = entropy_of(&[5, 5, 5, 5]);
+        assert!((uniform - 1.0).abs() < 1e-12);
+        let skewed = entropy_of(&[97, 1, 1, 1]);
+        assert!(skewed > 0.0 && skewed < uniform);
+    }
+
+    #[test]
+    fn cv_and_top_share() {
+        assert_eq!(cv_of(&[4, 4, 4, 4]), 0.0);
+        assert!(cv_of(&[16, 0, 0, 0]) > 1.0);
+        assert!((top_share_of(&[8, 1, 1, 0], 1) - 0.8).abs() < 1e-12);
+        assert_eq!(top_share_of(&[1, 2], 8), 1.0);
+        assert_eq!(top_share_of(&[], 8), 0.0);
+    }
+
+    #[test]
+    fn ensure_pins_normalization_to_model_shape() {
+        // Only expert 0 ever activates, but the stats are normalized over
+        // the full expert count once `ensure`d — entropy stays 0, CV sees
+        // the cold experts.
+        let mut g = GatingStats::default();
+        g.ensure(2, 8);
+        g.fold(0, 0, 10);
+        assert_eq!(g.histogram().len(), 8);
+        assert_eq!(g.entropy(), 0.0);
+        assert!(g.cv() > 2.0);
+        assert_eq!(g.top_share(8), 1.0);
+    }
+}

@@ -17,6 +17,12 @@
 //!   blame vectors whose components telescope exactly to e2e.
 //! * [`health`] — the weighted serving health score + `best_config`
 //!   report over any sweep grid.
+//! * [`decision`] — expert-trajectory decision log: one bounded,
+//!   fold-at-record-time record per (layer × expert stream) explaining
+//!   where each hop's cycles went; reconciles with the `Timeline`.
+//! * [`gating`] — gating-skew telemetry (per-layer expert-popularity
+//!   histograms, entropy/CV/top-k share) and the captured gating trace
+//!   `repro explain` replays counterfactually.
 //! * [`export`] — Chrome-trace-event JSON (`{"traceEvents":[...]}`),
 //!   byte-stable across identical runs.
 //!
@@ -25,7 +31,9 @@
 //! mutates it, and all timestamps are simulated cycles.
 
 pub mod blame;
+pub mod decision;
 pub mod export;
+pub mod gating;
 pub mod health;
 pub mod profile;
 pub mod trace;
@@ -34,7 +42,14 @@ pub use blame::{
     layer_overlap, overlap_efficiency, request_blame, BlameTotals, BlameVec, OverlapStats,
     BLAME_COMPONENTS,
 };
+pub use decision::{
+    intervals_intersect_measure, intervals_measure, union_intervals, DecisionEntry, DecisionLog,
+    DecisionRecord, HopRecord, DEFAULT_DECISION_CAP,
+};
 pub use export::{chrome_trace, chrome_trace_string, save_chrome_trace};
+pub use gating::{
+    cv_of, entropy_of, top_share_of, CapturedLayer, GatingStats, GatingTrace,
+};
 pub use health::{health_scores, health_tables, HealthCell, HealthInput};
 pub use profile::{Accounting, ChipletBusy, Heat, PhaseTotals};
 pub use trace::{

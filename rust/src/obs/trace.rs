@@ -24,6 +24,7 @@
 //! paths hold an `Option<TraceHandle>` and pay one branch when it is
 //! `None` (pinned by the `trace_disabled_overhead` bench).
 
+use super::decision::{DecisionLog, DecisionRecord};
 use super::profile::Accounting;
 use crate::sim::trace::Timeline;
 use crate::sim::SimTime;
@@ -85,6 +86,10 @@ pub enum EventKind {
     /// the sample's `args` values (queue depth, batch tokens, idle
     /// chiplets, overlap efficiency).
     Counter,
+    /// Flow-event endpoint (`ph:"s"` when `start`, else `ph:"f"` with
+    /// `bp:"e"`), matched by `(cat, id)` — renders an expert stream's
+    /// `d2d_send`→`d2d_recv` hop as a Perfetto arrow.
+    FlowPoint { id: u32, start: bool },
 }
 
 /// One recorded event. `name`/`cat` are `&'static str` by design: record
@@ -115,7 +120,11 @@ pub struct TraceRecorder {
     thread_names: BTreeMap<(Pid, Tid), String>,
     /// Cycle-accounting fold, exact independent of event retention.
     pub acct: Accounting,
+    /// Expert-trajectory decision log: totals fold exactly at adoption,
+    /// retained entries bounded by its own cap (like `acct` vs events).
+    pub decisions: DecisionLog,
     next_async_id: u32,
+    next_flow_id: u32,
 }
 
 impl TraceRecorder {
@@ -129,7 +138,9 @@ impl TraceRecorder {
             process_names: BTreeMap::new(),
             thread_names: BTreeMap::new(),
             acct: Accounting::default(),
+            decisions: DecisionLog::default(),
             next_async_id: 1,
+            next_flow_id: 1,
         }
     }
 
@@ -302,6 +313,12 @@ impl TraceRecorder {
             return;
         }
         use crate::sim::trace::{ActivityKind, NO_EXPERT};
+        // The flow engine records each D2D hop as a back-to-back
+        // `D2dSend` (source chiplet) + `D2dRecv` (destination chiplet)
+        // pair with identical start/end/expert; pairing adjacent spans
+        // here links them with a Perfetto flow arrow (`ph:"s"`/`"f"`) so
+        // an expert stream's trajectory renders as a visible chain.
+        let mut pending_send: Option<(usize, SimTime, SimTime, u16)> = None;
         for s in &tl.spans {
             let cycles = s.end - s.start;
             self.acct.chiplet(pid, s.chiplet, s.kind, cycles);
@@ -326,9 +343,57 @@ impl TraceRecorder {
                 name,
                 offset + s.start,
                 offset + s.end,
-                args,
+                args.clone(),
             );
+            match s.kind {
+                ActivityKind::D2dSend => {
+                    pending_send = Some((s.chiplet, s.start, s.end, s.expert));
+                }
+                ActivityKind::D2dRecv => {
+                    if let Some((src, start, end, expert)) = pending_send.take() {
+                        if start == s.start && end == s.end && expert == s.expert {
+                            let id = self.next_flow_id;
+                            self.next_flow_id += 1;
+                            self.push(TraceEvent {
+                                pid,
+                                tid: chiplet_tid(src),
+                                cat: "flow",
+                                name: "expert_stream",
+                                start: offset + start,
+                                kind: EventKind::FlowPoint { id, start: true },
+                                args: args.clone(),
+                            });
+                            self.push(TraceEvent {
+                                pid,
+                                tid: chiplet_tid(s.chiplet),
+                                cat: "flow",
+                                name: "expert_stream",
+                                start: offset + end,
+                                kind: EventKind::FlowPoint { id, start: false },
+                                args,
+                            });
+                        }
+                    }
+                }
+                _ => pending_send = None,
+            }
         }
+    }
+
+    /// Adopt one layer's expert-trajectory decision records. Totals fold
+    /// exactly (like `acct`); retained entries are bounded by the
+    /// decision log's own cap.
+    pub fn adopt_decisions(
+        &mut self,
+        pid: Pid,
+        layer: u32,
+        offset: SimTime,
+        recs: &[DecisionRecord],
+    ) {
+        if !self.enabled || recs.is_empty() {
+            return;
+        }
+        self.decisions.fold(pid, layer, offset, recs);
     }
 
     /// Emit the full lifecycle of one completed request: an outer
@@ -415,6 +480,7 @@ impl TraceHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::decision::HopRecord;
     use crate::sim::trace::{ActivityKind, Span, NO_EXPERT};
 
     #[test]
@@ -448,9 +514,23 @@ mod tests {
         let mut tl = Timeline::new(1, true);
         tl.record(Span { chiplet: 0, kind: ActivityKind::Compute, start: 0, end: 9, expert: 2 });
         r.adopt_timeline(0, 0, &tl);
+        r.adopt_decisions(
+            0,
+            0,
+            0,
+            &[DecisionRecord {
+                expert: 0,
+                tokens: 1,
+                slices: 1,
+                hops: vec![],
+                hidden: 0,
+                exposed: 0,
+            }],
+        );
         assert!(r.events().is_empty());
         assert!(r.process_names().is_empty());
         assert_eq!(r.acct.compute_busy(0, 0), 0);
+        assert_eq!(r.decisions.streams, 0);
     }
 
     #[test]
@@ -518,6 +598,53 @@ mod tests {
         assert!(evs[0].args.is_empty());
         assert_eq!(r.acct.heat[&(3, 1)].cycles, 20);
         assert_eq!(r.acct.heat.len(), 1);
+    }
+
+    #[test]
+    fn d2d_pairs_emit_linked_flow_points() {
+        let mut r = TraceRecorder::new();
+        let mut tl = Timeline::new(3, true);
+        // Hop 0→1 for expert 4: back-to-back send/recv with equal bounds.
+        tl.record(Span { chiplet: 0, kind: ActivityKind::D2dSend, start: 10, end: 25, expert: 4 });
+        tl.record(Span { chiplet: 1, kind: ActivityKind::D2dRecv, start: 10, end: 25, expert: 4 });
+        // Unpaired recv (no preceding send) emits no flow points.
+        tl.record(Span { chiplet: 2, kind: ActivityKind::D2dRecv, start: 30, end: 40, expert: 4 });
+        r.adopt_timeline(1, 100, &tl);
+        let flows: Vec<&TraceEvent> = r
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::FlowPoint { .. }))
+            .collect();
+        assert_eq!(flows.len(), 2);
+        let (s, f) = (flows[0], flows[1]);
+        assert_eq!(s.kind, EventKind::FlowPoint { id: 1, start: true });
+        assert_eq!(f.kind, EventKind::FlowPoint { id: 1, start: false });
+        assert_eq!(s.tid, chiplet_tid(0));
+        assert_eq!(f.tid, chiplet_tid(1));
+        // s sits at the send's start, f at the recv's end (re-based).
+        assert_eq!(s.start, 110);
+        assert_eq!(f.start, 125);
+        assert_eq!(s.cat, "flow");
+        assert_eq!(s.args, vec![("expert", 4)]);
+    }
+
+    #[test]
+    fn adopted_decisions_fold_into_log() {
+        let mut r = TraceRecorder::new();
+        let rec = DecisionRecord {
+            expert: 2,
+            tokens: 16,
+            slices: 4,
+            hops: vec![HopRecord { chiplet: 1, queue_wait: 3, transfer: 0, compute: 20 }],
+            hidden: 0,
+            exposed: 0,
+        };
+        r.adopt_decisions(1, 5, 1000, &[rec.clone()]);
+        assert_eq!(r.decisions.streams, 1);
+        assert_eq!(r.decisions.compute_busy(1, 1), 20);
+        let e = &r.decisions.entries()[0];
+        assert_eq!((e.pid, e.layer, e.offset), (1, 5, 1000));
+        assert_eq!(e.rec, rec);
     }
 
     #[test]

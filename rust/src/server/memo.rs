@@ -30,8 +30,10 @@
 //! order, so the hit/miss sequence is reproducible run-to-run as well.
 
 use crate::obs::blame::OverlapStats;
+use crate::obs::decision::DecisionRecord;
 use crate::workload::LayerWorkload;
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 
 /// Timing/traffic outcome of one memoized MoE layer — exactly the fields
 /// the serving loop consumes from `LayerResult`, plus the critical-chiplet
@@ -47,8 +49,14 @@ pub struct LayerOutcome {
 }
 
 /// Bounded exact-key memo with FIFO eviction and hit/miss accounting.
+///
+/// Each entry optionally carries the layer's `obs::decision` records
+/// (recorded on the miss when a trace is attached). A memo hit *replays*
+/// the cached records into the recorder — mirroring the heat-fold rule:
+/// observability output must be memo-invariant, so the hit contributes
+/// the same decisions the fresh run would have.
 pub struct LayerMemo {
-    map: HashMap<Vec<u32>, LayerOutcome>,
+    map: HashMap<Vec<u32>, (LayerOutcome, Option<Rc<Vec<DecisionRecord>>>)>,
     order: VecDeque<Vec<u32>>,
     cap: usize,
     pub hits: u64,
@@ -98,10 +106,20 @@ impl LayerMemo {
     }
 
     pub fn get(&mut self, key: &[u32]) -> Option<LayerOutcome> {
+        self.get_entry(key).map(|(v, _)| v)
+    }
+
+    /// Lookup returning the outcome plus the cached decision records (if
+    /// the inserting run recorded any). Sole hit/miss counter — `get`
+    /// delegates here, so a lookup is never double-counted.
+    pub fn get_entry(
+        &mut self,
+        key: &[u32],
+    ) -> Option<(LayerOutcome, Option<Rc<Vec<DecisionRecord>>>)> {
         match self.map.get(key) {
-            Some(&v) => {
+            Some((v, d)) => {
                 self.hits += 1;
-                Some(v)
+                Some((*v, d.clone()))
             }
             None => {
                 self.misses += 1;
@@ -111,12 +129,21 @@ impl LayerMemo {
     }
 
     pub fn insert(&mut self, key: Vec<u32>, v: LayerOutcome) {
+        self.insert_with_decisions(key, v, None);
+    }
+
+    pub fn insert_with_decisions(
+        &mut self,
+        key: Vec<u32>,
+        v: LayerOutcome,
+        decisions: Option<Rc<Vec<DecisionRecord>>>,
+    ) {
         if self.map.len() >= self.cap {
             if let Some(oldest) = self.order.pop_front() {
                 self.map.remove(&oldest);
             }
         }
-        if self.map.insert(key.clone(), v).is_none() {
+        if self.map.insert(key.clone(), (v, decisions)).is_none() {
             self.order.push_back(key);
         }
     }
@@ -191,6 +218,28 @@ mod tests {
         };
         m.insert(k.clone(), v);
         assert_eq!(m.get(&k), Some(v));
+    }
+
+    #[test]
+    fn entry_round_trips_decisions_and_counts_once() {
+        let mut m = LayerMemo::new(8);
+        let k = LayerMemo::key_of(&wl(&[&[1, 2]]));
+        let recs = Rc::new(vec![DecisionRecord {
+            expert: 0,
+            tokens: 3,
+            slices: 1,
+            hops: vec![],
+            hidden: 0,
+            exposed: 0,
+        }]);
+        m.insert_with_decisions(k.clone(), outcome(1, 2, 3), Some(recs.clone()));
+        let (v, d) = m.get_entry(&k).unwrap();
+        assert_eq!(v, outcome(1, 2, 3));
+        assert_eq!(*d.unwrap(), *recs);
+        assert_eq!((m.hits, m.misses), (1, 0));
+        // Plain `get` delegates (no double count) and drops the records.
+        assert_eq!(m.get(&k), Some(outcome(1, 2, 3)));
+        assert_eq!((m.hits, m.misses), (2, 0));
     }
 
     #[test]

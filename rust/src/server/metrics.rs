@@ -9,6 +9,7 @@
 use super::request::Request;
 use crate::config::{HardwareConfig, SloConfig};
 use crate::obs::blame::BlameTotals;
+use crate::obs::gating::GatingStats;
 use crate::util::{Dist, SeriesSet, TelemetryMode};
 
 /// Aggregated metrics of one serving run. Latencies are recorded in
@@ -65,6 +66,10 @@ pub struct ServeMetrics {
     /// Summed per-request blame vectors over completed requests; each
     /// vector telescopes exactly to that request's e2e cycles.
     pub blame: BlameTotals,
+    /// Measured expert-popularity histograms (per layer + totals) with
+    /// skew statistics, folded unconditionally per simulated MoE layer
+    /// from the routed gating — `obs::gating`.
+    pub gating: GatingStats,
 }
 
 impl ServeMetrics {
@@ -156,6 +161,22 @@ impl ServeMetrics {
     /// none completed).
     pub fn dominant_blame(&self) -> &'static str {
         self.blame.dominant()
+    }
+
+    /// Normalized entropy of the measured expert-popularity histogram
+    /// (1.0 = uniform activation, 0.0 = one expert or no data).
+    pub fn gating_entropy(&self) -> f64 {
+        self.gating.entropy()
+    }
+
+    /// Share of all routed activations landing on the 8 hottest experts.
+    pub fn gating_top8_share(&self) -> f64 {
+        self.gating.top_share(8)
+    }
+
+    /// Coefficient of variation of the measured popularity histogram.
+    pub fn gating_cv(&self) -> f64 {
+        self.gating.cv()
     }
 
     pub fn p99_ttft_ms(&self) -> f64 {

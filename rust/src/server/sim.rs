@@ -24,11 +24,14 @@ use crate::coordinator::{make_strategy, LayerCtx, Strategy};
 use crate::engine::timing::attention_cycles;
 use crate::moe::{default_num_slices, ExpertGeometry};
 use crate::obs::blame::{layer_overlap, overlap_efficiency, request_blame};
+use crate::obs::gating::{CapturedLayer, GatingTrace};
 use crate::obs::{chiplet_tid, package_pid, Pid, RequestSpan, TraceHandle};
 use crate::obs::{TID_QUEUE, TID_REQUESTS, TID_SCHED};
 use crate::util::{cycles_to_us, TelemetryMode};
 use crate::workload::{shard_layer, RequestChunk, TraceGenerator};
+use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 /// How load is offered to the server.
@@ -147,6 +150,12 @@ pub struct ServerSim<'a> {
     /// mutates sim state, so results are bit-identical attached or not
     /// (pinned by `tests/trace.rs`).
     trace: Option<PkgTrace>,
+    /// Gating-trace capture sink (attached by `repro explain`): every
+    /// simulated MoE layer pushes one [`CapturedLayer`] — the exact gating
+    /// plus the recorded outcome — identically on memo hit and miss, so
+    /// the captured trace is memo-invariant. `None` is the default
+    /// zero-overhead path (one `Option` branch per layer).
+    capture: Option<Rc<RefCell<GatingTrace>>>,
     /// Browned-out chiplets (fault injection). Empty = all healthy, which
     /// is the structural fast path: `iteration_cycles` only re-shards
     /// when this is non-empty, so fault-free runs are untouched.
@@ -205,6 +214,7 @@ impl<'a> ServerSim<'a> {
             iter_idx: 0,
             metrics: ServeMetrics::with_mode(cfg.telemetry),
             trace: None,
+            capture: None,
             chiplet_down: Vec::new(),
             ddr_factor: 1.0,
             first_sched: HashMap::new(),
@@ -234,6 +244,24 @@ impl<'a> ServerSim<'a> {
             }
         });
         self.trace = Some(PkgTrace { handle, pid });
+        // With a recorder attached, the strategy records per-stream
+        // decision trajectories too (bit-neutral: recording only fills
+        // recorder-owned accumulators — pinned by `tests/explain.rs`).
+        self.strategy.set_record_decisions(true);
+    }
+
+    /// Attach a gating-capture sink (see [`GatingTrace`]): every simulated
+    /// MoE layer appends its exact gating plus the recorded outcome.
+    /// Recording is passive — simulated results are bit-identical with or
+    /// without a sink attached.
+    pub fn attach_gating_capture(&mut self, sink: Rc<RefCell<GatingTrace>>) {
+        self.capture = Some(sink);
+    }
+
+    /// Measured per-expert popularity histogram (summed over layers) —
+    /// the live signal `RouterKind::MeasuredAffinity` scores against.
+    pub fn measured_gating(&self) -> &[u64] {
+        self.metrics.gating.histogram()
     }
 
     /// Cost one scheduling iteration: attention + MoE per layer, exactly
@@ -251,6 +279,9 @@ impl<'a> ServerSim<'a> {
         let layers = self.gen.layer_gatings(iter_idx, plan);
         let n_experts_total = self.model.n_experts + self.model.n_shared;
         let none = HashSet::new();
+        // Pin the skew-stat normalization to the model shape up front so
+        // cold experts/layers count as zeros, not missing bins.
+        self.metrics.gating.ensure(layers.len(), self.model.n_experts);
         // Rc-clone of the handle so the borrow checker sees no overlap
         // with `self.strategy`/`self.memo` below; one `Option` branch
         // total when tracing is off.
@@ -265,8 +296,18 @@ impl<'a> ServerSim<'a> {
             d2d_stall: 0,
             active_mask: 0,
         };
-        for gating in &layers {
+        for (li, gating) in layers.iter().enumerate() {
             let wl = shard_layer(gating, n_experts_total, self.hw.n_chiplets(), &none);
+            // Gating telemetry folds from the pre-mask shard (the routing
+            // decision, not the fault response); shared experts are
+            // always-on and carry no skew signal, so only routed ids
+            // enter the histograms. Unconditional: one integer add per
+            // activated expert per layer.
+            for e in &wl.experts {
+                if (e.expert as usize) < self.model.n_experts {
+                    self.metrics.gating.fold(li, e.expert as usize, e.total as u64);
+                }
+            }
             // Brown-out re-shard: displaced tokens move to live chiplets
             // BEFORE the memo key is computed, so cached costs are keyed
             // on the workload the strategy actually ran. Structurally a
@@ -306,13 +347,13 @@ impl<'a> ServerSim<'a> {
             let cached = match self.memo.as_mut() {
                 Some(memo) => {
                     LayerMemo::key_into(&wl, &mut self.key_scratch);
-                    memo.get(&self.key_scratch)
+                    memo.get_entry(&self.key_scratch)
                 }
                 None => None,
             };
             let moe_start = base + cost.cycles;
             let outcome = match cached {
-                Some(hit) => {
+                Some((hit, cached_decs)) => {
                     if let Some((h, pid)) = &trace {
                         h.with(|r| {
                             r.span(
@@ -323,7 +364,14 @@ impl<'a> ServerSim<'a> {
                                 moe_start,
                                 moe_start + hit.makespan,
                                 vec![("tokens", wl.total_tokens as u64)],
-                            )
+                            );
+                            // Replay the cached decision records so the
+                            // decision log is memo-invariant (the heat-
+                            // fold rule: a hit contributes exactly what
+                            // the fresh run recorded).
+                            if let Some(decs) = &cached_decs {
+                                r.adopt_decisions(*pid, li as u32, moe_start, decs);
+                            }
                         });
                     }
                     hit
@@ -339,7 +387,8 @@ impl<'a> ServerSim<'a> {
                         // folds every miss's timeline at record time.
                         record_spans: true,
                     };
-                    let r = self.strategy.run_layer(&ctx);
+                    let mut r = self.strategy.run_layer(&ctx);
+                    let decs = std::mem::take(&mut r.decisions);
                     if let Some((h, pid)) = &trace {
                         h.with(|rec| {
                             rec.span(
@@ -352,6 +401,7 @@ impl<'a> ServerSim<'a> {
                                 vec![("tokens", wl.total_tokens as u64)],
                             );
                             rec.adopt_timeline(*pid, moe_start, &r.timeline);
+                            rec.adopt_decisions(*pid, li as u32, moe_start, &decs);
                             for e in &wl.experts {
                                 for (c, &toks) in e.tokens_per_chiplet.iter().enumerate() {
                                     if toks > 0 {
@@ -371,11 +421,28 @@ impl<'a> ServerSim<'a> {
                         overlap: layer_overlap(&r.timeline),
                     };
                     if let Some(memo) = self.memo.as_mut() {
-                        memo.insert(self.key_scratch.clone(), fresh);
+                        // Cache the decision records alongside so hits can
+                        // replay them (None when recording is off — the
+                        // common untraced path stores nothing extra).
+                        memo.insert_with_decisions(
+                            self.key_scratch.clone(),
+                            fresh,
+                            (!decs.is_empty()).then(|| Rc::new(decs)),
+                        );
                     }
                     fresh
                 }
             };
+            if let Some(cap) = &self.capture {
+                cap.borrow_mut().layers.push(CapturedLayer {
+                    iter: iter_idx as u32,
+                    layer: li as u32,
+                    gating: gating.clone(),
+                    makespan: outcome.makespan,
+                    ddr_bytes: outcome.ddr_bytes,
+                    d2d_bytes: outcome.d2d_bytes,
+                });
+            }
             cost.cycles += outcome.makespan;
             cost.ddr_bytes += outcome.ddr_bytes;
             cost.d2d_bytes += outcome.d2d_bytes;
@@ -978,6 +1045,47 @@ mod tests {
         // One package, no front-end, no crashes: those terms stay zero.
         assert_eq!((m.blame.link, m.blame.fault_retry), (0, 0));
         assert_ne!(m.dominant_blame(), "-");
+    }
+
+    #[test]
+    fn gating_telemetry_folds_unconditionally() {
+        // No trace, no capture sink: the histograms still fold, shaped to
+        // the model (cold experts count as zero bins).
+        let m = run_sim(LoadMode::Burst { n_requests: 6 }, StrategyKind::FseDpPaired);
+        let model = presets::tiny_moe();
+        assert_eq!(m.gating.n_layers(), model.n_layers);
+        assert_eq!(m.gating.histogram().len(), model.n_experts);
+        assert!(m.gating.total_tokens > 0);
+        assert!((0.0..=1.0).contains(&m.gating_entropy()));
+        let top8 = m.gating_top8_share();
+        assert!(top8 > 0.0 && top8 <= 1.0);
+        assert!(m.gating_cv() >= 0.0);
+    }
+
+    #[test]
+    fn gating_capture_is_passive_and_covers_every_moe_layer() {
+        let hw = presets::mcm_2x2();
+        let model = presets::tiny_moe();
+        let preset = presets::serve_chat();
+        let cfg = quick_cfg(LoadMode::Burst { n_requests: 4 }, StrategyKind::FseDpPaired);
+        let plain = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg.clone()).run();
+
+        let mut sim = ServerSim::new(&model, &hw, Dataset::C4, &preset, cfg);
+        let sink = Rc::new(RefCell::new(GatingTrace::default()));
+        sim.attach_gating_capture(sink.clone());
+        let captured = sim.run();
+
+        // Bit-neutral: the sink only observes.
+        assert_eq!(captured.end_cycles, plain.end_cycles);
+        assert_eq!(captured.busy_cycles, plain.busy_cycles);
+        assert_eq!(captured.iterations, plain.iterations);
+        let trace = sink.borrow();
+        // One entry per simulated MoE layer with work, in clock order.
+        assert_eq!(trace.layers.len(), plain.iterations * model.n_layers);
+        assert!(trace.total_moe_cycles() > 0);
+        assert!(trace.layers.windows(2).all(|w| {
+            (w[0].iter, w[0].layer) < (w[1].iter, w[1].layer)
+        }));
     }
 
     #[test]

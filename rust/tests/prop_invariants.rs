@@ -58,7 +58,7 @@ fn prop_completeness_and_conservation() {
         let wl = random_workload(&mut rng, 4, 12);
         let (hw, geom) = geom_for(slices);
         let groups = paired_order(&wl);
-        let cfg = FlowConfig { num_slices: slices, rule5: false, record_spans: true };
+        let cfg = FlowConfig { num_slices: slices, rule5: false, record_spans: true, record_decisions: false };
         let r = run_layer(&hw, &geom, &wl, &groups, cfg);
 
         // DDR: exactly one copy of every activated expert.
@@ -107,7 +107,7 @@ fn prop_buffer_safety_under_random_capacities() {
         // Capacity from pathological (~1 slice) to roomy.
         let mult = [1, 2, 3, 8, 32][rng.range(0, 5)];
         hw.weight_buffer_bytes = geom.slice_bytes * mult + 1;
-        let cfg = FlowConfig { num_slices: slices, rule5: rng.bool(0.3), record_spans: false };
+        let cfg = FlowConfig { num_slices: slices, rule5: rng.bool(0.3), record_spans: false, record_decisions: false };
         let r = run_layer(&hw, &geom, &wl, &paired_order(&wl), cfg);
         assert!(r.makespan > 0, "case {case} did not run");
         assert!(
@@ -128,7 +128,7 @@ fn prop_termination_across_mesh_sizes() {
             let hw = presets::mcm_nxn(n);
             let geom = ExpertGeometry::new(&presets::qwen3_a3b(), &hw, 4);
             let wl = random_workload(&mut rng, n * n, 16);
-            let cfg = FlowConfig { num_slices: 4, rule5: false, record_spans: false };
+            let cfg = FlowConfig { num_slices: 4, rule5: false, record_spans: false, record_decisions: false };
             let r = run_layer(&hw, &geom, &wl, &paired_order(&wl), cfg);
             assert!(r.makespan > 0);
         }
@@ -141,7 +141,7 @@ fn prop_group_order_changes_when_not_what() {
     for case in 0..30 {
         let wl = random_workload(&mut rng, 4, 10);
         let (hw, geom) = geom_for(4);
-        let cfg = FlowConfig { num_slices: 4, rule5: false, record_spans: false };
+        let cfg = FlowConfig { num_slices: 4, rule5: false, record_spans: false, record_decisions: false };
         let a = run_layer(&hw, &geom, &wl, &paired_order(&wl), cfg);
         let b = run_layer(&hw, &geom, &wl, &sequential_order(&wl), cfg);
         assert_eq!(a.ddr_bytes, b.ddr_bytes, "case {case}");
@@ -155,8 +155,8 @@ fn prop_rule5_preserves_work_totals() {
     for case in 0..30 {
         let wl = random_workload(&mut rng, 4, 10);
         let (hw, geom) = geom_for(8);
-        let base = FlowConfig { num_slices: 8, rule5: false, record_spans: false };
-        let r5 = FlowConfig { num_slices: 8, rule5: true, record_spans: false };
+        let base = FlowConfig { num_slices: 8, rule5: false, record_spans: false, record_decisions: false };
+        let r5 = FlowConfig { num_slices: 8, rule5: true, record_spans: false, record_decisions: false };
         let a = run_layer(&hw, &geom, &wl, &paired_order(&wl), base);
         let b = run_layer(&hw, &geom, &wl, &paired_order(&wl), r5);
         assert_eq!(a.ddr_bytes, b.ddr_bytes, "case {case}");

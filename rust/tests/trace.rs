@@ -149,7 +149,9 @@ fn exported_chrome_trace_parses_and_spans_nest() {
                 let (_, bts) = begins.remove(b.expect("async end without begin"));
                 assert!(ts >= bts, "async span ends before it starts");
             }
-            "i" | "M" | "C" => {}
+            // "s"/"f" are the decision-log trajectory flow arrows
+            // (d2d_send -> d2d_recv); pairing is pinned in tests/explain.rs.
+            "i" | "M" | "C" | "s" | "f" => {}
             other => panic!("unexpected ph {other}"),
         }
     }

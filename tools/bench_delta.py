@@ -20,9 +20,13 @@ REGRESSION_FRAC = 0.10
 # crying wolf. `trace_disabled_overhead` rides the same floor: it exists to
 # catch the disabled-trace Option branch growing real work, not scheduler
 # noise in an 8-request burst. `blame_fold` and `health_score` are pure
-# arithmetic folds of the same sub-microsecond scale.
+# arithmetic folds of the same sub-microsecond scale, as is
+# `decision_fold` (the per-stream decision-log accumulation);
+# `replay_layer` is a single recorded layer sim whose wall time sits in
+# the same jittery tens-of-microseconds band.
 MICRO_OP_PREFIXES = ("sketch_", "summary_quantile", "trace_disabled_overhead",
-                     "blame_fold", "health_score")
+                     "blame_fold", "health_score", "decision_fold",
+                     "replay_layer")
 MICRO_OP_FRAC = 0.25
 
 
